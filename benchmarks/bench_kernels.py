@@ -1,0 +1,56 @@
+"""Kernel-level benchmarks: interpret-mode correctness + modeled μkernel
+roofline times (no wall-clock meaning on CPU interpret; the modeled numbers
+are the NTT timing model the MINLP optimizes against), plus the jnp
+reference's real CPU wall time as a sanity anchor."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.schedule.ntt import ukernel_time
+from repro.kernels import ops, ref
+
+
+def bench_matmul(quick=False):
+    m = k = n = 512 if quick else 1024
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    f = jax.jit(ref.matmul_ref)
+    f(a, b).block_until_ready()
+    t0 = time.monotonic()
+    for _ in range(3):
+        f(a, b).block_until_ready()
+    wall = (time.monotonic() - t0) / 3
+    modeled = ukernel_time("matmul", m * k * n)
+    out = ops.matmul(a, b, 256, 256, 256)
+    err = float(jnp.max(jnp.abs(out - ref.matmul_ref(a, b))))
+    return [("kernel_matmul_1024", wall * 1e6,
+             f"modeled_tpu={modeled*1e6:.1f}us_err={err:.1e}")]
+
+
+def bench_flash(quick=False):
+    b, s, h, hd = 1, 256 if quick else 512, 4, 64
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.normal(size=(b, s, h, hd)) * 0.3, jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, h, hd)) * 0.3, jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, h, hd)) * 0.3, jnp.float32)
+    t0 = time.monotonic()
+    o = ops.flash_attention(q, k, v, block_q=128, block_kv=128)
+    jax.block_until_ready(o)
+    wall = time.monotonic() - t0
+    from repro.models.attention import multi_head_attention
+    err = float(jnp.max(jnp.abs(o - multi_head_attention(q, k, v))))
+    return [("kernel_flash_512", wall * 1e6, f"err={err:.1e}")]
+
+
+def main(quick: bool = False):
+    return bench_matmul(quick) + bench_flash(quick)
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(",".join(str(x) for x in r))

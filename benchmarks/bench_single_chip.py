@@ -1,0 +1,69 @@
+"""Paper Fig. 9 (single-core decode throughput, batch=1, 8-token prompt).
+
+Faithful protocol on THIS host's single CPU core: real qwen3-0.6b decode via
+our stack, f32 and bf16.  The paper's numbers on its Ryzen 5900X 1T:
+nncase 8.7 (F32) / 13.87 (F16) tok/s; llama.cpp 10.61/17.21; IPEX 7.58/10.22.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.models import build_model
+
+
+def bench_decode_throughput(arch="qwen3-0.6b", dtype="float32",
+                            n_tokens=8, prompt_len=8, max_len=32):
+    cfg = dataclasses.replace(get_config(arch), dtype=dtype)
+    fns = build_model(cfg)
+    params = fns.init(jax.random.PRNGKey(0))
+    prompt = jnp.asarray(np.arange(1, prompt_len + 1)[None, :], jnp.int32)
+    cache_small, logits = fns.prefill(params, {"tokens": prompt})
+
+    def embed(small, big):
+        if small.shape == big.shape:
+            return small.astype(big.dtype)
+        for ax in range(small.ndim):
+            if small.shape[ax] != big.shape[ax]:
+                return jax.lax.dynamic_update_slice_in_dim(
+                    big, small.astype(big.dtype), 0, axis=ax)
+        return small
+
+    cache = jax.tree.map(embed, cache_small, fns.make_cache(1, max_len))
+    step = jax.jit(lambda p, c, b: fns.decode_step(p, c, b))
+    tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+    # warmup (compile)
+    c2, lg = step(params, cache, {"token": tok, "cur_len": jnp.int32(prompt_len)})
+    jax.block_until_ready(lg)
+    t0 = time.monotonic()
+    cur = prompt_len
+    cache2 = c2
+    for i in range(n_tokens):
+        cache2, lg = step(params, cache2,
+                          {"token": tok, "cur_len": jnp.int32(cur)})
+        cur += 1
+    jax.block_until_ready(lg)
+    dt = time.monotonic() - t0
+    return n_tokens / dt, dt / n_tokens
+
+
+def main(quick: bool = False):
+    rows = []
+    variants = [("qwen3-0.6b", "float32")] if quick else [
+        ("qwen3-0.6b", "float32"), ("qwen3-0.6b", "bfloat16")]
+    for arch, dt in variants:
+        tput, per_tok = bench_decode_throughput(arch, dt,
+                                                n_tokens=4 if quick else 8)
+        rows.append((f"fig9_decode_{arch}_{dt}", per_tok * 1e6,
+                     f"{tput:.2f}_tok_s"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,239 @@
+"""§Perf hillclimbing driver: hypothesis -> change -> re-lower -> measure.
+
+Three cells (chosen from the §Roofline baseline table):
+  * qwen3-0.6b x train_4k x pod1      — the paper's own model family (most
+    technique-representative); baseline memory-bound w/ 25.8 GB temp > HBM.
+  * llama4-maverick x decode_32k x pod1 — most collective-bound cell (6.3s
+    of expert-weight gathers).
+  * qwen2-vl-72b x train_4k x pod1    — worst roofline fraction among the
+    compute-heavy cells (4.2%), 453 GB/dev temp.
+
+Each experiment is one knob flip (see repro/perf.py) with the napkin-math
+prediction recorded next to the measurement.  Results land in
+results/dryrun/<cell>__<tag>.json and are summarized to stdout +
+results/hillclimb.md.
+
+    PYTHONPATH=src python -m benchmarks.hillclimb [--only CELL]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+RESULTS = ROOT / "results" / "dryrun"
+
+# (cell, tag, env, hypothesis)
+EXPERIMENTS = [
+    # ---- qwen3-0.6b train_4k --------------------------------------------
+    dict(arch="qwen3-0.6b", shape="train_4k", mesh="pod1", tag="iter1_rematN",
+         env={"REPRO_REMAT_POLICY": "nothing"},
+         hypothesis="remat=nothing stops saving per-layer dot outputs "
+                    "(~768 f/token x 28L): HBM traffic and temp memory drop "
+                    "~2x; compute rises ~30% (fwd recompute). Predict "
+                    "mem_s 7.2->~4.5, temp 25.8GB -> <16GB."),
+    dict(arch="qwen3-0.6b", shape="train_4k", mesh="pod1", tag="iter2_dp",
+         env={"REPRO_TRAIN_SHARDING": "dp"},
+         hypothesis="0.6B params fit replicated (1.2GB bf16): pure DP over "
+                    "256 chips needs only a 1.2GB grad all-reduce "
+                    "(2*(255/256)*1.2e9/50e9 = 48ms) vs 2.9s of TP/FSDP "
+                    "traffic. Predict coll_s 2.9 -> ~0.1."),
+    dict(arch="qwen3-0.6b", shape="train_4k", mesh="pod1",
+         tag="iter3_dp_rematN",
+         env={"REPRO_TRAIN_SHARDING": "dp", "REPRO_REMAT_POLICY": "nothing"},
+         hypothesis="combine iter1+iter2: memory AND collective drop "
+                    "together; step time should approach the compute term."),
+    # ---- llama4 decode_32k ----------------------------------------------
+    dict(arch="llama4-maverick-400b-a17b", shape="decode_32k", mesh="pod1",
+         tag="iter1_dispatch",
+         env={"REPRO_MOE_DECODE": "dispatch"},
+         hypothesis="gather decode moves each token's expert weights "
+                    "(128 tok x 250MB); dispatch moves token activations to "
+                    "expert shards instead (128 x 5120 x 2B = 1.3MB/layer "
+                    "all-to-all). Predict coll_s 6.3 -> <2."),
+    # ---- qwen2-vl-72b train_4k ------------------------------------------
+    dict(arch="qwen2-vl-72b", shape="train_4k", mesh="pod1",
+         tag="iter1_rematN",
+         env={"REPRO_REMAT_POLICY": "nothing"},
+         hypothesis="as qwen3/iter1 but at d=8192: saved dots are ~3.7x the "
+                    "residual stream. Predict mem_s 231 -> ~120, temp "
+                    "453GB -> ~90GB (layer boundaries still full-seq)."),
+    dict(arch="qwen2-vl-72b", shape="train_4k", mesh="pod1",
+         tag="iter2_rematN_sp",
+         env={"REPRO_REMAT_POLICY": "nothing", "REPRO_SEQ_PARALLEL": "1"},
+         hypothesis="sequence parallelism shards the saved layer boundaries "
+                    "over the model axis (seq/16): temp ~90GB -> ~6-10GB "
+                    "(fits HBM); collective unchanged or slightly up "
+                    "(reduce-scatter/all-gather pairs replace all-reduce)."),
+]
+
+
+ROUND2 = [
+    dict(arch="qwen3-0.6b", shape="train_4k", mesh="pod1",
+         tag="iter4_mask_dp_rematN",
+         env={"REPRO_TRAIN_SHARDING": "dp", "REPRO_REMAT_POLICY": "nothing"},
+         hypothesis="CODE CHANGE (now default): additive (Sq,Skv) f32 causal "
+                    "masks instead of boolean where-selects — the old path "
+                    "materialized (chunks,B,H,q,kv) pred tensors that the "
+                    "loop hoisted into carries. Predict mem_s 4.0 -> ~2."),
+    dict(arch="qwen2-vl-72b", shape="train_4k", mesh="pod1",
+         tag="iter3_mask_rematN_sp",
+         env={"REPRO_REMAT_POLICY": "nothing", "REPRO_SEQ_PARALLEL": "1"},
+         hypothesis="additive masks at d=8192/80L: predict mem_s 57 -> ~35, "
+                    "temp 36GB -> ~25GB; collective unchanged."),
+    dict(arch="qwen2-vl-72b", shape="train_4k", mesh="pod1",
+         tag="iter4_mask_rematN_sp_bf16norm",
+         env={"REPRO_REMAT_POLICY": "nothing", "REPRO_SEQ_PARALLEL": "1",
+              "REPRO_NORM_F32": "0"},
+         hypothesis="bf16 rms_norm stops the CPU-backend f32 convert-fold "
+                    "that upgrades the TP collectives to f32: predict "
+                    "coll_s ~63 -> ~32 (2 B vs 4 B payloads)."),
+    dict(arch="llama4-maverick-400b-a17b", shape="decode_32k", mesh="pod1",
+         tag="iter2_mask_dispatch",
+         env={"REPRO_MOE_DECODE": "dispatch"},
+         hypothesis="additive masks also shrink the decode attention "
+                    "select; predict small mem win on top of dispatch."),
+    dict(arch="llama4-maverick-400b-a17b", shape="train_4k", mesh="pod1",
+         tag="bonus_int8_rematN_sp",
+         env={"REPRO_OPT_STATE": "int8", "REPRO_REMAT_POLICY": "nothing",
+              "REPRO_SEQ_PARALLEL": "1"},
+         hypothesis="BONUS CELL (worst-memory cell in the table): int8 "
+                    "AdamW moments cut optimizer HBM 8B->2.03B/param: args "
+                    "16.24GB -> ~7.5GB (fits HBM); remat+SP cut temp."),
+]
+EXPERIMENTS = EXPERIMENTS + ROUND2
+
+
+ROUND3 = [
+    dict(arch="qwen2-vl-72b", shape="train_4k", mesh="pod1",
+         tag="iter5_weightAG",
+         env={"REPRO_REMAT_POLICY": "nothing", "REPRO_SEQ_PARALLEL": "1",
+              "REPRO_WEIGHT_AG": "1"},
+         hypothesis="HLO forensics showed 965GB/step of ACTIVATION "
+                    "all-reduces: GSPMD partial-sums the FSDP-sharded "
+                    "contraction instead of all-gathering the ~110MB/layer "
+                    "weight shards. Constraining weights TP-only at use "
+                    "sites flips it: predict coll 62.9 -> ~20s, step -> "
+                    "~mem term (~45s)."),
+    dict(arch="qwen3-0.6b", shape="train_4k", mesh="pod1",
+         tag="iter5_dp_rematN_chunk4k",
+         env={"REPRO_TRAIN_SHARDING": "dp", "REPRO_REMAT_POLICY": "nothing",
+              "REPRO_ATTN_CHUNK": "4096"},
+         hypothesis="in pure DP the per-device batch is 1 seq: the 4-chunk "
+                    "q-scan only adds loop overhead and mask rebuilds; one "
+                    "full-seq attention block (4096^2 x16H f32 scores = "
+                    "1GB transient) is cheaper. Predict mem 3.5 -> ~3."),
+]
+EXPERIMENTS = EXPERIMENTS + ROUND3
+
+
+ROUND4 = [
+    dict(arch="qwen2-vl-72b", shape="train_4k", mesh="pod1",
+         tag="iter6_sp_mlpseq",
+         env={"REPRO_REMAT_POLICY": "nothing", "REPRO_SEQ_PARALLEL": "1"},
+         hypothesis="iter5 REFUTED the weight-AG theory and exposed the real "
+                    "bug: apply_mlp's own 'ff' constraint FORCED a seq->ff "
+                    "reshard per layer under SP (2GB AG + AR per dot). Fix "
+                    "(now default): the MLP stays sequence-sharded "
+                    "end-to-end. Predict coll 62.9 -> ~25, step -> ~40."),
+    dict(arch="llama4-maverick-400b-a17b", shape="train_4k", mesh="pod1",
+         tag="bonus2_int8_rematN_sp",
+         env={"REPRO_OPT_STATE": "int8", "REPRO_REMAT_POLICY": "nothing",
+              "REPRO_SEQ_PARALLEL": "1"},
+         hypothesis="retry of the bonus cell after fixing the Quantized "
+                    "moment sharding guard: args 16.24GB -> ~7.5GB."),
+]
+EXPERIMENTS = EXPERIMENTS + ROUND4
+
+
+ROUND5 = [
+    dict(arch="qwen2-vl-72b", shape="train_4k", mesh="pod1",
+         tag="iter7_sp_mlpseq_weightAG",
+         env={"REPRO_REMAT_POLICY": "nothing", "REPRO_SEQ_PARALLEL": "1",
+              "REPRO_WEIGHT_AG": "1"},
+         hypothesis="post-iter6 probe: MLP dots fixed (4GB ARs -> 0.9GB "
+                    "AGs), but the qkv/wo ATTENTION dots still partial-sum "
+                    "over the FSDP d (224+165+160GB of f32 ARs). Re-apply "
+                    "the weight TP-only constraint now that the MLP no "
+                    "longer masks it: predict coll 59.3 -> ~35."),
+]
+EXPERIMENTS = EXPERIMENTS + ROUND5
+
+BASELINES = [
+    ("qwen3-0.6b", "train_4k", "pod1"),
+    ("llama4-maverick-400b-a17b", "decode_32k", "pod1"),
+    ("qwen2-vl-72b", "train_4k", "pod1"),
+    # bonus (beyond the required three): the worst-memory cell in the table
+    ("llama4-maverick-400b-a17b", "train_4k", "pod1"),
+]
+
+
+def run_cell(arch, shape, mesh, tag="", env=None, timeout=3000):
+    suffix = f"__{tag}" if tag else ""
+    out = RESULTS / f"{arch}__{shape}__{mesh}{suffix}.json"
+    if out.exists():
+        return json.load(open(out))
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--mesh", mesh]
+    if tag:
+        cmd += ["--tag", tag]
+    e = dict(os.environ)
+    e["PYTHONPATH"] = "src"
+    e.update(env or {})
+    r = subprocess.run(cmd, env=e, cwd=ROOT, capture_output=True, text=True,
+                       timeout=timeout)
+    if r.returncode != 0:
+        out.write_text(json.dumps({"arch": arch, "shape": shape,
+                                   "mesh": mesh, "tag": tag,
+                                   "status": "error",
+                                   "error": (r.stderr or "")[-3000:]}))
+    return json.load(open(out)) if out.exists() else {"status": "missing"}
+
+
+def fmt(d):
+    if d.get("status") != "ok":
+        return f"status={d.get('status')}"
+    r = d["roofline"]
+    return (f"comp {r['compute_s']:7.3f}  mem {r['memory_s']:8.3f}  "
+            f"coll {r['collective_s']:7.3f}  step {r['step_time_s']:8.3f}  "
+            f"temp {d.get('temp_size_in_bytes', 0)/2**30:7.2f}GB  "
+            f"args {d.get('argument_size_in_bytes', 0)/2**30:6.2f}GB")
+
+
+def main(only=None):
+    lines = []
+
+    def emit(s):
+        print(s, flush=True)
+        lines.append(s)
+
+    for arch, shape, mesh in BASELINES:
+        if only and only not in arch:
+            continue
+        base = run_cell(arch, shape, mesh)
+        emit(f"\n=== {arch} x {shape} x {mesh} ===")
+        emit(f"  BASELINE (paper-faithful): {fmt(base)}")
+        for ex in EXPERIMENTS:
+            if (ex["arch"], ex["shape"], ex["mesh"]) != (arch, shape, mesh):
+                continue
+            emit(f"  -- {ex['tag']}")
+            emit(f"     hypothesis: {ex['hypothesis']}")
+            res = run_cell(arch, shape, mesh, ex["tag"], ex["env"])
+            emit(f"     measured:   {fmt(res)}")
+            if res.get("status") == "ok" and base.get("status") == "ok":
+                b, n = base["roofline"], res["roofline"]
+                emit(f"     delta:      step {b['step_time_s']:.3f} -> "
+                     f"{n['step_time_s']:.3f} "
+                     f"({b['step_time_s']/max(n['step_time_s'],1e-9):.2f}x)")
+    (ROOT / "results" / "hillclimb.md").write_text("\n".join(lines))
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    main(args.only)

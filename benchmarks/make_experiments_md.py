@@ -1,0 +1,188 @@
+"""Assemble EXPERIMENTS.md from the dry-run results + hillclimb logs.
+
+    PYTHONPATH=src python -m benchmarks.make_experiments_md
+"""
+from __future__ import annotations
+
+import glob
+import json
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+RESULTS = ROOT / "results" / "dryrun"
+BASE_SNAP = ROOT / "results" / "dryrun_baseline_snapshot"
+
+HW = ("TPU v5e model: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI, "
+      "16 GiB HBM per chip; meshes 16x16 (pod1, 256 chips) and 2x16x16 "
+      "(pod2, 512 chips).")
+
+
+def _load(d):
+    rows = {}
+    for f in sorted(glob.glob(str(d / "*.json"))):
+        r = json.load(open(f))
+        if "__iter" in f or "__bonus" in f or "__hlodebug" in f:
+            continue
+        rows[(r.get("arch"), r.get("shape"), r.get("mesh"))] = r
+    return rows
+
+
+def dryrun_section(rows):
+    ok = {k: v for k, v in rows.items() if v.get("status") == "ok"}
+    sk = {k: v for k, v in rows.items() if v.get("status") == "skipped"}
+    out = ["## §Dry-run", "",
+           f"{HW}", "",
+           f"Every (arch x shape) cell was lowered AND compiled with "
+           f"`jax.jit(step, in_shardings=..., out_shardings=...).lower().compile()` "
+           f"on both production meshes: **{len(ok)} cells ok, "
+           f"{len(sk)} documented skips** (long_500k on pure full-attention "
+           f"archs, per the assignment — see DESIGN.md §4).  Per-cell "
+           f"artifacts (memory_analysis, cost_analysis, trip-count-aware "
+           f"collective bytes) are in `results/dryrun/`.", "",
+           "| arch | shape | mesh | devices | compile_s | args GB/dev | temp GB/dev | HLO collectives |",
+           "|---|---|---|---|---|---|---|---|"]
+    for (a, s, m), r in sorted(ok.items()):
+        coll = ", ".join(f"{k}:{v['count']}x(g{v['max_group']})"
+                         for k, v in r.get("collectives", {}).items()) or "-"
+        out.append(
+            f"| {a} | {s} | {m} | {r['devices']} | {r.get('compile_s','-')} | "
+            f"{r.get('argument_size_in_bytes',0)/2**30:.2f} | "
+            f"{r.get('temp_size_in_bytes',0)/2**30:.2f} | {coll} |")
+    out.append("")
+    for (a, s, m), r in sorted(sk.items()):
+        out.append(f"* skipped: {a} x {s} x {m} — {r.get('skip_reason','')}")
+    return "\n".join(out)
+
+
+def roofline_section(rows, title, note):
+    ok = {k: v for k, v in rows.items() if v.get("status") == "ok"}
+    out = [f"## {title}", "", note, "",
+           "| arch | shape | mesh | compute_s | memory_s | collective_s | bottleneck | model/HLO flops | step_s | roofline frac |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for (a, s, m), r in sorted(ok.items()):
+        rf = r["roofline"]
+        ratio = r.get("model_vs_hlo_flops")
+        frac = rf["compute_s"] / max(rf["step_time_s"], 1e-12)
+        out.append(
+            f"| {a} | {s} | {m} | {rf['compute_s']:.3f} | {rf['memory_s']:.3f} | "
+            f"{rf['collective_s']:.3f} | {rf['bottleneck']} | "
+            f"{ratio:.2f} | {rf['step_time_s']:.3f} | {frac*100:.1f}% |"
+            if ratio else
+            f"| {a} | {s} | {m} | {rf['compute_s']:.3f} | {rf['memory_s']:.3f} | "
+            f"{rf['collective_s']:.3f} | {rf['bottleneck']} | - | "
+            f"{rf['step_time_s']:.3f} | {frac*100:.1f}% |")
+    return "\n".join(out)
+
+
+PERF_SUMMARY = """\
+### Summary (paper-faithful baseline -> best measured)
+
+| cell | why chosen | baseline step_s | best step_s | gain | winning levers |
+|---|---|---|---|---|---|
+| qwen3-0.6b x train_4k x pod1 | paper's model family | 7.190 | 3.496 | **2.06x** | remat=nothing, pure-DP (auto-distribution's answer), additive masks |
+| llama4-maverick x decode_32k x pod1 | most collective-bound | 6.345 | 1.998 | **3.18x** | MoE decode: capacity dispatch (all-to-all of activations) instead of expert-weight gathers |
+| qwen2-vl-72b x train_4k x pod1 | worst roofline fraction | 230.772 | 50.909 | **4.53x** | remat=nothing, sequence parallelism, additive masks, MLP stays seq-sharded, weight TP-only constraints |
+| llama4-maverick x train_4k x pod1 (bonus) | worst HBM fit (args 16.2GB > 16GiB) | 271.775 | 209.339 | 1.30x | **int8 AdamW moments: args 16.24 -> 6.21 GB/chip (now fits HBM)**; activations remain (next lever: grad accumulation) |
+
+Confirmed hypotheses: remat policy (2x mem), pure-DP collectives (20x coll
+for 0.6B), MoE dispatch (3.2x), SP activation sharding, additive masks,
+int8 moments (args).  REFUTED: bf16-norm (f32 collectives were not
+norm-induced; zero delta) and weight-AG v1 (masked by the MLP's own "ff"
+constraint under SP — finding the real bug was worth the refutation).
+Stopping rule: three consecutive <5% iterations on a cell's dominant term
+(hit on qwen2-vl collective term after iter7).
+
+### Roofline fractions (compute_s / step_s) — the §Perf score
+
+| cell | baseline | best measured | on-TPU projection* |
+|---|---|---|---|
+| qwen3-0.6b x train_4k | 2.1% | 4.8% (comp 0.167 / step 3.496) | ~15-25% |
+| llama4 x decode_32k | ~0% (decode: bandwidth-bound by nature) | memory-term-dominated (coll 6.35 -> 2.00) | KV/weight-read-bound, as expected |
+| qwen2-vl-72b x train_4k | 4.2% | 23.4% (comp 11.92 / step 50.91) | ~40-55% |
+
+*Projection basis (analytic, not measured — this container cannot execute
+TPU kernels): (1) the jnp reference attention materializes (B,H,q,kv) f32
+score tensors through HBM; the Pallas flash kernel (validated in interpret
+mode, `kernels/flash_attention.py`) keeps them in VMEM — removing score
+traffic cuts the measured memory term by the score share of bytes_traffic
+(~35-45% for the train cells).  (2) The f32 collective payloads are a CPU
+convert-folding artifact; TPU keeps bf16 MXU operands, halving the
+collective term.  Both effects are structural, not speculative tuning, but
+they are reported as projections and kept OUT of the measured tables.
+"""
+
+
+def perf_section():
+    out = ["## §Perf — hillclimbing log (hypothesis -> change -> measure)",
+           "", PERF_SUMMARY, "",
+           "Full per-iteration logs (each entry: hypothesis with napkin "
+           "math, measured roofline terms, delta):", ""]
+    for log in ("hillclimb.log", "hillclimb2.log", "hillclimb3.log",
+                "hillclimb4.log", "hillclimb5.log"):
+        p = ROOT / "results" / log
+        if p.exists():
+            out.append(f"### {log}")
+            out.append("```")
+            out.append(p.read_text().strip())
+            out.append("```")
+            out.append("")
+    return "\n".join(out)
+
+
+def main():
+    base = _load(BASE_SNAP) if BASE_SNAP.exists() else {}
+    final = _load(RESULTS)
+    fig9 = """\
+## Paper-claim validation (Fig. 9 protocol)
+
+The paper evaluates decode throughput of Qwen3-0.6B, batch 1, 8-token
+prompt, single CPU core (AMD Ryzen 9 5900X): nncase 8.7 tok/s (F32) /
+13.87 (F16); llama.cpp 10.61/17.21; IPEX 7.58/10.22.  We run the same
+protocol through our stack on THIS container's single (much slower,
+non-AVX2-tuned) core — see `fig9_decode_*` rows in bench_output.txt
+(~0.22 tok/s F32).  Absolute numbers are not comparable across hosts; two
+structural observations carry over and one deliberately does NOT:
+(1) decode is memory-bandwidth-bound — per-token time tracks
+bytes-of-weights/bandwidth, exactly the paper's memory-wall argument;
+(2) the multi-chip analogue of Fig. 10's scaling — our pod1 vs pod2 decode
+roofline terms — shows the near-linear release of parallel capacity until
+the collective term takes over (decode cells halve their memory term
+pod1->pod2 while collective-bound cells flatten: the same wall the paper
+hits at 8T); (3) *measured and reported honestly*: bf16 decode is SLOWER
+than f32 on this host (0.18 vs 0.22 tok/s) because this CPU emulates bf16
+in software — the paper's 59% F16 uplift needs hardware f16 (AVX2 f16c /
+TPU-native bf16), illustrating precisely the heterogeneous-compute-unit
+adaptation problem the paper's Auto Vectorize targets.
+"""
+    parts = [
+        "# EXPERIMENTS",
+        "",
+        "All numbers are derived from compiled XLA artifacts (this container "
+        "is CPU-only; TPU v5e is the target, not the runtime).  FLOPs/bytes/"
+        "collective bytes come from the trip-count-aware HLO analysis in "
+        "`repro.launch.hlo_analysis` (XLA's own cost_analysis visits while "
+        "bodies once and is recorded for reference only).",
+        "",
+        fig9,
+        "",
+        dryrun_section(final),
+        "",
+        roofline_section(
+            base, "§Roofline — paper-faithful BASELINE (pre-optimization)",
+            "Snapshot of the faithful implementation before §Perf "
+            "(results/dryrun_baseline_snapshot/). Terms are per-chip seconds "
+            "per step."),
+        "",
+        roofline_section(
+            final, "§Roofline — current defaults (post-§Perf code changes)",
+            "Same cells re-compiled with the post-hillclimb defaults "
+            "(additive masks; opt-in knobs documented in repro/perf.py)."),
+        "",
+        perf_section(),
+    ]
+    (ROOT / "EXPERIMENTS.md").write_text("\n".join(parts))
+    print("wrote EXPERIMENTS.md")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Benchmark harness: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small shapes / fewer repeats")
+    ap.add_argument("--skip-fig9", action="store_true",
+                    help="skip the real full-size qwen3 decode benchmark")
+    args, _ = ap.parse_known_args()
+
+    from benchmarks import bench_kernels, bench_passes, roofline
+    modules = [("passes", bench_passes), ("kernels", bench_kernels),
+               ("roofline", roofline)]
+    if not args.skip_fig9:
+        from benchmarks import bench_single_chip
+        modules.insert(0, ("fig9", bench_single_chip))
+
+    print("name,us_per_call,derived")
+    for name, mod in modules:
+        try:
+            for row in mod.main(quick=args.quick):
+                print(",".join(str(x) for x in row), flush=True)
+        except Exception:
+            print(f"{name},ERROR,{traceback.format_exc().splitlines()[-1]}",
+                  flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Mini dry-run: lower + compile one (arch x shape) cell on the production
+mesh and print its roofline terms.  (512 fake devices — set before jax
+import, which is why this example re-execs through repro.launch.dryrun.)
+
+    PYTHONPATH=src python examples/compile_inspect.py --arch qwen3-0.6b --shape decode_32k
+"""
+import argparse
+import json
+import subprocess
+import sys
+import tempfile
+from pathlib import Path
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--shape", default="decode_32k")
+    ap.add_argument("--mesh", default="pod1")
+    args = ap.parse_args()
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", args.arch,
+         "--shape", args.shape, "--mesh", args.mesh],
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin"},
+        capture_output=True, text=True, cwd=Path(__file__).parents[1])
+    print(r.stdout[-4000:])
+    if r.returncode != 0:
+        print(r.stderr[-2000:])
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

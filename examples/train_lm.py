@@ -1,0 +1,39 @@
+"""End-to-end training with checkpoint/restart: trains a small LM on the
+synthetic corpus, injects a failure mid-run, and recovers from the latest
+checkpoint.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 120]
+"""
+import argparse
+import tempfile
+
+from repro.configs.base import get_config, reduced_config
+from repro.train.optimizer import AdamWConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--workdir", default=None)
+    args = ap.parse_args()
+
+    cfg = reduced_config(get_config(args.arch))
+    workdir = args.workdir or tempfile.mkdtemp(prefix="repro_train_")
+    tcfg = TrainerConfig(seq_len=128, global_batch=4, steps=args.steps,
+                         checkpoint_every=20, log_every=5, workdir=workdir)
+    opt = AdamWConfig(lr=1e-3, warmup_steps=10, total_steps=args.steps)
+    trainer = Trainer(cfg, tcfg, opt)
+    # inject one failure at 2/3 of the run: the loop restores from the last
+    # checkpoint and replays (batches are (seed, step)-keyed, so training is
+    # bit-identical to an uninterrupted run)
+    result = trainer.train(fail_at=int(args.steps * 2 / 3))
+    first, last = result["log"][0]["loss"], result["log"][-1]["loss"]
+    print(f"\nloss {first:.4f} -> {last:.4f} "
+          f"({'DECREASED' if last < first else 'no improvement'}); "
+          f"checkpoints in {workdir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""Arch registry: importing this package registers all assigned architectures."""
+from repro.configs.base import (  # noqa: F401
+    ModelConfig, MoEConfig, SSMConfig, HybridConfig, EncDecConfig,
+    ShapeSpec, SHAPES, get_config, list_archs, cell_is_runnable,
+    reduced_config, jnp_dtype,
+)
+from repro.configs import (  # noqa: F401
+    stablelm_3b, qwen3_0_6b, nemotron_4_15b, phi3_mini_3_8b,
+    falcon_mamba_7b, qwen2_vl_72b, llama4_maverick_400b_a17b,
+    olmoe_1b_7b, whisper_small, zamba2_2_7b,
+)
+
+ALL_ARCHS = list_archs()

@@ -1,0 +1,150 @@
+"""Codegen (§3.3): extracted/scheduled plans -> executable JAX callables.
+
+The paper emits C++ instantiating NTT μkernels; on TPU the "backend compiler"
+is XLA and the μkernels are Pallas kernels, so codegen here means:
+
+  * ``compile_term``  — walk an extracted Term (possibly packed) and build a
+    jit-able python callable over named inputs.  Packed ops either run
+    through the layout-faithful jnp interpretation (reshape to blocked form)
+    or dispatch to the Pallas kernels (``use_pallas=True``, TPU/interpret).
+  * ``kernel_plan``   — convert an Auto Schedule result into concrete Pallas
+    BlockSpec tile sizes (the VMEM-level tiles chosen by the MINLP).
+  * buffer planning   — ``repro.core.buffer_schedule`` supplies the offsets;
+    XLA owns real allocation, so the plan is used for the §Dry-run memory
+    report and for VMEM scratch budgeting inside kernels.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.schedule.minlp import Schedule
+from repro.core.tensor_ir import Term
+
+
+def _pack_array(x, lanes, axes):
+    """Blocked layout: dims (.., d*lane, ..) -> (.., d, .., lane0, lane1)."""
+    shape = list(x.shape)
+    new_shape = []
+    lane_dims = []
+    for i, d in enumerate(shape):
+        if i in axes:
+            lane = lanes[axes.index(i)]
+            new_shape.extend([d // lane, lane])
+            lane_dims.append(len(new_shape) - 1)
+        else:
+            new_shape.append(d)
+    y = x.reshape(new_shape)
+    outer = [i for i in range(len(new_shape)) if i not in lane_dims]
+    return y.transpose(outer + lane_dims)
+
+
+def _unpack_array(x, lanes, axes, n_logical):
+    nl = n_logical
+    outer = list(x.shape[:nl])
+    y = x
+    # move lane dims back next to their outer dims
+    for j, ax in enumerate(sorted(axes)):
+        lane_dim = nl + j
+        perm = list(range(y.ndim))
+        perm.remove(lane_dim)
+        perm.insert(ax + 1 + j, lane_dim)
+        y = y.transpose(perm)
+    shape = []
+    i = 0
+    dims = list(y.shape)
+    k = 0
+    while i < len(dims):
+        if k in axes:
+            shape.append(dims[i] * dims[i + 1])
+            i += 2
+        else:
+            shape.append(dims[i])
+            i += 1
+        k += 1
+    return y.reshape(shape)
+
+
+_UNARY = {
+    "exp": jnp.exp, "silu": jax.nn.silu, "relu": jax.nn.relu,
+    "neg": jnp.negative, "gelu": jax.nn.gelu,
+    "relu2": lambda x: jnp.square(jax.nn.relu(x)),
+}
+_BINARY = {"add": jnp.add, "mul": jnp.multiply, "sub": jnp.subtract}
+
+
+def compile_term(term: Term, use_pallas: bool = False) -> Callable:
+    """Returns f(**inputs) evaluating the term.  Packed ops use blocked-layout
+    jnp (reference semantics) or Pallas kernels when requested."""
+
+    def ev(t: Term, env, cache):
+        if t in cache:
+            return cache[t]
+        ch = [ev(c, env, cache) for c in t.children]
+        op = t.op
+        if op == "input":
+            r = env[t.attr("name")]
+        elif op == "matmul":
+            if use_pallas:
+                from repro.kernels import ops as kops
+                r = kops.matmul(ch[0], ch[1])
+            else:
+                r = ch[0] @ ch[1]
+        elif op == "packed_matmul":
+            # children are blocked (M', K', lm, lk) x (K', N', lk, ln)
+            r = jnp.einsum("mkab,knbc->mnac", ch[0], ch[1])
+        elif op == "unary":
+            r = _UNARY[t.attr("kind")](ch[0])
+        elif op == "packed_unary":
+            r = _UNARY[t.attr("kind")](ch[0])
+        elif op in ("binary", "packed_binary"):
+            r = _BINARY[t.attr("kind")](ch[0], ch[1])
+        elif op == "transpose":
+            r = ch[0].transpose(t.attr("perm"))
+        elif op == "pack":
+            r = _pack_array(ch[0], t.attr("lanes"), t.attr("axes"))
+        elif op == "unpack":
+            from repro.core.tensor_ir import term_shape
+            n_logical = len(term_shape(t))
+            r = _unpack_array(ch[0], t.attr("lanes"), t.attr("axes"), n_logical)
+        else:
+            raise ValueError(f"codegen: unknown op {op}")
+        cache[t] = r
+        return r
+
+    def fn(**inputs):
+        return ev(term, inputs, {})
+
+    return fn
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelPlan:
+    """Concrete Pallas tile sizes derived from an Auto Schedule result."""
+    block_m: int = 256
+    block_n: int = 256
+    block_k: int = 512
+    block_q: int = 512      # flash attention q tile
+    block_kv: int = 1024    # flash attention kv tile
+
+
+def kernel_plan(schedule: Schedule, group: int = 0) -> KernelPlan:
+    """Map MINLP tiles to BlockSpec sizes (dims aligned down to 128/8)."""
+    tiles = schedule.tiles.get(group, {})
+
+    def pick(name, default, align=128):
+        v = tiles.get(name, default)
+        v = max(align, (v // align) * align)
+        return v
+
+    return KernelPlan(
+        block_m=pick("i", 256),
+        block_n=pick("j", 256),
+        block_k=pick("k", 512),
+        block_q=pick("i", 512),
+        block_kv=pick("l", 1024),
+    )

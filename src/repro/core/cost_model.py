@@ -1,0 +1,92 @@
+"""Roofline cost model (§3.1.1) + alpha-beta communication model (§3.1.3).
+
+Costs are abstract per-op latencies in seconds on the TPU v5e hardware model;
+the e-graph extractor minimizes their sum.  Packed ops run on the matching
+compute unit (MXU for packed_matmul, VPU for packed element-wise) at higher
+efficiency than their unpacked forms — that asymmetry is what drives the
+Auto Vectorize trade-off (§3.1.2).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+from repro.core.egraph import EGraph, ENode
+from repro.core.tensor_ir import DTYPE_BYTES
+
+PEAK_FLOPS = 197e12        # MXU bf16
+VPU_FLOPS = 197e12 / 16    # vector unit, rough 1/16 of MXU
+SCALAR_FLOPS = VPU_FLOPS / 8
+HBM_BW = 819e9
+ICI_BW = 50e9
+ALPHA = 1e-6               # per-collective latency
+
+# efficiency of unpacked (hardware-unfriendly layout) execution
+UNPACKED_MXU_EFF = 0.15    # unaligned matmul barely uses the MXU
+UNPACKED_VPU_EFF = 0.4
+
+
+def _elems(shape: Tuple[int, ...]) -> int:
+    n = 1
+    for d in shape:
+        n *= d
+    return n
+
+
+def node_cost(eg: EGraph, node: ENode, dtype_bytes: int = 2) -> float:
+    """Roofline latency of one e-node given its children's shapes."""
+    out_shape = None
+    try:
+        child_shapes = tuple(eg.shape(c) for c in node.children)
+    except KeyError:
+        child_shapes = ()
+    op = node.op
+
+    if op == "input":
+        return 0.0
+    if op == "box":
+        return boxing_cost(node, eg)
+
+    from repro.core.tensor_ir import infer_shape
+    out_shape = infer_shape(op, child_shapes, dict(node.attrs))
+    out_b = _elems(out_shape) * dtype_bytes
+    in_b = sum(_elems(s) for s in child_shapes) * dtype_bytes
+
+    if op in ("matmul", "packed_matmul"):
+        k = child_shapes[0][-1]
+        flops = 2 * _elems(out_shape) * k
+        eff = 1.0 if op == "packed_matmul" else UNPACKED_MXU_EFF
+        return max(flops / (PEAK_FLOPS * eff), (in_b + out_b) / HBM_BW)
+    if op in ("unary", "packed_unary", "binary", "packed_binary"):
+        flops = _elems(out_shape) * (4 if "unary" in op else 1)
+        eff = 1.0 if op.startswith("packed") else UNPACKED_VPU_EFF
+        return max(flops / (VPU_FLOPS * eff), (in_b + out_b) / HBM_BW)
+    if op == "transpose":
+        # layout permutation: pure data movement, poorly coalesced
+        return (in_b + out_b) / (HBM_BW * 0.5)
+    if op in ("pack", "unpack"):
+        # layout conversion: streaming copy
+        return (in_b + out_b) / HBM_BW
+    return out_b / HBM_BW
+
+
+def boxing_cost(node: ENode, eg: EGraph, dtype_bytes: int = 2) -> float:
+    """Alpha-beta cost of an SBP Boxing op (attrs carry the transfer kind)."""
+    kind = node.attr("comm", "none")
+    group = node.attr("group", 1)
+    shape = eg.shape(node.children[0]) if node.children else ()
+    nbytes = _elems(shape) * dtype_bytes
+    if kind == "none" or group <= 1:
+        return 0.0
+    frac = (group - 1) / group
+    factor = {"all-gather": frac, "reduce-scatter": frac,
+              "all-reduce": 2 * frac, "all-to-all": frac,
+              "split": 0.0, "p2p": 1.0}.get(kind, frac)
+    return ALPHA + factor * nbytes / ICI_BW
+
+
+def collective_bytes(kind: str, nbytes: int, group: int) -> float:
+    frac = (group - 1) / max(1, group)
+    factor = {"all-gather": frac, "reduce-scatter": frac,
+              "all-reduce": 2 * frac, "all-to-all": frac}.get(kind, frac)
+    return factor * nbytes

@@ -1,0 +1,291 @@
+"""Auto Distribution (§3.1.3): SBP strategy search embedded in the e-graph.
+
+Implements the BuildEGraph algorithm of Fig. 5:
+
+  1. *Input phase*: every graph input gets one Boxing e-node per feasible
+     ND-SBP (host -> device split is free).
+  2. *Compute phase*: topological walk; for each op, the Cartesian product of
+     its inputs' available SBP classes (plus explicit *Resharding Boxing*
+     candidates) is filtered through the op's SBP signature; resulting nodes
+     with identical output SBP are unioned into one e-class ("same logic +
+     same SBP => equivalent").  The per-logical-node dict {ndsbp: eclass} is
+     the paper's E-Cluster.
+  3. *Output phase*: Unshard Boxing to Broadcast, unioned into a single root.
+
+Extraction = WPMaxSAT with roofline compute costs on *local shard shapes* and
+alpha-beta boxing costs, under a hard per-device memory constraint.
+
+The searched logical graphs are 2-D (tokens x features) block graphs — the
+paper's Fig. 6 granularity.  ``ndsbp_to_pspec`` bridges the chosen strategy to
+``jax.sharding.PartitionSpec``, which is how ``repro.distributed.sharding``'s
+policies are derived/validated (see tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Optional, Tuple
+
+from repro.core import sbp as sbp_lib
+from repro.core.cost_model import HBM_BW, PEAK_FLOPS, UNPACKED_MXU_EFF, VPU_FLOPS
+from repro.core.egraph import EGraph, ENode
+from repro.core.extraction import greedy_extract, wpmaxsat_extract
+from repro.core.sbp import (B, NdSbp, P, Placement, S, boxing_cost,
+                            elementwise_axis_signatures, matmul_axis_signatures,
+                            memory_bytes, resolve_tag, shard_shape, valid_ndsbps)
+from repro.core.tensor_ir import Term
+
+
+def _tag_of(sbp) -> str:
+    if isinstance(sbp, S):
+        return f"S{sbp.axis}"
+    return "B" if sbp is B else "P"
+
+
+def _signatures_for(op: str, kind: Optional[str], arity: int):
+    if op == "matmul":
+        return matmul_axis_signatures()
+    linear = kind in ("add", "sub", "neg", None) and op == "binary"
+    return elementwise_axis_signatures(arity, linear=linear)
+
+
+def _apply_signature(op, kind, in_sbps: Tuple[NdSbp, ...], ndim_out: int,
+                     pl: Placement) -> Optional[NdSbp]:
+    """Per-axis signature check; returns the output ND-SBP or None."""
+    sigs = _signatures_for(op, kind, len(in_sbps))
+    out = []
+    for ax in range(pl.ndim):
+        tags = tuple(_tag_of(s[ax]) for s in in_sbps)
+        matched = None
+        for inputs, result in sigs:
+            if inputs == tags:
+                matched = result
+                break
+        if matched is None:
+            return None
+        r = resolve_tag(matched, ndim_out)
+        if r is None:
+            return None
+        out.append(r)
+    return tuple(out)
+
+
+@dataclasses.dataclass
+class DistEGraph:
+    eg: EGraph
+    root: int
+    placement: Placement
+    terms: List[Term]
+    eclusters: Dict[int, Dict[NdSbp, int]]   # term index -> {ndsbp: eclass}
+
+
+def build_distributed_egraph(root_term: Term, pl: Placement,
+                             max_sbps_per_tensor: int = 24) -> DistEGraph:
+    eg = EGraph()
+    # collect unique terms in topo order
+    topo: List[Term] = []
+    seen = {}
+
+    def walk(t: Term):
+        if t in seen:
+            return
+        for c in t.children:
+            walk(c)
+        seen[t] = len(topo)
+        topo.append(t)
+    walk(root_term)
+
+    from repro.core.tensor_ir import term_shape
+    shape_cache: Dict[Term, Tuple[int, ...]] = {}
+    for t in topo:
+        shape_cache[t] = term_shape(t, shape_cache)
+
+    eclusters: Dict[int, Dict[NdSbp, int]] = {}
+
+    def add_box(src_class: int, tid: int, src: NdSbp, dst: NdSbp,
+                shape) -> Optional[int]:
+        if boxing_cost(src, dst, shape, pl) is None:
+            return None
+        node = ENode("box", (src_class,),
+                     tuple(sorted({"term_id": tid, "src": src, "sbp": dst,
+                                   "comm": "reshard"}.items())))
+        return eg.add(node)
+
+    for tid, t in enumerate(topo):
+        shape = shape_cache[t]
+        cluster: Dict[NdSbp, int] = {}
+        if t.op == "input":
+            # 1. Input phase: host split boxing, one class per feasible SBP
+            for nd in valid_ndsbps(shape, pl)[:max_sbps_per_tensor]:
+                leaf = eg.add(ENode("input", (),
+                                    t.attrs + (("term_id", tid),)))
+                node = ENode("box", (leaf,),
+                             tuple(sorted({"term_id": tid, "src": None,
+                                           "sbp": nd, "comm": "split"}.items())))
+                cluster[nd] = eg.add(node)
+        else:
+            # 2. Compute phase: reuse + resharding candidates per input
+            in_grps: List[List[Tuple[NdSbp, int]]] = []
+            for c in t.children:
+                cin = eclusters[seen[c]]
+                cands: Dict[NdSbp, int] = dict(cin)
+                cshape = shape_cache[c]
+                targets = valid_ndsbps(cshape, pl,
+                                       allow_partial=False)[:max_sbps_per_tensor]
+                for dst in targets:
+                    if dst in cands:
+                        continue
+                    # reshard from the (arbitrary) first available source
+                    for src, cls in cin.items():
+                        bid = add_box(cls, seen[c], src, dst, cshape)
+                        if bid is not None:
+                            cands[dst] = bid
+                            break
+                in_grps.append(list(cands.items()))
+            kind = t.attr("kind")
+            for combo in itertools.product(*in_grps):
+                in_sbps = tuple(nd for nd, _ in combo)
+                out_sbp = _apply_signature(t.op, kind, in_sbps, len(shape), pl)
+                if out_sbp is None:
+                    continue
+                if shard_shape(shape, out_sbp, pl) is None:
+                    continue
+                node = ENode(t.op, tuple(cls for _, cls in combo),
+                             t.attrs + tuple(sorted(
+                                 {"term_id": tid, "sbp": out_sbp}.items())))
+                nid = eg.add(node)
+                if out_sbp in cluster:
+                    cluster[out_sbp] = eg.union(cluster[out_sbp], nid)
+                else:
+                    cluster[out_sbp] = nid
+        eclusters[tid] = cluster
+
+    # 3. Output phase: unshard to full Broadcast
+    root_tid = seen[root_term]
+    rshape = shape_cache[root_term]
+    full_b = tuple(B for _ in range(pl.ndim))
+    root_class = None
+    for src, cls in eclusters[root_tid].items():
+        if src == full_b:
+            rid = cls
+        else:
+            rid = add_box(cls, root_tid, src, full_b, rshape)
+        if rid is None:
+            continue
+        root_class = rid if root_class is None else eg.union(root_class, rid)
+    eg.rebuild()
+    # re-canonicalize cluster ids
+    for tid in eclusters:
+        eclusters[tid] = {nd: eg.find(c) for nd, c in eclusters[tid].items()}
+    return DistEGraph(eg, eg.find(root_class), pl, topo, eclusters)
+
+
+# ---------------------------------------------------------------------------
+# Costs on shard shapes
+# ---------------------------------------------------------------------------
+
+def make_cost_fn(dg: DistEGraph, dtype_bytes: int = 2):
+    pl = dg.placement
+    from repro.core.tensor_ir import term_shape
+    shape_cache: Dict[Term, Tuple[int, ...]] = {}
+    shapes = [term_shape(t, shape_cache) for t in dg.terms]
+
+    def cost(node: ENode) -> float:
+        tid = node.attr("term_id")
+        sbp = node.attr("sbp")
+        if node.op == "input":
+            return 0.0
+        shape = shapes[tid]
+        if node.op == "box":
+            if node.attr("comm") == "split":
+                return 0.0
+            return boxing_cost(node.attr("src"), sbp, shape, pl,
+                               dtype_bytes) or 0.0
+        local = shard_shape(shape, sbp, pl)
+        if local is None:
+            return 1e9
+        elems = 1
+        for d in local:
+            elems *= d
+        if node.op == "matmul":
+            # contraction dim from child's local shape
+            k_local = shape[1]  # fallback
+            ch_sbp = None
+            for n2 in dg.eg.nodes(node.children[0]):
+                ch_sbp = n2.attr("sbp")
+                break
+            flops = 2 * elems * k_local
+            return max(flops / PEAK_FLOPS,
+                       3 * elems * dtype_bytes / HBM_BW)
+        return max(elems * 4 / VPU_FLOPS, 3 * elems * dtype_bytes / HBM_BW)
+
+    return cost
+
+
+def make_mem_fn(dg: DistEGraph, dtype_bytes: int = 2):
+    pl = dg.placement
+    from repro.core.tensor_ir import term_shape
+    shape_cache: Dict[Term, Tuple[int, ...]] = {}
+    shapes = [term_shape(t, shape_cache) for t in dg.terms]
+
+    def mem(node: ENode) -> int:
+        tid = node.attr("term_id")
+        sbp = node.attr("sbp")
+        if node.op == "input" or sbp is None:
+            return 0
+        return memory_bytes(shapes[tid], sbp, pl, dtype_bytes)
+
+    return mem
+
+
+@dataclasses.dataclass
+class DistributedPlan:
+    cost: float
+    assignments: Dict[int, NdSbp]        # term index -> chosen ND-SBP
+    boxing: List[Tuple[int, NdSbp, NdSbp]]
+    peak_memory: int
+
+
+def auto_distribute(root_term: Term, pl: Placement,
+                    mem_capacity: Optional[int] = None,
+                    use_sat: bool = True) -> DistributedPlan:
+    dg = build_distributed_egraph(root_term, pl)
+    cost_fn = make_cost_fn(dg)
+    mem_fn = make_mem_fn(dg)
+    if mem_capacity is not None:
+        # hard per-device memory capacity: the specialized exact B&B prunes
+        # over-capacity branches monotonically (see extraction.py)
+        from repro.core.extraction import branch_bound_extract
+        total, choice = branch_bound_extract(dg.eg, dg.root, cost_fn,
+                                             mem_fn=mem_fn, cap=mem_capacity)
+    elif use_sat:
+        total, choice = wpmaxsat_extract(dg.eg, dg.root, cost_fn)
+    else:
+        total, choice = greedy_extract(dg.eg, dg.root, cost_fn)
+    assignments: Dict[int, NdSbp] = {}
+    boxing = []
+    peak = 0
+    for cid, node in choice.items():
+        tid = node.attr("term_id")
+        peak += mem_fn(node)
+        if node.op == "box":
+            if node.attr("comm") == "split":
+                # input placement choice = the initial shard boxing target
+                assignments[tid] = node.attr("sbp")
+            else:
+                boxing.append((tid, node.attr("src"), node.attr("sbp")))
+        elif node.op != "input":
+            assignments[tid] = node.attr("sbp")
+    return DistributedPlan(total, assignments, boxing, peak)
+
+
+def ndsbp_to_pspec(nd: NdSbp, pl: Placement, tensor_ndim: int):
+    """Bridge to jax: dim d gets every mesh axis whose SBP is S(d)."""
+    from jax.sharding import PartitionSpec
+    entries: List[Optional[Tuple[str, ...]]] = [None] * tensor_ndim
+    for axis_name, sbp in zip(pl.axes, nd):
+        if isinstance(sbp, S):
+            cur = entries[sbp.axis] or ()
+            entries[sbp.axis] = tuple(cur) + (axis_name,)
+    return PartitionSpec(*[e if e is None or len(e) > 1 else e[0]
+                           for e in entries])

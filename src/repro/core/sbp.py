@@ -1,0 +1,214 @@
+"""SBP (Split / Broadcast / Partial) abstraction (§3.1.3), after OneFlow.
+
+An ND-SBP assigns one SBP per mesh axis; axes act orthogonally.  Boxing
+converts between ND-SBPs; its cost is the alpha-beta collective model.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+from repro.core.cost_model import ALPHA, ICI_BW
+
+
+@dataclasses.dataclass(frozen=True)
+class S:
+    axis: int
+
+    def __repr__(self):
+        return f"S({self.axis})"
+
+
+class _B:
+    _inst = None
+
+    def __new__(cls):
+        if cls._inst is None:
+            cls._inst = super().__new__(cls)
+        return cls._inst
+
+    def __repr__(self):
+        return "B"
+
+
+class _P:
+    _inst = None
+
+    def __new__(cls):
+        if cls._inst is None:
+            cls._inst = super().__new__(cls)
+        return cls._inst
+
+    def __repr__(self):
+        return "P"
+
+
+B = _B()
+P = _P()
+NdSbp = Tuple[object, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class Placement:
+    """Logical device topology: named mesh axes with sizes."""
+    axes: Tuple[str, ...]
+    sizes: Tuple[int, ...]
+
+    @property
+    def ndim(self):
+        return len(self.axes)
+
+    @property
+    def n_devices(self):
+        n = 1
+        for s in self.sizes:
+            n *= s
+        return n
+
+
+def shard_shape(shape: Tuple[int, ...], nd: NdSbp, pl: Placement):
+    """Per-device local shape under an ND-SBP (None if not divisible)."""
+    local = list(shape)
+    for sbp, size in zip(nd, pl.sizes):
+        if isinstance(sbp, S):
+            if sbp.axis >= len(local) or local[sbp.axis] % size != 0:
+                return None
+            local[sbp.axis] //= size
+    return tuple(local)
+
+
+def valid_ndsbps(shape: Tuple[int, ...], pl: Placement,
+                 allow_partial: bool = False) -> List[NdSbp]:
+    """All ND-SBPs whose splits divide `shape` evenly."""
+    per_axis: List[List[object]] = []
+    for size in pl.sizes:
+        cands: List[object] = [B]
+        cands += [S(d) for d in range(len(shape)) if shape[d] % size == 0]
+        if allow_partial:
+            cands.append(P)
+        per_axis.append(cands)
+    out = []
+    for combo in itertools.product(*per_axis):
+        if shard_shape(shape, combo, pl) is not None:
+            out.append(tuple(combo))
+    return out
+
+
+def memory_bytes(shape, nd: NdSbp, pl: Placement, dtype_bytes: int = 2) -> int:
+    """Per-device bytes of a tensor stored with this ND-SBP."""
+    local = shard_shape(shape, nd, pl)
+    if local is None:
+        return 1 << 60
+    n = dtype_bytes
+    for d in local:
+        n *= d
+    return n
+
+
+# ---------------------------------------------------------------------------
+# Boxing: per-axis SBP transitions and their collective cost
+# ---------------------------------------------------------------------------
+
+_TRANSITION = {
+    # (src, dst) -> collective kind; None = impossible, "" = free
+    ("B", "B"): "",
+    ("B", "S"): "slice",          # local slicing, free
+    ("S", "S"): "all-to-all",     # different split axes
+    ("S", "B"): "all-gather",
+    ("P", "B"): "all-reduce",
+    ("P", "S"): "reduce-scatter",
+    # P sources can also stay partial (free) — handled by equality below
+}
+
+
+def _kindof(sbp) -> str:
+    if isinstance(sbp, S):
+        return "S"
+    return "B" if sbp is B else "P"
+
+
+def boxing_ops(src: NdSbp, dst: NdSbp, shape, pl: Placement,
+               dtype_bytes: int = 2):
+    """List of (collective kind, payload bytes, group size) per mesh axis for
+    converting src -> dst.  Returns None if the conversion is impossible."""
+    ops = []
+    for i, (a, b, size) in enumerate(zip(src, dst, pl.sizes)):
+        if a == b or size == 1:
+            continue
+        ka, kb = _kindof(a), _kindof(b)
+        if ka == "S" and kb == "S" and a.axis == b.axis:
+            continue
+        kind = _TRANSITION.get((ka, kb))
+        if kind is None:
+            return None
+        if kind in ("", "slice"):
+            ops.append(("slice", 0, size))
+            continue
+        # payload = the local tensor being exchanged on this axis: use the
+        # destination-local size for gathers, source-local for scatters.
+        local_src = shard_shape(shape, src, pl)
+        if local_src is None:
+            return None
+        nbytes = dtype_bytes
+        for d in local_src:
+            nbytes *= d
+        if kind == "all-gather":
+            nbytes *= size  # gathered result
+        ops.append((kind, nbytes, size))
+    return ops
+
+
+def boxing_cost(src: NdSbp, dst: NdSbp, shape, pl: Placement,
+                dtype_bytes: int = 2) -> Optional[float]:
+    ops = boxing_ops(src, dst, shape, pl, dtype_bytes)
+    if ops is None:
+        return None
+    t = 0.0
+    for kind, nbytes, g in ops:
+        if kind == "slice" or g <= 1:
+            continue
+        frac = (g - 1) / g
+        factor = {"all-gather": frac, "reduce-scatter": frac,
+                  "all-reduce": 2 * frac, "all-to-all": frac}[kind]
+        t += ALPHA + factor * nbytes / ICI_BW
+    return t
+
+
+# ---------------------------------------------------------------------------
+# SBP signatures (per mesh axis; ND composition is orthogonal)
+# ---------------------------------------------------------------------------
+
+def matmul_axis_signatures() -> List[Tuple[Tuple[str, ...], str]]:
+    """1-axis signatures for C[M,N] = A[M,K] @ B[K,N], encoded symbolically:
+    entries are 'S0'/'S1'/'B'/'P' per operand and the output."""
+    return [
+        (("S0", "B"), "S0"),    # split rows (data parallel)
+        (("B", "S1"), "S1"),    # split cols (tensor parallel out-dim)
+        (("S1", "S0"), "P"),    # split contraction -> partial
+        (("B", "B"), "B"),
+        (("P", "B"), "P"),
+        (("B", "P"), "P"),
+    ]
+
+
+def elementwise_axis_signatures(arity: int, linear: bool
+                                ) -> List[Tuple[Tuple[str, ...], str]]:
+    sigs = []
+    for tag in ("S0", "S1", "B"):
+        sigs.append((tuple(tag for _ in range(arity)), tag))
+    if linear:  # add-like ops propagate partial values
+        sigs.append((tuple("P" for _ in range(arity)), "P"))
+        if arity == 2:
+            sigs.append((("P", "B"), "P"))
+            sigs.append((("B", "P"), "P"))
+    return sigs
+
+
+def resolve_tag(tag: str, ndim: int):
+    if tag == "B":
+        return B
+    if tag == "P":
+        return P
+    d = int(tag[1:])
+    return S(d) if d < ndim else None

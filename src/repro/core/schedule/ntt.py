@@ -1,0 +1,70 @@
+"""NTT (nncase Tensor Template) library, TPU edition (§3.3.2).
+
+The paper's NTT is a C++20 header library of register-level μkernels; our
+TPU-native equivalent is the set of Pallas kernels in ``repro.kernels``.
+This module is the *registry + analytical timing model* used by the
+Auto Schedule MINLP (Eq. 15): each μkernel has a linear latency model
+``t(n) = alpha + n / throughput`` fitted to the hardware model
+(MXU 128x128x128 macs/cycle-block, VPU 8x128 lanes @ 940 MHz).
+
+μkernels are the *atomic scheduling units*: MCTS/MINLP never schedule below
+the μkernel tile (the paper's fix for the scalar-granularity mismatch).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+CLOCK_HZ = 1.5e9           # v5e core clock
+N_MXU = 4
+N_VPU = 4
+MXU_MACS_PER_CYCLE = N_MXU * 128 * 128   # 4x 128x128 systolic arrays
+# 4 * 16384 MACs/cycle * 2 flop/MAC * 1.5 GHz = 196.6 TFLOP/s  (v5e bf16 peak)
+VPU_LANES = N_VPU * 8 * 128
+
+
+@dataclasses.dataclass(frozen=True)
+class MicroKernel:
+    name: str
+    unit: str                # "mxu" | "vpu"
+    tile: Tuple[int, ...]    # minimal hardware tile
+    alpha_cycles: float      # fixed issue overhead
+    throughput: float        # elements (or MACs) per cycle
+    pallas_impl: str         # dotted path of the Pallas kernel backing it
+
+
+MICRO_KERNELS: Dict[str, MicroKernel] = {
+    "matmul": MicroKernel("matmul", "mxu", (128, 128, 128), 20.0,
+                          MXU_MACS_PER_CYCLE,
+                          "repro.kernels.matmul"),
+    "exp": MicroKernel("exp", "vpu", (8, 128), 8.0, VPU_LANES / 4,
+                       "repro.kernels.unary"),
+    "silu": MicroKernel("silu", "vpu", (8, 128), 8.0, VPU_LANES / 6,
+                        "repro.kernels.unary"),
+    "add": MicroKernel("add", "vpu", (8, 128), 4.0, VPU_LANES,
+                       "repro.kernels.binary"),
+    "mul": MicroKernel("mul", "vpu", (8, 128), 4.0, VPU_LANES,
+                       "repro.kernels.binary"),
+    "rmsnorm": MicroKernel("rmsnorm", "vpu", (8, 128), 16.0, VPU_LANES / 3,
+                           "repro.kernels.rmsnorm"),
+    "softmax_row": MicroKernel("softmax_row", "vpu", (8, 128), 24.0,
+                               VPU_LANES / 8, "repro.kernels.flash_attention"),
+    "ssm_step": MicroKernel("ssm_step", "vpu", (8, 128), 12.0, VPU_LANES / 4,
+                            "repro.kernels.ssm_scan"),
+}
+
+
+def ukernel_time(name: str, work_elems: int) -> float:
+    """μKernelTime (Eq. 15): linear model, seconds for `work_elems` units
+    (MACs for mxu kernels, elements for vpu kernels)."""
+    k = MICRO_KERNELS[name]
+    cycles = k.alpha_cycles + work_elems / k.throughput
+    return cycles / CLOCK_HZ
+
+
+def op_ukernel(op: str, kind: str = None) -> str:
+    if op in ("matmul", "packed_matmul"):
+        return "matmul"
+    if kind in MICRO_KERNELS:
+        return kind
+    return "add"

@@ -1,0 +1,108 @@
+"""Auto Vectorize (§3.1.2): MetaPackOperation + FoldNopPack.
+
+MetaPackOperation injects, for every logical op, hardware-specific packed
+variants wrapped in pack/unpack:
+
+  * MXU blocked layout: lanes (128, 128) — feeds ``packed_matmul``
+  * VPU flat layout:    lanes (8, 128)   — feeds ``packed_unary/binary``
+  * MXU-block elementwise: element-wise ops can also run directly on the
+    (128,128) blocked layout by treating each block as a contiguous vector —
+    the "pass-through layout" of Fig. 3.
+
+FoldNopPack cancels pack(unpack(x)) pairs, which is what lets a blocked
+layout flow through MatMul -> Exp -> MatMul without round-tripping to the
+logical layout.  Extraction (roofline-weighted WPMaxSAT) then picks the best
+variant mix globally.
+
+On TPU the extracted packed graph maps onto the Pallas kernels in
+``repro.kernels`` (packed_matmul -> matmul kernel block tiles; packed chains
+-> fused flash attention); see ``repro.core.codegen``.
+"""
+from __future__ import annotations
+
+from typing import Iterable, List, Tuple
+
+from repro.core.egraph import EGraph, ENode, M, MixedTerm
+from repro.core.extraction import extract_term, greedy_extract, wpmaxsat_extract
+from repro.core.rewrite import Rule, TRANSPOSE_RULES
+from repro.core.tensor_ir import Term
+
+MXU_LANES = (128, 128)
+VPU_LANES = (8, 128)
+
+
+def _divisible(shape, lanes, axes) -> bool:
+    return all(ax < len(shape) and shape[ax] % lane == 0
+               for lane, ax in zip(lanes, axes))
+
+
+class MetaPackOperation(Rule):
+    """Op() -> Unpack(PackedOp(Pack(arg_i, lanes_i, axes_i)...), lanes, axes)."""
+    name = "meta-pack-operation"
+
+    def apply(self, eg: EGraph, cid: int, node: ENode) -> Iterable[MixedTerm]:
+        shape = eg.shape(cid)
+        if len(shape) != 2:
+            return
+        if node.op == "matmul":
+            a, b = node.children
+            sa, sb = eg.shape(a), eg.shape(b)
+            lm, lk = MXU_LANES
+            ln = MXU_LANES[1]
+            if (_divisible(sa, (lm, lk), (0, 1))
+                    and _divisible(sb, (lk, ln), (0, 1))):
+                yield M("unpack",
+                        M("packed_matmul",
+                          M("pack", a, lanes=(lm, lk), axes=(0, 1)),
+                          M("pack", b, lanes=(lk, ln), axes=(0, 1))),
+                        lanes=(lm, ln), axes=(0, 1))
+        elif node.op in ("unary", "binary"):
+            kind = node.attr("kind")
+            for lanes in (VPU_LANES, MXU_LANES):
+                if not _divisible(shape, lanes, (0, 1)):
+                    continue
+                packed_children = [M("pack", c, lanes=lanes, axes=(0, 1))
+                                   for c in node.children]
+                yield M("unpack",
+                        M(f"packed_{node.op}", *packed_children, kind=kind),
+                        lanes=lanes, axes=(0, 1))
+
+
+class FoldNopPack(Rule):
+    """Pack(Unpack(arg, lanes, axes), lanes, axes) -> arg."""
+    name = "fold-nop-pack"
+
+    def apply(self, eg: EGraph, cid: int, node: ENode):
+        if node.op != "pack":
+            return
+        lanes, axes = node.attr("lanes"), node.attr("axes")
+        for inner in eg.nodes(node.children[0]):
+            if (inner.op == "unpack" and inner.attr("lanes") == lanes
+                    and inner.attr("axes") == axes):
+                yield inner.children[0]
+
+
+VECTORIZE_RULES: List[Rule] = [MetaPackOperation(), FoldNopPack()]
+
+
+def auto_vectorize(term: Term, use_sat: bool = True, max_iters: int = 8,
+                   node_limit: int = 8000):
+    """Saturate with vectorization (+ transpose) rules and extract the best
+    packed program.  Returns (cost, packed Term, stats)."""
+    eg = EGraph()
+    root = eg.add_term(term)
+    baseline, _ = greedy_extract(eg, root)
+    stats = eg.saturate(VECTORIZE_RULES + TRANSPOSE_RULES,
+                        max_iters=max_iters, node_limit=node_limit)
+    if use_sat:
+        cost, choice = wpmaxsat_extract(eg, root)
+    else:
+        cost, choice = greedy_extract(eg, root)
+    stats["baseline_cost"] = baseline
+    stats["optimized_cost"] = cost
+    stats["egraph_size"] = eg.size()
+    return cost, extract_term(eg, root, choice), stats
+
+
+def count_ops(t: Term, *ops: str) -> int:
+    return (t.op in ops) + sum(count_ops(c, *ops) for c in t.children)

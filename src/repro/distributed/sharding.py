@@ -1,0 +1,307 @@
+"""Sharding policy: pytree -> PartitionSpec trees for params, batches, caches.
+
+The rules here are the *materialization* of the Auto Distribution module's SBP
+assignments (see ``repro.core.distribution``): S(axis) on a tensor dim becomes
+a mesh axis name in that dim's PartitionSpec entry, B becomes None, and P
+never appears on stored tensors (partial values only exist transiently inside
+einsums, where GSPMD inserts the reduction).
+
+Conventions:
+  * mesh axes: ("data", "model") single-pod, ("pod", "data", "model") 2-pod.
+  * FSDP axes = ("pod","data") when present — weights are sharded over them on
+    a non-contracting dim and all-gathered per layer by XLA.
+  * TP axis = "model" — heads / ffn / experts / d_inner.
+  * Any rule entry is dropped (-> None) if the dim size is not divisible by
+    the mesh axis size (e.g. whisper's vocab 51865), keeping GSPMD padding out
+    of the memory analysis.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+
+
+# Logical activation axes -> mesh axes.  This table is the Auto Distribution
+# module's output surface: models annotate tensors with *logical* names and
+# the ambient mesh decides the physical placement.
+LOGICAL_AXES = {
+    "batch": ("pod", "data"),
+    "fsdp": ("pod", "data"),
+    "heads": ("model",),
+    "kv": ("model",),
+    "ff": ("model",),
+    "vocab": ("model",),
+    "dinner": ("model",),
+    "experts": ("model",),
+    "seq_mp": ("model",),          # sequence-parallel over the model axis
+    "seq_dp": ("pod", "data"),     # sequence-parallel over the data axes
+    None: (),
+}
+
+
+def _ambient_mesh() -> Optional[Mesh]:
+    from jax._src.mesh import thread_resources
+    m = thread_resources.env.physical_mesh
+    return None if m.empty else m
+
+
+def constrain(x, *logical):
+    """with_sharding_constraint via logical axis names; silently no-ops when
+    no mesh is active or a dim isn't divisible by the target axes."""
+    mesh = _ambient_mesh()
+    if mesh is None or not hasattr(x, "shape") or len(logical) != len(x.shape):
+        return x
+    from repro.perf import perf
+    dp_mode = perf().train_sharding == "dp"
+    entries = []
+    for dim, name in zip(x.shape, logical):
+        table = LOGICAL_AXES.get(name, ())
+        if dp_mode:
+            if name in ("batch", "fsdp"):
+                table = tuple(mesh.shape.keys())
+            elif name not in (None, "seq_dp"):
+                table = ()   # no tensor-parallel constraints in pure DP
+        axes = tuple(a for a in table if a in mesh.shape and mesh.shape[a] > 1)
+        size = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+        if not axes or dim % size != 0:
+            entries.append(None)
+        else:
+            entries.append(axes if len(axes) > 1 else axes[0])
+    if all(e is None for e in entries):
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*entries))
+
+
+def weight_use(w, *logical):
+    """Constrain a weight AT ITS USE SITE to TP-only placement (drops the
+    FSDP axes).  Under REPRO_WEIGHT_AG=1 this forces GSPMD to all-gather the
+    small weight shard instead of partial-summing the large activations over
+    the FSDP-sharded contraction dim — see perf.py."""
+    from repro.perf import perf
+    if not perf().weight_ag:
+        return w
+    return constrain(w, *logical)
+
+
+def mesh_axis_size(mesh: Mesh, name) -> int:
+    if name is None:
+        return 1
+    if isinstance(name, tuple):
+        return int(np.prod([mesh_axis_size(mesh, n) for n in name]))
+    return mesh.shape[name] if name in mesh.shape else 1
+
+
+def fsdp_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.shape else ("data",)
+
+
+def batch_axes(mesh: Mesh):
+    from repro.perf import perf
+    if perf().train_sharding == "dp":
+        # pure data parallelism: batch over EVERY mesh axis
+        return tuple(mesh.shape.keys())
+    return ("pod", "data") if "pod" in mesh.shape else ("data",)
+
+
+def _fits(dim: int, mesh: Mesh, entry) -> bool:
+    return entry is None or dim % mesh_axis_size(mesh, entry) == 0
+
+
+def _spec_for(shape: Tuple[int, ...], trailing, mesh: Mesh) -> P:
+    """Build a PartitionSpec: Nones for leading dims + `trailing` rules for the
+    last len(trailing) dims, with divisibility guards."""
+    n = len(shape)
+    t = list(trailing)[-n:] if len(trailing) > n else list(trailing)
+    entries = [None] * (n - len(t)) + t
+    entries = [e if _fits(shape[i], mesh, e) else None
+               for i, e in enumerate(entries)]
+    return P(*entries)
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+def param_specs(cfg: ModelConfig, params_abstract, mesh: Mesh):
+    from repro.perf import perf
+    if perf().train_sharding == "dp":
+        # weights fully replicated (Auto Distribution's answer for small
+        # models under a satisfied memory constraint): every spec is None
+        return jax.tree.map(lambda l: P(*([None] * len(l.shape))),
+                            params_abstract)
+    FS = fsdp_axes(mesh)
+    TP = "model"
+
+    def rule(path, leaf):
+        keys = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+        name = keys[-1]
+        in_moe = "moe" in keys
+        shape = leaf.shape
+
+        if name in ("ln", "ln1", "ln2", "ln_x", "final_norm", "enc_norm",
+                    "norm", "q_norm", "k_norm", "dt_bias", "conv_b", "D"):
+            # conv_b/D are d_inner-sized: shard over TP when they fit
+            if name in ("conv_b", "D", "dt_bias") and shape:
+                return _spec_for(shape, (TP,), mesh)
+            return P(*([None] * len(shape)))
+        if name == "embed":
+            return _spec_for(shape, (TP, FS), mesh)
+        if name == "unembed":
+            return _spec_for(shape, (FS, TP), mesh)
+        if name in ("wq", "wk", "wv"):
+            return _spec_for(shape, (FS, TP), mesh)
+        if name in ("wi", "wi_gate", "wi_up"):
+            if in_moe and len(shape) >= 3:      # (..., E, d, f): expert parallel
+                return _spec_for(shape, (TP, FS, None), mesh)
+            return _spec_for(shape, (FS, TP), mesh)
+        if name in ("wo", "out_proj"):
+            if in_moe and len(shape) >= 3:      # (..., E, f, d)
+                return _spec_for(shape, (TP, None, FS), mesh)
+            return _spec_for(shape, (TP, FS), mesh)
+        if name == "router":
+            return _spec_for(shape, (FS, None), mesh)
+        if name in ("in_proj", "in_proj_zx"):
+            return _spec_for(shape, (FS, TP), mesh)
+        if name == "in_proj_bcdt":
+            return _spec_for(shape, (FS, None), mesh)
+        if name == "x_proj":
+            return _spec_for(shape, (TP, None), mesh)
+        if name == "dt_proj":
+            return _spec_for(shape, (None, TP), mesh)
+        if name == "conv_w":
+            return _spec_for(shape, (None, TP), mesh)
+        if name == "A_log":
+            if shape and shape[-1] > 1 and len(shape) >= 2 and shape[-2] % 8 == 0:
+                return _spec_for(shape, (TP, None), mesh)   # mamba1 (di, N)
+            return _spec_for(shape, (TP,), mesh)            # mamba2 (H,)
+        return P(*([None] * len(shape)))
+
+    return jax.tree_util.tree_map_with_path(rule, params_abstract)
+
+
+# ---------------------------------------------------------------------------
+# Batches
+# ---------------------------------------------------------------------------
+
+def batch_specs(cfg: ModelConfig, batch_abstract: Dict, mesh: Mesh):
+    BA = batch_axes(mesh)
+    nb = mesh_axis_size(mesh, BA)
+
+    def rule(path, leaf):
+        name = getattr(path[-1], "key", str(path[-1]))
+        shape = leaf.shape
+        if name in ("tokens", "labels", "token"):
+            e = BA if shape[0] % nb == 0 else None
+            return P(e, *([None] * (len(shape) - 1)))
+        if name in ("embeds", "frames"):
+            e = BA if shape[0] % nb == 0 else None
+            return P(e, None, None)
+        if name == "positions":
+            e = BA if shape[1] % nb == 0 else None
+            return P(None, e, *([None] * (len(shape) - 2)))
+        if name == "cur_len":
+            return P()
+        return P(*([None] * len(shape)))
+
+    return jax.tree_util.tree_map_with_path(rule, batch_abstract)
+
+
+# ---------------------------------------------------------------------------
+# Decode / prefill caches
+# ---------------------------------------------------------------------------
+
+def cache_specs(cfg: ModelConfig, cache_abstract, mesh: Mesh):
+    BA = batch_axes(mesh)
+    nb = mesh_axis_size(mesh, BA)
+    tp_n = mesh_axis_size(mesh, "model")
+
+    def rule(path, leaf):
+        name = getattr(path[-1], "key", str(path[-1]))
+        shape = leaf.shape
+        if name in ("k", "v", "xk", "xv"):
+            # (..., B, S, KV, hd)
+            b, s, kv = shape[-4], shape[-3], shape[-2]
+            lead = [None] * (len(shape) - 4)
+            if b % nb == 0:
+                bent, sent = BA, None
+            else:
+                bent, sent = None, BA if s % nb == 0 else None
+            if kv % tp_n == 0:
+                kvent, s2 = "model", sent
+            else:
+                # GQA with KV < model size: sequence-parallel KV cache
+                kvent = None
+                s2 = (sent, "model") if sent and s % (nb * tp_n) == 0 else (
+                    "model" if s % tp_n == 0 else sent)
+            return P(*lead, bent, s2, kvent, None)
+        if name == "h":
+            # mamba1 (L,B,di,N) / hybrid (nseg,per,B,H,P,N)
+            if len(shape) == 4:
+                b, di = shape[1], shape[2]
+                return P(None, BA if b % nb == 0 else None,
+                         "model" if di % tp_n == 0 else None, None)
+            lead = [None] * (len(shape) - 4)
+            b, hh = shape[-4], shape[-3]
+            return P(*lead, BA if b % nb == 0 else None,
+                     "model" if hh % tp_n == 0 else None, None, None)
+        if name == "conv":
+            # (..., B, K-1, di)
+            lead = [None] * (len(shape) - 3)
+            b, di = shape[-3], shape[-1]
+            return P(*lead, BA if b % nb == 0 else None, None,
+                     "model" if di % tp_n == 0 else None)
+        return P(*([None] * len(shape)))
+
+    return jax.tree_util.tree_map_with_path(rule, cache_abstract)
+
+
+# ---------------------------------------------------------------------------
+# Optimizer state
+# ---------------------------------------------------------------------------
+
+def opt_state_specs(param_spec_tree, opt_state_abstract, mesh: Mesh):
+    """Moments mirror the param specs; Quantized leaves shard blocks over all
+    axes; step is replicated.  Under pure-DP sharding the moments are
+    ZeRO-sharded along their largest divisible dim over all axes."""
+    from repro.perf import perf
+    from repro.train.optimizer import Quantized
+    all_axes = tuple(mesh.shape.keys())
+    n_all = mesh_axis_size(mesh, all_axes)
+    zero_style = perf().train_sharding == "dp"
+
+    def moment_spec(spec, leaf):
+        if isinstance(leaf, Quantized):
+            nb = leaf.q.shape[0] if hasattr(leaf.q, "shape") else 0
+            qspec = P(all_axes, None) if nb % max(1, n_all) == 0 else P(None, None)
+            nsc = leaf.scale.shape[0] if hasattr(leaf.scale, "shape") else 0
+            sspec = P(all_axes, None) if nsc % max(1, n_all) == 0 else P(None, None)
+            return Quantized(qspec, sspec, leaf.shape, leaf.pad)
+        if zero_style and hasattr(leaf, "shape"):
+            # ZeRO-1: shard the first dim divisible by the full device count
+            entries = [None] * len(leaf.shape)
+            for i, d in enumerate(leaf.shape):
+                if d % n_all == 0:
+                    entries[i] = all_axes
+                    break
+            return P(*entries)
+        return spec
+
+    specs = {
+        "step": P(),
+        "m": jax.tree.map(moment_spec, param_spec_tree, opt_state_abstract["m"],
+                          is_leaf=lambda x: isinstance(x, Quantized)),
+        "v": jax.tree.map(moment_spec, param_spec_tree, opt_state_abstract["v"],
+                          is_leaf=lambda x: isinstance(x, Quantized)),
+    }
+    return specs
+
+
+def to_named(tree, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s) if isinstance(s, P) else s, tree,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,58 @@
+"""Packed/blocked matmul Pallas kernel — the NTT matmul μkernel (§3.3.2).
+
+MXU-aligned VMEM tiling: grid (M/bm, N/bn, K/bk) with a float32 VMEM
+accumulator; K is the innermost (sequential) grid dim so the accumulator
+lives across K steps.  Default tile sizes come from the Auto Schedule MINLP
+(see ``repro.core.codegen.kernel_plan``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mm_kernel(a_ref, b_ref, o_ref, acc_ref, *, nk: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def matmul_kernel(a: jax.Array, b: jax.Array,
+                  block_m: int = 256, block_n: int = 256, block_k: int = 512,
+                  interpret: bool = False) -> jax.Array:
+    """a (M,K) @ b (K,N) -> (M,N); dims must divide by the block sizes."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    block_m = min(block_m, m)
+    block_n = min(block_n, n)
+    block_k = min(block_k, k)
+    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0, (
+        (m, n, k), (block_m, block_n, block_k))
+    nk = k // block_k
+    grid = (m // block_m, n // block_n, nk)
+    return pl.pallas_call(
+        functools.partial(_mm_kernel, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        interpret=interpret,
+    )(a, b)

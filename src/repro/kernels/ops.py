@@ -1,0 +1,73 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) kernels run in interpret mode automatically; on TPU
+they compile through Mosaic.  Block sizes default to the Auto Schedule
+MINLP's choices for the attention-like subgraph (see
+``repro.core.codegen.kernel_plan``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention_kernel
+from repro.kernels.matmul import matmul_kernel
+from repro.kernels.rmsnorm import rmsnorm_kernel
+from repro.kernels.ssm_scan import ssm_scan_kernel
+
+
+def _interpret() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k"))
+def matmul(a, b, block_m: int = 256, block_n: int = 256, block_k: int = 512):
+    return matmul_kernel(a, b, block_m, block_n, block_k,
+                         interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "q_offset",
+                                              "block_q", "block_kv"))
+def flash_attention(q, k, v, causal: bool = True, q_offset: int = 0,
+                    block_q: int = 512, block_kv: int = 1024):
+    """Model-facing signature: q (B,S,H,hd), k/v (B,S,KV,hd) -> (B,S,H,hd).
+    GQA is handled by repeating KV heads before the kernel."""
+    b, sq, h, hd = q.shape
+    kvh = k.shape[2]
+    if kvh != h:
+        rep = h // kvh
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * h, -1, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * h, -1, hd)
+    o = flash_attention_kernel(qf, kf, vf, causal=causal, q_offset=q_offset,
+                               block_q=block_q, block_kv=block_kv,
+                               interpret=_interpret())
+    return o.reshape(b, h, sq, hd).transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows"))
+def rmsnorm(x, w, eps: float = 1e-5, block_rows: int = 256):
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    rows = x2.shape[0]
+    br = block_rows
+    while rows % br:
+        br //= 2
+    out = rmsnorm_kernel(x2, w, eps=eps, block_rows=max(1, br),
+                         interpret=_interpret())
+    return out.reshape(shape)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d",))
+def ssm_scan(a, b, c, h0, block_d: int = 512):
+    """Batched: a,b (B,T,D,N), c (B,T,N), h0 (B,D,N) -> (y (B,T,D), h (B,D,N))."""
+    bd = min(block_d, a.shape[2])
+    while a.shape[2] % bd:
+        bd //= 2
+    fn = functools.partial(ssm_scan_kernel, block_d=max(1, bd),
+                           interpret=_interpret())
+    return jax.vmap(fn)(a, b, c, h0)

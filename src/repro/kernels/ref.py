@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32)).astype(a.dtype)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True, q_offset: int = 0) -> jax.Array:
+    """q (BH,Sq,hd), k/v (BH,Skv,hd): exact softmax attention in f32."""
+    bh, sq, hd = q.shape
+    skv = k.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        qpos = q_offset + jnp.arange(sq)[:, None]
+        kpos = jnp.arange(skv)[None, :]
+        s = jnp.where(qpos >= kpos, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def rmsnorm_ref(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def ssm_scan_ref(a: jax.Array, b: jax.Array, c: jax.Array, h0: jax.Array):
+    """Sequential reference of the selective scan."""
+    def step(h, xs):
+        at, bt, ct = xs
+        h = at * h + bt
+        return h, jnp.sum(h * ct[None, :], axis=-1)
+    h_last, y = jax.lax.scan(step, h0, (a, b, c))
+    return y, h_last

@@ -1,0 +1,35 @@
+"""Fused RMSNorm Pallas kernel (NTT rmsnorm μkernel): one pass over rows,
+f32 reduction in VMEM, fused scale."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    o_ref[...] = (x * jax.lax.rsqrt(var + eps)
+                  * w_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+def rmsnorm_kernel(x: jax.Array, w: jax.Array, eps: float = 1e-5,
+                   block_rows: int = 256, interpret: bool = False) -> jax.Array:
+    """x (R, D), w (D,) -> (R, D)."""
+    r, d = x.shape
+    block_rows = min(block_rows, r)
+    assert r % block_rows == 0
+    return pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(r // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, d), x.dtype),
+        interpret=interpret,
+    )(x, w)

@@ -1,0 +1,64 @@
+"""Selective-scan (Mamba1) Pallas kernel: the SSM recurrence fused in VMEM.
+
+h_t = a_t * h_{t-1} + b_t ;  y_t = <h_t, c_t>
+
+The jnp reference materializes (T, D, N) state products in HBM; the kernel
+keeps h resident in VMEM across the sequential time loop — the memory-bound
+hot spot of the falcon-mamba arch (see §Roofline: mamba train is the most
+memory-dominated cell).  Grid tiles the d_inner dim; time stays in-kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssm_kernel(a_ref, b_ref, c_ref, h0_ref, y_ref, hl_ref, h_ref, *, t_len: int):
+    h_ref[...] = h0_ref[...]
+
+    def step(t, _):
+        h = a_ref[t] * h_ref[...] + b_ref[t]       # (bd, N)
+        h_ref[...] = h
+        y_ref[t] = jnp.sum(h * c_ref[t][None, :], axis=-1).astype(y_ref.dtype)
+        return 0
+
+    jax.lax.fori_loop(0, t_len, step, 0)
+    hl_ref[...] = h_ref[...]
+
+
+def ssm_scan_kernel(a: jax.Array, b: jax.Array, c: jax.Array, h0: jax.Array,
+                    block_d: int = 512, interpret: bool = False):
+    """a,b (T,D,N) f32; c (T,N) f32; h0 (D,N) f32 -> (y (T,D) f32, h_last (D,N)).
+
+    Single-sequence chunk form: callers vmap over batch and lax.scan over
+    chunks (mirrors the hierarchical scan in repro.models.mamba).
+    """
+    t_len, d, n = a.shape
+    block_d = min(block_d, d)
+    assert d % block_d == 0
+    grid = (d // block_d,)
+    y, hl = pl.pallas_call(
+        functools.partial(_ssm_kernel, t_len=t_len),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((t_len, block_d, n), lambda i: (0, i, 0)),
+            pl.BlockSpec((t_len, block_d, n), lambda i: (0, i, 0)),
+            pl.BlockSpec((t_len, n), lambda i: (0, 0)),
+            pl.BlockSpec((block_d, n), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((t_len, block_d), lambda i: (0, i)),
+            pl.BlockSpec((block_d, n), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t_len, d), jnp.float32),
+            jax.ShapeDtypeStruct((d, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_d, n), jnp.float32)],
+        interpret=interpret,
+    )(a, b, c, h0)
+    return y, hl

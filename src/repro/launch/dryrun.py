@@ -1,0 +1,229 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines: jax locks the device count on first init.
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes and record memory / cost / collective analyses.
+
+One-cell mode (used by the driver via subprocess so each compile gets a fresh
+XLA):    python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k --mesh pod1
+Driver:  python -m repro.launch.dryrun --all [--mesh pod1|pod2|both]
+
+Results land in results/dryrun/<arch>__<shape>__<mesh>.json; existing files
+are skipped, so the driver is resumable.
+"""
+import argparse
+import json
+import re
+import subprocess
+import sys
+import time
+import traceback
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+# ---------------------------------------------------------------------------
+# One-cell dry run
+# ---------------------------------------------------------------------------
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, out_path: Path,
+             save_hlo: bool = False) -> dict:
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.base import SHAPES, cell_is_runnable, get_config
+    from repro.distributed import sharding as shd
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import make_decode_step, make_prefill_step, make_train_step
+    from repro.models import build_model
+    from repro.models.model_zoo import abstract_params
+
+    from repro.perf import knob_snapshot
+
+    t0 = time.time()
+    cfg = get_config(arch)
+    spec = SHAPES[shape_name]
+    result = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+              "kind": spec.kind, "seq_len": spec.seq_len,
+              "global_batch": spec.global_batch,
+              "params": cfg.param_count(),
+              "active_params": cfg.active_param_count(),
+              "perf_knobs": knob_snapshot()}
+
+    ok, why = cell_is_runnable(cfg, spec)
+    if not ok:
+        result["status"] = "skipped"
+        result["skip_reason"] = why
+        out_path.write_text(json.dumps(result, indent=1))
+        return result
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "pod2"))
+    n_dev = int(mesh.devices.size)
+    result["devices"] = n_dev
+
+    fns = build_model(cfg)
+    params_abs = abstract_params(cfg)
+    pspecs = shd.param_specs(cfg, params_abs, mesh)
+    batch_abs = fns.input_specs(spec)
+    bspecs = shd.batch_specs(cfg, batch_abs, mesh)
+
+    with mesh:
+        if spec.kind == "train":
+            step, opt = make_train_step(cfg)
+            opt_abs = jax.eval_shape(opt.init, params_abs)
+            ospecs = shd.opt_state_specs(pspecs, opt_abs, mesh)
+            lowered = jax.jit(
+                step,
+                in_shardings=(shd.to_named(pspecs, mesh),
+                              shd.to_named(ospecs, mesh),
+                              shd.to_named(bspecs, mesh)),
+                out_shardings=(shd.to_named(pspecs, mesh),
+                               shd.to_named(ospecs, mesh), None),
+                donate_argnums=(0, 1),
+            ).lower(params_abs, opt_abs, batch_abs)
+        elif spec.kind == "prefill":
+            step = make_prefill_step(cfg)
+            cache_abs, logits_abs = jax.eval_shape(step, params_abs, batch_abs)
+            cspecs = shd.cache_specs(cfg, cache_abs, mesh)
+            lowered = jax.jit(
+                step,
+                in_shardings=(shd.to_named(pspecs, mesh),
+                              shd.to_named(bspecs, mesh)),
+                out_shardings=(shd.to_named(cspecs, mesh), None),
+            ).lower(params_abs, batch_abs)
+        else:  # decode
+            step = make_decode_step(cfg)
+            cache_abs = jax.eval_shape(
+                lambda: fns.make_cache(spec.global_batch, spec.seq_len))
+            cspecs = shd.cache_specs(cfg, cache_abs, mesh)
+            lowered = jax.jit(
+                step,
+                in_shardings=(shd.to_named(pspecs, mesh),
+                              shd.to_named(cspecs, mesh),
+                              shd.to_named(bspecs, mesh)),
+                out_shardings=(shd.to_named(cspecs, mesh), None),
+                donate_argnums=(1,),
+            ).lower(params_abs, cache_abs, batch_abs)
+
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+
+    from repro.launch.hlo_analysis import analyze_hlo, roofline_terms
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    text = compiled.as_text()
+    analysis = analyze_hlo(text, n_dev)
+
+    result["status"] = "ok"
+    result["lower_s"] = round(t1 - t0, 2)
+    result["compile_s"] = round(t2 - t1, 2)
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes",
+                 "alias_size_in_bytes"):
+        try:
+            result[attr] = int(getattr(mem, attr))
+        except Exception:
+            pass
+    # XLA's own cost analysis (NOTE: visits while bodies once; kept for
+    # reference only — the roofline uses the trip-count-aware HLO analysis).
+    result["xla_cost_flops"] = float(cost.get("flops", -1)) if hasattr(cost, "get") else -1
+    result["xla_cost_bytes"] = float(cost.get("bytes accessed", -1)) if hasattr(cost, "get") else -1
+    result["hlo_flops_per_device"] = analysis["flops"]
+    result["hlo_bytes_per_device"] = analysis["bytes_traffic"]
+    result["collectives"] = analysis["collectives"]
+    result["roofline"] = roofline_terms(analysis)
+    # model flops: 6*N_active*D for train (x3 for bwd? 6ND already counts
+    # fwd+bwd for training); for inference use 2*N_active*D.
+    spec_tokens = spec.global_batch * (spec.seq_len if spec.kind != "decode" else 1)
+    if spec.kind == "train":
+        model_flops = 6 * cfg.active_param_count() * spec_tokens
+    else:
+        model_flops = 2 * cfg.active_param_count() * spec_tokens
+    result["model_flops_global"] = float(model_flops)
+    hlo_flops_global = analysis["flops"] * n_dev
+    result["model_vs_hlo_flops"] = (
+        float(model_flops / hlo_flops_global) if hlo_flops_global else None)
+    result["hlo_lines"] = text.count("\n")
+    if save_hlo:
+        (out_path.parent / (out_path.stem + ".hlo.txt")).write_text(text)
+    out_path.write_text(json.dumps(result, indent=1))
+
+    print(json.dumps({k: v for k, v in result.items() if k != "collectives"},
+                     indent=1))
+    print("collectives:", json.dumps(analysis["collectives"]))
+    print("memory_analysis:", mem)
+    return result
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+def all_cells(meshes):
+    from repro.configs.base import SHAPES
+    from repro.configs import ALL_ARCHS
+    for arch in ALL_ARCHS:
+        for shape in SHAPES:
+            for mesh in meshes:
+                yield arch, shape, mesh
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="pod1", choices=["pod1", "pod2", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--tag", default="", help="suffix for the result file "
+                    "(perf-knob experiments, see benchmarks/hillclimb.py)")
+    ap.add_argument("--timeout", type=int, default=3000)
+    args = ap.parse_args()
+    RESULTS.mkdir(parents=True, exist_ok=True)
+
+    if args.all:
+        meshes = ["pod1", "pod2"] if args.mesh == "both" else [args.mesh]
+        todo = list(all_cells(meshes))
+        for i, (arch, shape, mesh) in enumerate(todo):
+            out = RESULTS / f"{arch}__{shape}__{mesh}.json"
+            if out.exists():
+                continue
+            print(f"[{i+1}/{len(todo)}] {arch} x {shape} x {mesh}", flush=True)
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", arch, "--shape", shape, "--mesh", mesh]
+            if args.save_hlo:
+                cmd.append("--save-hlo")
+            try:
+                r = subprocess.run(cmd, timeout=args.timeout,
+                                   capture_output=True, text=True)
+                if r.returncode != 0:
+                    err = (r.stderr or "")[-3000:]
+                    out.write_text(json.dumps(
+                        {"arch": arch, "shape": shape, "mesh": mesh,
+                         "status": "error", "error": err}, indent=1))
+                    print(f"  ERROR (see {out})", flush=True)
+                else:
+                    print("  ok", flush=True)
+            except subprocess.TimeoutExpired:
+                out.write_text(json.dumps(
+                    {"arch": arch, "shape": shape, "mesh": mesh,
+                     "status": "timeout"}, indent=1))
+                print("  TIMEOUT", flush=True)
+        return
+
+    suffix = f"__{args.tag}" if args.tag else ""
+    out = RESULTS / f"{args.arch}__{args.shape}__{args.mesh}{suffix}.json"
+    try:
+        run_cell(args.arch, args.shape, args.mesh, out, save_hlo=args.save_hlo)
+    except Exception:
+        out.write_text(json.dumps(
+            {"arch": args.arch, "shape": args.shape, "mesh": args.mesh,
+             "status": "error", "error": traceback.format_exc()[-4000:]},
+            indent=1))
+        raise
+
+
+if __name__ == "__main__":
+    main()

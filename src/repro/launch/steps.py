@@ -1,0 +1,47 @@
+"""Step builders shared by the dry-run, trainer, server, and benchmarks."""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import build_model
+from repro.train.optimizer import AdamW, AdamWConfig
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: Optional[AdamWConfig] = None,
+                    remat: bool = True) -> Tuple[Callable, AdamW]:
+    fns = build_model(cfg)
+    if opt_cfg is None:
+        from repro.perf import perf
+        opt_cfg = AdamWConfig(state_dtype=perf().opt_state)
+    opt = AdamW(opt_cfg)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: fns.loss(p, batch, remat=remat))(params)
+        new_params, new_state, metrics = opt.update(grads, opt_state, params)
+        metrics["loss"] = loss
+        return new_params, new_state, metrics
+
+    return train_step, opt
+
+
+def make_prefill_step(cfg: ModelConfig) -> Callable:
+    fns = build_model(cfg)
+
+    def prefill_step(params, batch):
+        return fns.prefill(params, batch)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig) -> Callable:
+    fns = build_model(cfg)
+
+    def decode_step(params, cache, batch):
+        return fns.decode_step(params, cache, batch)
+
+    return decode_step

@@ -1,0 +1,55 @@
+"""End-to-end training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b --smoke \
+        --steps 50 --seq-len 256 --batch 4 --workdir /tmp/run1
+
+``--smoke`` swaps in the reduced same-family config so the driver runs on
+CPU; without it the full config is used (TPU pods via --mesh pod1/pod2).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs.base import get_config, reduced_config
+from repro.launch.mesh import make_local_mesh, make_production_mesh
+from repro.train.optimizer import AdamWConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--workdir", default=None)
+    ap.add_argument("--mesh", default="local", choices=["local", "pod1", "pod2"])
+    ap.add_argument("--opt-state", default="f32", choices=["f32", "int8"])
+    ap.add_argument("--fail-at", type=int, default=None,
+                    help="inject a failure at this step (recovery demo)")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = reduced_config(cfg)
+    mesh = (make_local_mesh() if args.mesh == "local"
+            else make_production_mesh(multi_pod=args.mesh == "pod2"))
+    tcfg = TrainerConfig(seq_len=args.seq_len, global_batch=args.batch,
+                         steps=args.steps, workdir=args.workdir)
+    opt_cfg = AdamWConfig(lr=args.lr, total_steps=args.steps,
+                          warmup_steps=max(1, args.steps // 20),
+                          state_dtype=args.opt_state)
+    trainer = Trainer(cfg, tcfg, opt_cfg, mesh=mesh)
+    result = trainer.train(fail_at=args.fail_at)
+    print(f"done at step {result['final_step']}; "
+          f"first loss {result['log'][0]['loss']:.4f} -> "
+          f"last {result['log'][-1]['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,191 @@
+"""GQA attention: chunked online-softmax (flash-style) prefill/train path and a
+single-token decode path.  The chunked jnp implementation doubles as the
+oracle for the Pallas flash kernel in ``repro.kernels.flash_attention``.
+
+The implementation to use is selected per-call via ``impl=``:
+  * "reference" — pure jnp (runs everywhere; what the dry-run lowers)
+  * "pallas"    — ``repro.kernels.flash_attention`` (TPU target; interpret
+                  mode on CPU in tests)
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models.layers import apply_rope, default_mrope_sections, rms_norm, truncated_normal
+
+_DEFAULT_IMPL = "reference"
+# q chunks of this size bound the live score tensor to (B,H,CHUNK,S_kv):
+# the XLA-level analogue of flash attention's online softmax.
+Q_CHUNK = 1024
+
+
+def set_default_impl(impl: str) -> None:
+    global _DEFAULT_IMPL
+    assert impl in ("reference", "pallas")
+    _DEFAULT_IMPL = impl
+
+
+def _repeat_kv(k: jax.Array, n_rep: int) -> jax.Array:
+    if n_rep == 1:
+        return k
+    b, s, kv, hd = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, kv, n_rep, hd)).reshape(
+        b, s, kv * n_rep, hd)
+
+
+def _attend_block(q, k, v, mask_add, scale):
+    """q (B,Hq,Sq,hd) k/v (B,Hq,Skv,hd) -> (B,Hq,Sq,hd); f32 softmax.
+
+    Masking is ADDITIVE ((Sq,Skv) f32, broadcast into the softmax fusion):
+    a boolean `where` select materializes a (B,H,Sq,Skv) pred tensor, which
+    the §Perf loop measured as the dominant HBM-traffic term in train cells.
+    """
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) * scale
+    if mask_add is not None:
+        scores = scores + mask_add
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs.astype(v.dtype), v)
+
+
+def _causal_mask_add(qpos, kpos):
+    """(Sq,Skv) f32 additive mask: 0 where visible, -1e30 where masked."""
+    return jnp.where(qpos[:, None] >= kpos[None, :], 0.0, -1e30
+                     ).astype(jnp.float32)
+
+
+def multi_head_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                         causal: bool = True,
+                         q_offset: int = 0,
+                         chunk: int = Q_CHUNK,
+                         impl: Optional[str] = None) -> jax.Array:
+    """q (B,Sq,H,hd), k/v (B,Skv,KV,hd) -> (B,Sq,H,hd).
+
+    Scans over q chunks so the score tensor never exceeds
+    (B, H, chunk, Skv) — bounding live memory for 32k prefill.
+    """
+    impl = impl or _DEFAULT_IMPL
+    from repro.perf import perf
+    chunk = perf().attn_chunk if chunk == Q_CHUNK else chunk
+    b, sq, h, hd = q.shape
+    skv, kv = k.shape[1], k.shape[2]
+    scale = 1.0 / math.sqrt(hd)
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        return kops.flash_attention(q, k, v, causal=causal, q_offset=q_offset)
+
+    kh = _repeat_kv(k, h // kv).transpose(0, 2, 1, 3)  # (B,H,Skv,hd)
+    vh = _repeat_kv(v, h // kv).transpose(0, 2, 1, 3)
+    qh = q.transpose(0, 2, 1, 3)                       # (B,H,Sq,hd)
+    kpos = jnp.arange(skv)
+
+    if sq <= 2 * chunk or sq % chunk != 0:
+        qpos = q_offset + jnp.arange(sq)
+        mask = _causal_mask_add(qpos, kpos)[None, None] if causal else None
+        out = _attend_block(qh, kh, vh, mask, scale)
+        return out.transpose(0, 2, 1, 3)
+
+    n_chunks = sq // chunk
+    qh = qh.reshape(b, h, n_chunks, chunk, hd).transpose(2, 0, 1, 3, 4)
+
+    def step(_, args):
+        i, qc = args
+        qpos = q_offset + i * chunk + jnp.arange(chunk)
+        mask = _causal_mask_add(qpos, kpos)[None, None] if causal else None
+        return None, _attend_block(qc, kh, vh, mask, scale)
+
+    _, out = jax.lax.scan(step, None, (jnp.arange(n_chunks), qh))
+    out = out.transpose(1, 2, 0, 3, 4).reshape(b, h, sq, hd)
+    return out.transpose(0, 2, 1, 3)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     cur_len: jax.Array) -> jax.Array:
+    """q (B,1,H,hd); caches (B,Smax,KV,hd); positions >= cur_len are masked."""
+    b, _, h, hd = q.shape
+    kv = k_cache.shape[2]
+    scale = 1.0 / math.sqrt(hd)
+    kh = _repeat_kv(k_cache, h // kv)
+    vh = _repeat_kv(v_cache, h // kv)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, kh).astype(jnp.float32) * scale
+    mask_add = jnp.where(jnp.arange(k_cache.shape[1]) < cur_len, 0.0, -1e30
+                         ).astype(jnp.float32)
+    scores = scores + mask_add[None, None, None, :]
+    probs = jax.nn.softmax(scores, axis=-1).astype(vh.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vh)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Full attention layer (projections + rope + qk-norm)
+# ---------------------------------------------------------------------------
+
+def init_attention(cfg: ModelConfig, rng, dtype):
+    d, qd, kvd, hd = cfg.d_model, cfg.q_dim, cfg.kv_dim, cfg.resolved_head_dim
+    r = jax.random.split(rng, 4)
+    s = 1.0 / math.sqrt(d)
+    p = {
+        "wq": truncated_normal(r[0], (d, qd), s, dtype),
+        "wk": truncated_normal(r[1], (d, kvd), s, dtype),
+        "wv": truncated_normal(r[2], (d, kvd), s, dtype),
+        "wo": truncated_normal(r[3], (qd, d), 1.0 / math.sqrt(qd), dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def qkv_project(cfg: ModelConfig, p, x: jax.Array, positions: jax.Array):
+    """x (B,S,d) -> q (B,S,H,hd), k/v (B,S,KV,hd) with rope + qk-norm."""
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    from repro.distributed.sharding import weight_use
+    q = jnp.einsum("bsd,de->bse", x, weight_use(p["wq"], None, "heads")
+                   ).reshape(b, s, cfg.n_heads, hd)
+    k = jnp.einsum("bsd,de->bse", x, weight_use(p["wk"], None, "kv")
+                   ).reshape(b, s, cfg.n_kv_heads, hd)
+    v = jnp.einsum("bsd,de->bse", x, weight_use(p["wv"], None, "kv")
+                   ).reshape(b, s, cfg.n_kv_heads, hd)
+    q = constrain(q, "batch", None, "heads", None)
+    k = constrain(k, "batch", None, "kv", None)
+    v = constrain(v, "batch", None, "kv", None)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if cfg.rope != "none":
+        sections = default_mrope_sections(hd) if cfg.rope == "mrope" else None
+        q = apply_rope(q, positions, cfg.rope_theta, sections)
+        k = apply_rope(k, positions, cfg.rope_theta, sections)
+    return q, k, v
+
+
+def attention_block(cfg: ModelConfig, p, x: jax.Array, positions: jax.Array,
+                    causal: bool = True, impl: Optional[str] = None) -> jax.Array:
+    q, k, v = qkv_project(cfg, p, x, positions)
+    o = multi_head_attention(q, k, v, causal=causal, impl=impl)
+    o = constrain(o, "batch", None, "heads", None)
+    b, s = x.shape[:2]
+    from repro.distributed.sharding import weight_use
+    return jnp.einsum("bse,ed->bsd", o.reshape(b, s, cfg.q_dim),
+                      weight_use(p["wo"], "heads", None))
+
+
+def attention_decode_block(cfg: ModelConfig, p, x: jax.Array,
+                           k_cache: jax.Array, v_cache: jax.Array,
+                           cur_len: jax.Array, positions: jax.Array):
+    """One-token attention; returns (out, new_k_cache, new_v_cache)."""
+    q, k, v = qkv_project(cfg, p, x, positions)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k.astype(k_cache.dtype), cur_len, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v.astype(v_cache.dtype), cur_len, axis=1)
+    o = decode_attention(q, k_cache, v_cache, cur_len + 1)
+    b = x.shape[0]
+    from repro.distributed.sharding import weight_use
+    out = jnp.einsum("bse,ed->bsd", o.reshape(b, 1, cfg.q_dim),
+                     weight_use(p["wo"], "heads", None))
+    return out, k_cache, v_cache

@@ -1,0 +1,193 @@
+"""Whisper-style encoder-decoder.  The conv/mel frontend is a STUB per the
+assignment: inputs are precomputed frame embeddings (B, S_audio, d_model).
+Encoder = bidirectional attention blocks; decoder = causal self-attn +
+cross-attn + MLP.  Both stacks are scanned.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models.layers import (
+    apply_mlp, embed_tokens, init_embed, init_mlp, logits_from_hidden,
+    rms_norm, sinusoidal_positions, softmax_cross_entropy, truncated_normal,
+)
+
+
+def _init_enc_layer(cfg, rng, dtype):
+    r = jax.random.split(rng, 2)
+    return {
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+        "attn": attn.init_attention(cfg, r[0], dtype),
+        "mlp": init_mlp(cfg, r[1], cfg.d_ff, dtype),
+    }
+
+
+def _init_dec_layer(cfg, rng, dtype):
+    r = jax.random.split(rng, 3)
+    return {
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "ln_x": jnp.ones((cfg.d_model,), dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+        "self_attn": attn.init_attention(cfg, r[0], dtype),
+        "cross_attn": attn.init_attention(cfg, r[1], dtype),
+        "mlp": init_mlp(cfg, r[2], cfg.d_ff, dtype),
+    }
+
+
+def init_encdec(cfg: ModelConfig, rng) -> Dict:
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    ne, nd = cfg.encdec.n_enc_layers, cfg.n_layers
+    r = jax.random.split(rng, ne + nd + 1)
+    enc = [_init_enc_layer(cfg, r[i], dtype) for i in range(ne)]
+    dec = [_init_dec_layer(cfg, r[ne + i], dtype) for i in range(nd)]
+    return {
+        "embed": init_embed(cfg, r[-1], dtype),
+        "enc_norm": jnp.ones((cfg.d_model,), dtype),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+        "enc_layers": jax.tree.map(lambda *x: jnp.stack(x), *enc),
+        "dec_layers": jax.tree.map(lambda *x: jnp.stack(x), *dec),
+    }
+
+
+def encode(cfg: ModelConfig, params, frames: jax.Array, remat: bool = False):
+    """frames (B,S,d) stub embeddings -> encoder output (B,S,d)."""
+    b, s, d = frames.shape
+    pos = sinusoidal_positions(s, d).astype(frames.dtype)
+    x = frames + pos[None]
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+
+    def body(x, lp):
+        h = x + attn.attention_block(cfg, lp["attn"],
+                                     rms_norm(x, lp["ln1"], cfg.norm_eps),
+                                     positions, causal=False)
+        h = h + apply_mlp(cfg, lp["mlp"], rms_norm(h, lp["ln2"], cfg.norm_eps))
+        return h, None
+    if remat:
+        from repro.perf import remat_policy_fn
+        body = jax.checkpoint(body, policy=remat_policy_fn())
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _dec_layer(cfg, lp, x, enc_out, positions, causal=True):
+    h = x + attn.attention_block(cfg, lp["self_attn"],
+                                 rms_norm(x, lp["ln1"], cfg.norm_eps),
+                                 positions, causal=causal)
+    # cross attention: q from decoder, k/v from encoder output
+    xn = rms_norm(h, lp["ln_x"], cfg.norm_eps)
+    q, _, _ = attn.qkv_project(cfg, lp["cross_attn"], xn, positions)
+    ek, ev = _enc_kv(cfg, lp["cross_attn"], enc_out)
+    o = attn.multi_head_attention(q, ek, ev, causal=False)
+    b, s = x.shape[:2]
+    h = h + jnp.einsum("bse,ed->bsd", o.reshape(b, s, cfg.q_dim),
+                       lp["cross_attn"]["wo"])
+    h = h + apply_mlp(cfg, lp["mlp"], rms_norm(h, lp["ln2"], cfg.norm_eps))
+    return h
+
+
+def _enc_kv(cfg, p, enc_out):
+    b, s, _ = enc_out.shape
+    hd = cfg.resolved_head_dim
+    k = jnp.einsum("bsd,de->bse", enc_out, p["wk"]).reshape(b, s, cfg.n_kv_heads, hd)
+    v = jnp.einsum("bsd,de->bse", enc_out, p["wv"]).reshape(b, s, cfg.n_kv_heads, hd)
+    return k, v
+
+
+def encdec_loss(cfg: ModelConfig, params, batch: Dict, remat: bool = True):
+    enc_out = encode(cfg, params, batch["frames"], remat)
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = embed_tokens(params["embed"], tokens)
+    x = x + sinusoidal_positions(s, cfg.d_model).astype(x.dtype)[None]
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+
+    def body(x, lp):
+        return _dec_layer(cfg, lp, x, enc_out, positions), None
+    if remat:
+        from repro.perf import remat_policy_fn
+        body = jax.checkpoint(body, policy=remat_policy_fn())
+    x, _ = jax.lax.scan(body, x, params["dec_layers"])
+    h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_from_hidden(cfg, params["embed"], h)
+    return softmax_cross_entropy(logits, batch["labels"])
+
+
+def encdec_prefill(cfg: ModelConfig, params, batch: Dict):
+    """Encode audio + prefill decoder self/cross KV caches."""
+    enc_out = encode(cfg, params, batch["frames"])
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = embed_tokens(params["embed"], tokens)
+    x = x + sinusoidal_positions(s, cfg.d_model).astype(x.dtype)[None]
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+
+    def body(x, lp):
+        xn = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        q, k, v = attn.qkv_project(cfg, lp["self_attn"], xn, positions)
+        o = attn.multi_head_attention(q, k, v, causal=True)
+        h = x + jnp.einsum("bse,ed->bsd", o.reshape(b, s, cfg.q_dim),
+                           lp["self_attn"]["wo"])
+        xn = rms_norm(h, lp["ln_x"], cfg.norm_eps)
+        qx, _, _ = attn.qkv_project(cfg, lp["cross_attn"], xn, positions)
+        ek, ev = _enc_kv(cfg, lp["cross_attn"], enc_out)
+        o = attn.multi_head_attention(qx, ek, ev, causal=False)
+        h = h + jnp.einsum("bse,ed->bsd", o.reshape(b, s, cfg.q_dim),
+                           lp["cross_attn"]["wo"])
+        h = h + apply_mlp(cfg, lp["mlp"], rms_norm(h, lp["ln2"], cfg.norm_eps))
+        return h, (k, v, ek, ev)
+
+    x, (ks, vs, eks, evs) = jax.lax.scan(body, x, params["dec_layers"])
+    h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_from_hidden(cfg, params["embed"], h[:, -1:, :])[:, 0, :]
+    cache = {"k": ks, "v": vs, "xk": eks, "xv": evs,
+             "enc_len": jnp.int32(enc_out.shape[1])}
+    return cache, logits
+
+
+def make_encdec_cache(cfg: ModelConfig, batch_size: int, max_len: int, dtype):
+    hd = cfg.resolved_head_dim
+    shape = (cfg.n_layers, batch_size, max_len, cfg.n_kv_heads, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+            "xk": jnp.zeros(shape, dtype), "xv": jnp.zeros(shape, dtype),
+            "enc_len": jnp.zeros((), jnp.int32)}
+
+
+def encdec_decode_step(cfg: ModelConfig, params, cache: Dict, batch: Dict):
+    cur_len = batch["cur_len"]
+    x = embed_tokens(params["embed"], batch["token"])
+    b = x.shape[0]
+    # decoder position embedding for the new token
+    pos_table = sinusoidal_positions(cache["k"].shape[2], cfg.d_model)
+    x = x + jax.lax.dynamic_slice_in_dim(pos_table, cur_len, 1, axis=0
+                                         )[None].astype(x.dtype)
+    positions = jnp.broadcast_to(cur_len[None, None], (b, 1)).astype(jnp.int32)
+
+    def body(x, xs):
+        lp, kc, vc, xk, xv = xs
+        xn = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        o, kc, vc = attn.attention_decode_block(cfg, lp["self_attn"], xn, kc, vc,
+                                                cur_len, positions)
+        h = x + o
+        xn = rms_norm(h, lp["ln_x"], cfg.norm_eps)
+        q, _, _ = attn.qkv_project(cfg, lp["cross_attn"], xn, positions)
+        # mask cross-attention to the true encoder length (cache may be padded)
+        o = attn.decode_attention(q, xk, xv, cache["enc_len"])
+        h = h + jnp.einsum("bse,ed->bsd", o.reshape(b, 1, cfg.q_dim),
+                           lp["cross_attn"]["wo"])
+        h = h + apply_mlp(cfg, lp["mlp"], rms_norm(h, lp["ln2"], cfg.norm_eps))
+        return h, (kc, vc)
+
+    x, (k2, v2) = jax.lax.scan(
+        body, x, (params["dec_layers"], cache["k"], cache["v"],
+                  cache["xk"], cache["xv"]))
+    h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_from_hidden(cfg, params["embed"], h)[:, 0, :]
+    return {"k": k2, "v": v2, "xk": cache["xk"], "xv": cache["xv"],
+            "enc_len": cache["enc_len"]}, logits

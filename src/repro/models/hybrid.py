@@ -1,0 +1,173 @@
+"""zamba2-style hybrid: Mamba2 (SSD) backbone + one weight-shared attention
+block applied every `attn_every` layers.
+
+Structure: scan over `n_segments = n_layers // attn_every` segments; each
+segment body is an inner scan over `attn_every` Mamba2 layers followed by the
+shared transformer block (whose weights are closure constants, so HLO stays
+one-segment sized).  KV caches are per *call site*: (n_segments, B, S, KV, hd).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import mamba
+from repro.models.layers import (
+    apply_mlp, embed_tokens, init_embed, init_mlp, logits_from_hidden,
+    rms_norm, softmax_cross_entropy,
+)
+
+
+def _n_segments(cfg: ModelConfig) -> int:
+    return cfg.n_layers // cfg.hybrid.attn_every
+
+
+def init_hybrid(cfg: ModelConfig, rng) -> Dict:
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    n_seg, per = _n_segments(cfg), cfg.hybrid.attn_every
+    r = jax.random.split(rng, cfg.n_layers + 4)
+    layers = [
+        {"ln": jnp.ones((cfg.d_model,), dtype),
+         "mamba": mamba.init_mamba2(cfg, r[i], dtype)}
+        for i in range(cfg.n_layers)
+    ]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+    stacked = jax.tree.map(
+        lambda x: x.reshape((n_seg, per) + x.shape[1:]), stacked)
+    shared = {
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+        "attn": attn.init_attention(cfg, r[-3], dtype),
+        "mlp": init_mlp(cfg, r[-2], cfg.hybrid.shared_d_ff or cfg.d_ff, dtype),
+    }
+    return {
+        "embed": init_embed(cfg, r[-1], dtype),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+        "layers": stacked,        # leading dims (n_seg, per)
+        "shared": shared,
+    }
+
+
+def _segment_fwd(cfg, shared, x, seg_layers, positions, collect_kv,
+                 impl: Optional[str] = None):
+    """Inner scan over `per` mamba layers, then the shared attention block."""
+    def mbody(x, lp):
+        y, _ = mamba.mamba2_forward(cfg, lp["mamba"],
+                                    rms_norm(x, lp["ln"], cfg.norm_eps))
+        return x + y, None
+    x, _ = jax.lax.scan(mbody, x, seg_layers)
+    xn = rms_norm(x, shared["ln1"], cfg.norm_eps)
+    if collect_kv:
+        q, k, v = attn.qkv_project(cfg, shared["attn"], xn, positions)
+        o = attn.multi_head_attention(q, k, v, causal=True, impl=impl)
+        b, s = x.shape[:2]
+        h = x + jnp.einsum("bse,ed->bsd", o.reshape(b, s, cfg.q_dim),
+                           shared["attn"]["wo"])
+        kv = (k, v)
+    else:
+        h = x + attn.attention_block(cfg, shared["attn"], xn, positions,
+                                     causal=True, impl=impl)
+        kv = None
+    h = h + apply_mlp(cfg, shared["mlp"], rms_norm(h, shared["ln2"], cfg.norm_eps))
+    return h, kv
+
+
+def _fwd(cfg: ModelConfig, params, embeds, remat: bool, collect_kv: bool = False,
+         impl: Optional[str] = None):
+    b, s = embeds.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+
+    def body(x, seg_layers):
+        return _segment_fwd(cfg, params["shared"], x, seg_layers, positions,
+                            collect_kv, impl)
+    if remat:
+        from repro.perf import remat_policy_fn
+        body = jax.checkpoint(body, policy=remat_policy_fn())
+    x, kvs = jax.lax.scan(body, embeds, params["layers"])
+    return rms_norm(x, params["final_norm"], cfg.norm_eps), kvs
+
+
+def hybrid_loss(cfg: ModelConfig, params, batch: Dict, remat: bool = True):
+    embeds = embed_tokens(params["embed"], batch["tokens"])
+    h, _ = _fwd(cfg, params, embeds, remat)
+    logits = logits_from_hidden(cfg, params["embed"], h)
+    return softmax_cross_entropy(logits, batch["labels"])
+
+
+def hybrid_prefill(cfg: ModelConfig, params, batch: Dict):
+    embeds = embed_tokens(params["embed"], batch["tokens"])
+    # collect mamba states AND attention kv per segment
+    b, s = embeds.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+
+    def body(x, seg_layers):
+        def mbody(x, lp):
+            y, st = mamba.mamba2_forward(cfg, lp["mamba"],
+                                         rms_norm(x, lp["ln"], cfg.norm_eps))
+            return x + y, st
+        x, sts = jax.lax.scan(mbody, x, seg_layers)
+        xn = rms_norm(x, params["shared"]["ln1"], cfg.norm_eps)
+        q, k, v = attn.qkv_project(cfg, params["shared"]["attn"], xn, positions)
+        o = attn.multi_head_attention(q, k, v, causal=True)
+        h = x + jnp.einsum("bse,ed->bsd", o.reshape(b, s, cfg.q_dim),
+                           params["shared"]["attn"]["wo"])
+        h = h + apply_mlp(cfg, params["shared"]["mlp"],
+                          rms_norm(h, params["shared"]["ln2"], cfg.norm_eps))
+        return h, (sts, (k, v))
+
+    x, (sts, kvs) = jax.lax.scan(body, embeds, params["layers"])
+    h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_from_hidden(cfg, params["embed"], h[:, -1:, :])[:, 0, :]
+    cache = {"ssm": sts, "k": kvs[0], "v": kvs[1]}
+    return cache, logits
+
+
+def make_hybrid_cache(cfg: ModelConfig, batch_size: int, max_len: int, dtype):
+    n_seg, per = _n_segments(cfg), cfg.hybrid.attn_every
+    di = cfg.ssm.expand * cfg.d_model
+    heads, hd_ssd = di // cfg.ssm.head_dim, cfg.ssm.head_dim
+    hd = cfg.resolved_head_dim
+    return {
+        "ssm": {
+            "h": jnp.zeros((n_seg, per, batch_size, heads, hd_ssd, cfg.ssm.d_state),
+                           jnp.float32),
+            "conv": jnp.zeros((n_seg, per, batch_size, cfg.ssm.d_conv - 1, di), dtype),
+        },
+        "k": jnp.zeros((n_seg, batch_size, max_len, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((n_seg, batch_size, max_len, cfg.n_kv_heads, hd), dtype),
+    }
+
+
+def hybrid_decode_step(cfg: ModelConfig, params, cache: Dict, batch: Dict):
+    cur_len = batch["cur_len"]
+    x = embed_tokens(params["embed"], batch["token"])
+    b = x.shape[0]
+    positions = jnp.broadcast_to(cur_len[None, None], (b, 1)).astype(jnp.int32)
+    shared = params["shared"]
+
+    def body(x, xs):
+        seg_layers, ssm_st, kc, vc = xs
+
+        def mbody(x, ys):
+            lp, st = ys
+            y, st2 = mamba.mamba2_decode_step(
+                cfg, lp["mamba"], rms_norm(x, lp["ln"], cfg.norm_eps), st)
+            return x + y, st2
+        x, ssm_st2 = jax.lax.scan(mbody, x, (seg_layers, ssm_st))
+        xn = rms_norm(x, shared["ln1"], cfg.norm_eps)
+        o, kc, vc = attn.attention_decode_block(cfg, shared["attn"], xn, kc, vc,
+                                                cur_len, positions)
+        h = x + o
+        h = h + apply_mlp(cfg, shared["mlp"], rms_norm(h, shared["ln2"], cfg.norm_eps))
+        return h, (ssm_st2, kc, vc)
+
+    x, (ssm2, k2, v2) = jax.lax.scan(
+        body, x, (params["layers"], cache["ssm"], cache["k"], cache["v"]))
+    h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_from_hidden(cfg, params["embed"], h)[:, 0, :]
+    return {"ssm": ssm2, "k": k2, "v": v2}, logits

@@ -1,0 +1,166 @@
+"""Shared layer primitives: norms, RoPE/M-RoPE, MLPs, embeddings, losses.
+
+All functions are pure; params are plain dicts of jnp arrays.  Initializers
+take an explicit rng and return stacked weights when used under scan.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+
+
+def truncated_normal(rng, shape, scale, dtype=jnp.float32):
+    return (jax.random.truncated_normal(rng, -2.0, 2.0, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    from repro.perf import perf
+    dt = x.dtype
+    acc = jnp.float32 if perf().norm_f32 else dt
+    xf = x.astype(acc)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    xf = xf * jax.lax.rsqrt(var + jnp.asarray(eps, acc))
+    return (xf * w.astype(acc)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE / M-RoPE
+# ---------------------------------------------------------------------------
+
+def _rope_angles(positions: jax.Array, dim: int, theta: float) -> jax.Array:
+    """positions (...,) -> angles (..., dim//2)."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    return positions.astype(jnp.float32)[..., None] * inv
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0,
+               mrope_sections: Optional[tuple] = None) -> jax.Array:
+    """Rotate-half RoPE.
+
+    x: (B, S, H, hd).  positions: (B, S) for standard RoPE, or (3, B, S) for
+    M-RoPE (temporal / height / width streams, qwen2-vl style): the head dim is
+    partitioned into ``mrope_sections`` (in half-dim units), each section keyed
+    by its own position stream.
+    """
+    hd = x.shape[-1]
+    half = hd // 2
+    if positions.ndim == 3 and mrope_sections is not None:
+        # angles per stream: (3, B, S, half)
+        ang = _rope_angles(positions, hd, theta)
+        parts = []
+        start = 0
+        for i, sec in enumerate(mrope_sections):
+            parts.append(ang[i, ..., start:start + sec])
+            start += sec
+        angles = jnp.concatenate(parts, axis=-1)           # (B, S, half)
+    else:
+        angles = _rope_angles(positions, hd, theta)        # (B, S, half)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def default_mrope_sections(head_dim: int) -> tuple:
+    """qwen2-vl uses sections (t, h, w) = (16, 24, 24) of the 64 half-dims for
+    hd=128; generalize proportionally."""
+    half = head_dim // 2
+    t = half // 4
+    h = (half - t) // 2
+    w = half - t - h
+    return (t, h, w)
+
+
+def sinusoidal_positions(seq: int, dim: int) -> jax.Array:
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    inv = jnp.exp(-math.log(10000.0) * jnp.arange(0, dim, 2, dtype=jnp.float32) / dim)
+    ang = pos * inv[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(cfg: ModelConfig, rng, d_ff: int, dtype):
+    d = cfg.d_model
+    r = jax.random.split(rng, 3)
+    s_in = 1.0 / math.sqrt(d)
+    s_out = 1.0 / math.sqrt(d_ff)
+    if cfg.act == "swiglu":
+        return {
+            "wi_gate": truncated_normal(r[0], (d, d_ff), s_in, dtype),
+            "wi_up": truncated_normal(r[1], (d, d_ff), s_in, dtype),
+            "wo": truncated_normal(r[2], (d_ff, d), s_out, dtype),
+        }
+    return {
+        "wi": truncated_normal(r[0], (d, d_ff), s_in, dtype),
+        "wo": truncated_normal(r[1], (d_ff, d), s_out, dtype),
+    }
+
+
+def apply_mlp(cfg: ModelConfig, p, x: jax.Array) -> jax.Array:
+    from repro.distributed.sharding import weight_use
+    if cfg.act == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x, weight_use(p["wi_gate"], None, "ff"))
+        u = jnp.einsum("bsd,df->bsf", x, weight_use(p["wi_up"], None, "ff"))
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    else:
+        h = jnp.einsum("bsd,df->bsf", x, weight_use(p["wi"], None, "ff"))
+        if cfg.act == "squared_relu":
+            h = jnp.square(jax.nn.relu(h.astype(jnp.float32))).astype(x.dtype)
+        else:  # gelu
+            h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    from repro.perf import perf
+    if perf().seq_parallel:
+        # SP: the MLP is pointwise over seq — stay sequence-sharded end to
+        # end instead of resharding seq->ff per layer (§Perf iter5 lesson:
+        # the conflicting "ff" constraint forced 2GB/layer seq all-gathers)
+        h = constrain(h, "batch", "seq_mp", None)
+    else:
+        h = constrain(h, "batch", None, "ff")
+    return jnp.einsum("bsf,fd->bsd", h, weight_use(p["wo"], "ff", None))
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head / loss
+# ---------------------------------------------------------------------------
+
+def init_embed(cfg: ModelConfig, rng, dtype):
+    r = jax.random.split(rng, 2)
+    p = {"embed": truncated_normal(r[0], (cfg.vocab, cfg.d_model), 1.0, dtype)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = truncated_normal(
+            r[1], (cfg.d_model, cfg.vocab), 1.0 / math.sqrt(cfg.d_model), dtype)
+    return p
+
+
+def embed_tokens(p, tokens: jax.Array) -> jax.Array:
+    out = jnp.take(p["embed"], tokens, axis=0)
+    return constrain(out, "batch", None, None)
+
+
+def logits_from_hidden(cfg: ModelConfig, p, h: jax.Array) -> jax.Array:
+    from repro.distributed.sharding import weight_use
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", h, weight_use(p["embed"], "vocab", None))
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", h, weight_use(p["unembed"], None, "vocab"))
+    return constrain(logits, "batch", None, "vocab")
+
+
+def softmax_cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean next-token loss; logits (B,S,V) any dtype, labels (B,S) int32."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - ll)

@@ -1,0 +1,322 @@
+"""Mamba1 (selective scan) and Mamba2 (SSD) blocks.
+
+Both use a *hierarchical* scan: an outer ``lax.scan`` over sequence chunks
+carrying the SSM state, and within each chunk either an associative scan
+(mamba1) or the quadratic-intra + state-passing SSD form (mamba2).  The full
+(B, S, d_inner, d_state) hidden-state tensor is therefore never materialized —
+live memory is bounded by one chunk — which is what makes train_4k compile at
+scale and is itself a §Perf design point (chunk size trades scan depth vs
+chunk memory).
+
+Decode is the O(1) single-step recurrence on carried (conv window, ssm state).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models.layers import rms_norm, truncated_normal
+
+
+def _dt_rank(cfg: ModelConfig) -> int:
+    return max(1, cfg.d_model // 16)
+
+
+def _d_inner(cfg: ModelConfig) -> int:
+    return cfg.ssm.expand * cfg.d_model
+
+
+# ===========================================================================
+# Mamba1
+# ===========================================================================
+
+def init_mamba1(cfg: ModelConfig, rng, dtype):
+    d, di, n, k = cfg.d_model, _d_inner(cfg), cfg.ssm.d_state, cfg.ssm.d_conv
+    dtr = _dt_rank(cfg)
+    r = jax.random.split(rng, 6)
+    s = 1.0 / math.sqrt(d)
+    return {
+        "in_proj": truncated_normal(r[0], (d, 2 * di), s, dtype),
+        "conv_w": truncated_normal(r[1], (k, di), 1.0 / math.sqrt(k), dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": truncated_normal(r[2], (di, dtr + 2 * n), 1.0 / math.sqrt(di), dtype),
+        "dt_proj": truncated_normal(r[3], (dtr, di), 1.0 / math.sqrt(dtr), dtype),
+        "dt_bias": jnp.full((di,), -4.6, jnp.float32),  # softplus^-1(0.01)
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, n + 1, dtype=jnp.float32)[None, :], (di, n)) + 0.0),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": truncated_normal(r[4], (di, d), 1.0 / math.sqrt(di), dtype),
+    }
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv: x (B,S,C), w (K,C) -> (B,S,C)."""
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for j in range(k):  # K is 4: unrolled taps beat conv_general on TPU here
+        out = out + pad[:, j:j + x.shape[1], :] * w[j][None, None, :]
+    return out + b[None, None, :]
+
+
+def _chunked_selective_scan(a: jax.Array, b: jax.Array, c: jax.Array,
+                            h0: jax.Array, chunk: int):
+    """a,b (B,S,di,N) f32, c (B,S,N) f32, h0 (B,di,N) -> (y (B,S,di), h_last).
+
+    Outer scan over S//chunk chunks; associative scan inside each chunk.
+    """
+    B, S, di, N = a.shape
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        # identity steps: a=1, b=0 leave the state untouched
+        a = jnp.concatenate([a, jnp.ones((B, pad, di, N), a.dtype)], axis=1)
+        b = jnp.concatenate([b, jnp.zeros((B, pad, di, N), b.dtype)], axis=1)
+        c = jnp.concatenate([c, jnp.zeros((B, pad, N), c.dtype)], axis=1)
+    S_pad = S + pad
+    nc = S_pad // chunk
+    a = a.reshape(B, nc, chunk, di, N).transpose(1, 0, 2, 3, 4)
+    b = b.reshape(B, nc, chunk, di, N).transpose(1, 0, 2, 3, 4)
+    c = c.reshape(B, nc, chunk, N).transpose(1, 0, 2, 3)
+    del S_pad
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a2 * a1, a2 * b1 + b2
+
+    def step(h, xs):
+        ac, bc, cc = xs  # (B,chunk,di,N), (B,chunk,N)
+        cum_a, loc_h = jax.lax.associative_scan(combine, (ac, bc), axis=1)
+        h_t = cum_a * h[:, None] + loc_h                    # (B,chunk,di,N)
+        y = jnp.einsum("btdn,btn->btd", h_t, cc)
+        return h_t[:, -1], y
+
+    h_last, ys = jax.lax.scan(step, h0, (a, b, c))
+    y = ys.transpose(1, 0, 2, 3).reshape(B, S + pad, di)[:, :S]
+    return y, h_last
+
+
+def mamba1_forward(cfg: ModelConfig, p, x: jax.Array,
+                   h0: jax.Array = None) -> Tuple[jax.Array, Dict]:
+    """x (B,S,d) -> (y (B,S,d), state {"h", "conv"})."""
+    B, S, d = x.shape
+    di, n = _d_inner(cfg), cfg.ssm.d_state
+    dtr = _dt_rank(cfg)
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xs = constrain(xs, "batch", None, "dinner")
+    xs = causal_conv1d(xs, p["conv_w"], p["conv_b"])
+    xs = jax.nn.silu(xs.astype(jnp.float32)).astype(x.dtype)
+    proj = jnp.einsum("bsi,ie->bse", xs, p["x_proj"])
+    dt_r, b_ssm, c_ssm = jnp.split(proj, [dtr, dtr + n], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,ri->bsi", dt_r, p["dt_proj"]).astype(jnp.float32)
+        + p["dt_bias"])                                        # (B,S,di) f32
+    A = -jnp.exp(p["A_log"])                                    # (di,N) f32
+    a = jnp.exp(dt[..., None] * A[None, None])                  # (B,S,di,N)
+    a = constrain(a, "batch", None, "dinner", None)
+    b = (dt[..., None] * b_ssm.astype(jnp.float32)[:, :, None, :]
+         * xs.astype(jnp.float32)[..., None])
+    b = constrain(b, "batch", None, "dinner", None)
+    if h0 is None:
+        h0 = jnp.zeros((B, di, n), jnp.float32)
+    y, h_last = _chunked_selective_scan(a, b, c_ssm.astype(jnp.float32),
+                                        h0, cfg.ssm.chunk)
+    y = (y + p["D"][None, None] * xs.astype(jnp.float32)).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"])
+    state = {"h": h_last, "conv": _tail_window(xz[..., :di], cfg.ssm.d_conv - 1)}
+    return out, state
+
+
+def _tail_window(x_pre: jax.Array, w: int) -> jax.Array:
+    """Last `w` pre-activation conv inputs (left-pad with zeros if S < w)."""
+    s = x_pre.shape[1]
+    if s >= w:
+        return x_pre[:, -w:, :]
+    pad = jnp.zeros((x_pre.shape[0], w - s, x_pre.shape[2]), x_pre.dtype)
+    return jnp.concatenate([pad, x_pre], axis=1)
+
+
+def mamba1_decode_step(cfg: ModelConfig, p, x: jax.Array, state: Dict):
+    """x (B,1,d); state {"h" (B,di,N) f32, "conv" (B,K-1,di)}."""
+    B = x.shape[0]
+    di, n, k = _d_inner(cfg), cfg.ssm.d_state, cfg.ssm.d_conv
+    dtr = _dt_rank(cfg)
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    xs, z = jnp.split(xz, 2, axis=-1)                          # (B,1,di)
+    window = jnp.concatenate([state["conv"], xs], axis=1)       # (B,K,di)
+    conv = jnp.einsum("bki,ki->bi", window, p["conv_w"]) + p["conv_b"]
+    xs1 = jax.nn.silu(conv.astype(jnp.float32)).astype(x.dtype)  # (B,di)
+    proj = jnp.einsum("bi,ie->be", xs1, p["x_proj"])
+    dt_r, b_ssm, c_ssm = jnp.split(proj, [dtr, dtr + n], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("br,ri->bi", dt_r, p["dt_proj"]).astype(jnp.float32)
+        + p["dt_bias"])                                        # (B,di)
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt[..., None] * A[None])                        # (B,di,N)
+    bterm = (dt[..., None] * b_ssm.astype(jnp.float32)[:, None, :]
+             * xs1.astype(jnp.float32)[..., None])
+    h = a * state["h"] + bterm
+    y = jnp.einsum("bin,bn->bi", h, c_ssm.astype(jnp.float32))
+    y = (y + p["D"][None] * xs1.astype(jnp.float32)).astype(x.dtype)
+    y = y * jax.nn.silu(z[:, 0].astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bi,id->bd", y, p["out_proj"])[:, None, :]
+    new_state = {"h": h, "conv": window[:, 1:, :]}
+    return out, new_state
+
+
+# ===========================================================================
+# Mamba2 (SSD)
+# ===========================================================================
+
+def _ssd_heads(cfg: ModelConfig) -> int:
+    return _d_inner(cfg) // cfg.ssm.head_dim
+
+
+def init_mamba2(cfg: ModelConfig, rng, dtype):
+    d, di, n = cfg.d_model, _d_inner(cfg), cfg.ssm.d_state
+    h = _ssd_heads(cfg)
+    k = cfg.ssm.d_conv
+    r = jax.random.split(rng, 4)
+    s = 1.0 / math.sqrt(d)
+    # Projections are split into a TP-shardable [z(di), x(di)] matrix and a
+    # small replicated [B(n), C(n), dt(h)] matrix so the "model" axis shards
+    # cleanly (stream boundaries align with shard boundaries).
+    return {
+        "in_proj_zx": truncated_normal(r[0], (d, 2 * di), s, dtype),
+        "in_proj_bcdt": truncated_normal(r[3], (d, 2 * n + h), s, dtype),
+        "conv_w": truncated_normal(r[1], (k, di), 1.0 / math.sqrt(k), dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "A_log": jnp.zeros((h,), jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "norm": jnp.ones((di,), dtype),
+        "out_proj": truncated_normal(r[2], (di, d), 1.0 / math.sqrt(di), dtype),
+    }
+
+
+def _segsum(la: jax.Array) -> jax.Array:
+    """la (..., cs): log-decay per step -> L (..., cs, cs) with
+    L[i,j] = sum_{j<k<=i} la_k for i>=j, -inf otherwise."""
+    cs = la.shape[-1]
+    cum = jnp.cumsum(la, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]
+    mask = jnp.tril(jnp.ones((cs, cs), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_forward(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+                C: jax.Array, chunk: int, h0: jax.Array = None):
+    """Chunked SSD (mamba2).  x (B,S,H,P), dt (B,S,H) f32 (post-softplus),
+    A (H,) f32 negative, B/C (B,S,N).  Returns (y (B,S,H,P), h_last (B,H,P,N)).
+    """
+    Bsz, S, H, P = x.shape
+    N = B.shape[-1]
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        # dt=0 pad steps: decay exp(0)=1 and zero input leave state untouched
+        x = jnp.concatenate([x, jnp.zeros((Bsz, pad, H, P), x.dtype)], axis=1)
+        dt = jnp.concatenate([dt, jnp.zeros((Bsz, pad, H), dt.dtype)], axis=1)
+        B = jnp.concatenate([B, jnp.zeros((Bsz, pad, N), B.dtype)], axis=1)
+        C = jnp.concatenate([C, jnp.zeros((Bsz, pad, N), C.dtype)], axis=1)
+    S_pad = S + pad
+    nc = S_pad // chunk
+    xf = x.astype(jnp.float32).reshape(Bsz, nc, chunk, H, P)
+    dtc = dt.reshape(Bsz, nc, chunk, H)
+    Bc = B.astype(jnp.float32).reshape(Bsz, nc, chunk, N)
+    Cc = C.astype(jnp.float32).reshape(Bsz, nc, chunk, N)
+    la = dtc * A[None, None, None, :]                    # (B,nc,cs,H) log-decay
+    la_h = la.transpose(0, 1, 3, 2)                       # (B,nc,H,cs)
+    Lmat = jnp.exp(_segsum(la_h))                         # (B,nc,H,cs,cs)
+
+    # intra-chunk (quadratic within chunk)
+    scores = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)        # (B,nc,cs,cs)
+    w = scores[:, :, None] * Lmat                         # (B,nc,H,cs,cs)
+    xw = xf * dtc[..., None]                              # dt-weighted inputs
+    y_intra = jnp.einsum("bchij,bcjhp->bcihp", w, xw)
+
+    # chunk states: S_c = sum_j exp(la_last - cum_j) dt_j B_j x_j
+    cum = jnp.cumsum(la_h, axis=-1)                       # (B,nc,H,cs)
+    decay_to_end = jnp.exp(cum[..., -1:] - cum)           # (B,nc,H,cs)
+    sc = jnp.einsum("bchj,bcjn,bcjhp->bchpn", decay_to_end, Bc, xw)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(cum[..., -1])                   # (B,nc,H)
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+
+    def step(h, xs):
+        s_c, dec = xs                                     # (B,H,P,N), (B,H)
+        h_next = dec[..., None, None] * h + s_c
+        return h_next, h                                  # emit state *before* chunk
+
+    scs = sc.transpose(1, 0, 2, 3, 4)
+    decs = chunk_decay.transpose(1, 0, 2)
+    h_last, h_in = jax.lax.scan(step, h0, (scs, decs))
+    h_in = h_in.transpose(1, 0, 2, 3, 4)                  # (B,nc,H,P,N)
+
+    # inter-chunk contribution: y[i] = (C_i . h_in) * exp(cum_i)
+    decay_in = jnp.exp(cum)                               # (B,nc,H,cs)
+    y_inter = jnp.einsum("bcin,bchpn,bchi->bcihp", Cc, h_in, decay_in)
+
+    y = (y_intra + y_inter).reshape(Bsz, S_pad, H, P)[:, :S]
+    return y, h_last
+
+
+def mamba2_forward(cfg: ModelConfig, p, x: jax.Array, h0=None):
+    B, S, d = x.shape
+    di, n = _d_inner(cfg), cfg.ssm.d_state
+    H, P = _ssd_heads(cfg), cfg.ssm.head_dim
+    zx = jnp.einsum("bsd,de->bse", x, p["in_proj_zx"])
+    bcdt = jnp.einsum("bsd,de->bse", x, p["in_proj_bcdt"])
+    z, xs = jnp.split(zx, 2, axis=-1)
+    xs = constrain(xs, "batch", None, "dinner")
+    b_ssm, c_ssm, dt = jnp.split(bcdt, [n, 2 * n], axis=-1)
+    xs = causal_conv1d(xs, p["conv_w"], p["conv_b"])
+    xs = jax.nn.silu(xs.astype(jnp.float32)).astype(x.dtype)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,S,H)
+    A = -jnp.exp(p["A_log"])                                       # (H,)
+    xh = constrain(xs.reshape(B, S, H, P), "batch", None, "heads", None)
+    y, h_last = ssd_forward(xh, dt, A, b_ssm, c_ssm, cfg.ssm.chunk, h0)
+    y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, S, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                 p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"])
+    return out, {"h": h_last, "conv": _tail_window(zx[..., di:],
+                                                   cfg.ssm.d_conv - 1)}
+
+
+def mamba2_decode_step(cfg: ModelConfig, p, x: jax.Array, state: Dict):
+    """x (B,1,d); state {"h" (B,H,P,N), "conv" (B,K-1,di)}."""
+    B = x.shape[0]
+    di, n = _d_inner(cfg), cfg.ssm.d_state
+    H, P = _ssd_heads(cfg), cfg.ssm.head_dim
+    zx = jnp.einsum("bsd,de->bse", x, p["in_proj_zx"])[:, 0]
+    bcdt = jnp.einsum("bsd,de->bse", x, p["in_proj_bcdt"])[:, 0]
+    z, xs = jnp.split(zx, 2, axis=-1)
+    b_ssm, c_ssm, dt = jnp.split(bcdt, [n, 2 * n], axis=-1)
+    window = jnp.concatenate([state["conv"], xs[:, None, :]], axis=1)
+    conv = jnp.einsum("bki,ki->bi", window, p["conv_w"]) + p["conv_b"]
+    xs1 = jax.nn.silu(conv.astype(jnp.float32))                    # (B,di) f32
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])    # (B,H)
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt * A[None])                                      # (B,H)
+    xh = xs1.reshape(B, H, P)
+    binc = jnp.einsum("bh,bn,bhp->bhpn", dt, b_ssm.astype(jnp.float32), xh)
+    h = a[..., None, None] * state["h"] + binc
+    y = jnp.einsum("bhpn,bn->bhp", h, c_ssm.astype(jnp.float32))
+    y = y + p["D"][None, :, None] * xh
+    y = y.reshape(B, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                 p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bi,id->bd", y, p["out_proj"])[:, None, :]
+    return out, {"h": h, "conv": window[:, 1:, :]}

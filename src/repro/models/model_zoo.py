@@ -1,0 +1,139 @@
+"""Unified model dispatch: one ModelFns bundle per architecture family.
+
+Everything downstream (trainer, server, dry-run, benchmarks) talks to models
+exclusively through this interface.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec, jnp_dtype
+from repro.models import encdec, hybrid, ssm_lm, transformer
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelFns:
+    init: Callable           # (rng) -> params
+    loss: Callable           # (params, batch) -> scalar loss
+    prefill: Callable        # (params, batch) -> (cache, logits)
+    decode_step: Callable    # (params, cache, batch) -> (cache, logits)
+    make_cache: Callable     # (batch_size, max_len) -> cache pytree
+    input_specs: Callable    # (shape_spec) -> dict of ShapeDtypeStruct
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def build_model(cfg: ModelConfig) -> ModelFns:
+    dtype = jnp_dtype(cfg)
+    fam = cfg.family
+
+    if fam in ("dense", "moe", "vlm"):
+        def input_specs(spec: ShapeSpec):
+            b, s = spec.global_batch, spec.seq_len
+            if spec.kind == "train":
+                if fam == "vlm":
+                    return {"embeds": _sds((b, s, cfg.d_model), dtype),
+                            "positions": _sds((3, b, s), jnp.int32),
+                            "labels": _sds((b, s), jnp.int32)}
+                return {"tokens": _sds((b, s), jnp.int32),
+                        "labels": _sds((b, s), jnp.int32)}
+            if spec.kind == "prefill":
+                if fam == "vlm":
+                    return {"embeds": _sds((b, s, cfg.d_model), dtype),
+                            "positions": _sds((3, b, s), jnp.int32)}
+                return {"tokens": _sds((b, s), jnp.int32)}
+            # decode: one new token against a cache of capacity s
+            if fam == "vlm":
+                return {"embeds": _sds((b, 1, cfg.d_model), dtype),
+                        "positions": _sds((3, b, 1), jnp.int32),
+                        "cur_len": _sds((), jnp.int32)}
+            return {"token": _sds((b, 1), jnp.int32),
+                    "cur_len": _sds((), jnp.int32)}
+
+        return ModelFns(
+            init=lambda rng: transformer.init_lm(cfg, rng),
+            loss=lambda p, b, **kw: transformer.lm_loss(cfg, p, b, **kw),
+            prefill=lambda p, b: transformer.lm_prefill(cfg, p, b),
+            decode_step=lambda p, c, b: transformer.lm_decode_step(cfg, p, c, b),
+            make_cache=lambda bs, ml: transformer.make_decode_cache(cfg, bs, ml, dtype),
+            input_specs=input_specs,
+        )
+
+    if fam == "ssm":
+        def input_specs(spec: ShapeSpec):
+            b, s = spec.global_batch, spec.seq_len
+            if spec.kind == "train":
+                return {"tokens": _sds((b, s), jnp.int32),
+                        "labels": _sds((b, s), jnp.int32)}
+            if spec.kind == "prefill":
+                return {"tokens": _sds((b, s), jnp.int32)}
+            return {"token": _sds((b, 1), jnp.int32)}
+
+        return ModelFns(
+            init=lambda rng: ssm_lm.init_ssm_lm(cfg, rng),
+            loss=lambda p, b, **kw: ssm_lm.ssm_lm_loss(cfg, p, b, **kw),
+            prefill=lambda p, b: ssm_lm.ssm_lm_prefill(cfg, p, b),
+            decode_step=lambda p, c, b: ssm_lm.ssm_lm_decode_step(cfg, p, c, b),
+            make_cache=lambda bs, ml: ssm_lm.make_ssm_cache(cfg, bs, dtype),
+            input_specs=input_specs,
+        )
+
+    if fam == "hybrid":
+        def input_specs(spec: ShapeSpec):
+            b, s = spec.global_batch, spec.seq_len
+            if spec.kind == "train":
+                return {"tokens": _sds((b, s), jnp.int32),
+                        "labels": _sds((b, s), jnp.int32)}
+            if spec.kind == "prefill":
+                return {"tokens": _sds((b, s), jnp.int32)}
+            return {"token": _sds((b, 1), jnp.int32),
+                    "cur_len": _sds((), jnp.int32)}
+
+        return ModelFns(
+            init=lambda rng: hybrid.init_hybrid(cfg, rng),
+            loss=lambda p, b, **kw: hybrid.hybrid_loss(cfg, p, b, **kw),
+            prefill=lambda p, b: hybrid.hybrid_prefill(cfg, p, b),
+            decode_step=lambda p, c, b: hybrid.hybrid_decode_step(cfg, p, c, b),
+            make_cache=lambda bs, ml: hybrid.make_hybrid_cache(cfg, bs, ml, dtype),
+            input_specs=input_specs,
+        )
+
+    if fam == "audio":
+        def input_specs(spec: ShapeSpec):
+            b, s = spec.global_batch, spec.seq_len
+            if spec.kind == "train":
+                return {"frames": _sds((b, s, cfg.d_model), dtype),
+                        "tokens": _sds((b, s), jnp.int32),
+                        "labels": _sds((b, s), jnp.int32)}
+            if spec.kind == "prefill":
+                return {"frames": _sds((b, s, cfg.d_model), dtype),
+                        "tokens": _sds((b, s), jnp.int32)}
+            return {"token": _sds((b, 1), jnp.int32),
+                    "cur_len": _sds((), jnp.int32)}
+
+        return ModelFns(
+            init=lambda rng: encdec.init_encdec(cfg, rng),
+            loss=lambda p, b, **kw: encdec.encdec_loss(cfg, p, b, **kw),
+            prefill=lambda p, b: encdec.encdec_prefill(cfg, p, b),
+            decode_step=lambda p, c, b: encdec.encdec_decode_step(cfg, p, c, b),
+            make_cache=lambda bs, ml: encdec.make_encdec_cache(cfg, bs, ml, dtype),
+            input_specs=input_specs,
+        )
+
+    raise ValueError(f"unknown family {fam!r}")
+
+
+def abstract_params(cfg: ModelConfig):
+    fns = build_model(cfg)
+    return jax.eval_shape(lambda: fns.init(jax.random.PRNGKey(0)))
+
+
+def abstract_cache(cfg: ModelConfig, batch_size: int, max_len: int):
+    fns = build_model(cfg)
+    return jax.eval_shape(lambda: fns.make_cache(batch_size, max_len))

@@ -1,0 +1,83 @@
+"""falcon-mamba-style attention-free LM: a scan over Mamba1 blocks."""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import mamba
+from repro.models.layers import (
+    embed_tokens, init_embed, logits_from_hidden, rms_norm,
+    softmax_cross_entropy,
+)
+
+
+def init_ssm_lm(cfg: ModelConfig, rng) -> Dict:
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    r = jax.random.split(rng, cfg.n_layers + 1)
+    layers = [
+        {"ln": jnp.ones((cfg.d_model,), dtype),
+         "mamba": mamba.init_mamba1(cfg, r[i + 1], dtype)}
+        for i in range(cfg.n_layers)
+    ]
+    return {
+        "embed": init_embed(cfg, r[0], dtype),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+        "layers": jax.tree.map(lambda *xs: jnp.stack(xs), *layers),
+    }
+
+
+def _fwd(cfg: ModelConfig, params, embeds: jax.Array, remat: bool):
+    def body(x, lp):
+        y, _ = mamba.mamba1_forward(cfg, lp["mamba"],
+                                    rms_norm(x, lp["ln"], cfg.norm_eps))
+        return x + y, None
+    if remat:
+        from repro.perf import remat_policy_fn
+        body = jax.checkpoint(body, policy=remat_policy_fn())
+    x, _ = jax.lax.scan(body, embeds, params["layers"])
+    return rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+
+def ssm_lm_loss(cfg: ModelConfig, params, batch: Dict, remat: bool = True):
+    embeds = embed_tokens(params["embed"], batch["tokens"])
+    h = _fwd(cfg, params, embeds, remat)
+    logits = logits_from_hidden(cfg, params["embed"], h)
+    return softmax_cross_entropy(logits, batch["labels"])
+
+
+def ssm_lm_prefill(cfg: ModelConfig, params, batch: Dict) -> Tuple[Dict, jax.Array]:
+    embeds = embed_tokens(params["embed"], batch["tokens"])
+
+    def body(x, lp):
+        y, st = mamba.mamba1_forward(cfg, lp["mamba"],
+                                     rms_norm(x, lp["ln"], cfg.norm_eps))
+        return x + y, st
+    x, states = jax.lax.scan(body, embeds, params["layers"])
+    h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_from_hidden(cfg, params["embed"], h[:, -1:, :])[:, 0, :]
+    return states, logits  # states: {"h": (L,B,di,N), "conv": (L,B,K-1,di)}
+
+
+def make_ssm_cache(cfg: ModelConfig, batch_size: int, dtype):
+    di = cfg.ssm.expand * cfg.d_model
+    return {
+        "h": jnp.zeros((cfg.n_layers, batch_size, di, cfg.ssm.d_state), jnp.float32),
+        "conv": jnp.zeros((cfg.n_layers, batch_size, cfg.ssm.d_conv - 1, di), dtype),
+    }
+
+
+def ssm_lm_decode_step(cfg: ModelConfig, params, cache: Dict, batch: Dict):
+    x = embed_tokens(params["embed"], batch["token"])
+
+    def body(x, xs):
+        lp, st = xs
+        y, st2 = mamba.mamba1_decode_step(cfg, lp["mamba"],
+                                          rms_norm(x, lp["ln"], cfg.norm_eps), st)
+        return x + y, st2
+    x, new_states = jax.lax.scan(body, x, (params["layers"], cache))
+    h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_from_hidden(cfg, params["embed"], h)[:, 0, :]
+    return new_states, logits

@@ -1,0 +1,221 @@
+"""Decoder-only transformer covering the dense, moe, and vlm families.
+
+Layers are *scanned* (weights stacked on a leading axis) so the lowered HLO is
+depth-independent — essential for compiling 80-layer models in the multi-pod
+dry-run.  MoE-every-2 archs scan over "super-layers" of (dense layer, MoE
+layer) so the scan body stays homogeneous.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models import attention as attn
+from repro.models import moe as moe_lib
+from repro.models.layers import (
+    apply_mlp, embed_tokens, init_embed, init_mlp, logits_from_hidden,
+    rms_norm, softmax_cross_entropy, truncated_normal,
+)
+
+
+def _layer_kind(cfg: ModelConfig, layer_idx_in_super: int) -> str:
+    if cfg.moe is None:
+        return "dense"
+    if cfg.moe.every == 1:
+        return "moe"
+    # every=k: last layer of the super-layer is MoE, the rest dense
+    return "moe" if layer_idx_in_super == cfg.moe.every - 1 else "dense"
+
+
+def init_layer(cfg: ModelConfig, rng, kind: str, dtype):
+    r = jax.random.split(rng, 3)
+    p = {
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+        "attn": attn.init_attention(cfg, r[0], dtype),
+    }
+    if kind == "moe":
+        p["moe"] = moe_lib.init_moe(cfg, r[1], dtype)
+    else:
+        d_ff = cfg.moe.d_ff_dense if (cfg.moe and cfg.moe.d_ff_dense) else cfg.d_ff
+        p["mlp"] = init_mlp(cfg, r[1], d_ff, dtype)
+    return p
+
+
+def init_lm(cfg: ModelConfig, rng) -> Dict:
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    every = cfg.moe.every if cfg.moe else 1
+    n_super = cfg.n_layers // every
+    r = jax.random.split(rng, 2 + n_super * every)
+
+    def stack_layers(kind_idx):
+        keys = [r[2 + i * every + kind_idx] for i in range(n_super)]
+        kind = _layer_kind(cfg, kind_idx)
+        return jax.tree.map(lambda *xs: jnp.stack(xs),
+                            *[init_layer(cfg, k, kind, dtype) for k in keys])
+
+    params = {
+        "embed": init_embed(cfg, r[0], dtype),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+        "layers": tuple(stack_layers(j) for j in range(every)),
+    }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _ffn(cfg: ModelConfig, lp, h: jax.Array, decode: bool) -> Tuple[jax.Array, jax.Array]:
+    if "moe" in lp:
+        if decode:
+            from repro.perf import perf
+            if perf().moe_decode == "dispatch":
+                return moe_lib.apply_moe_decode_dispatch(cfg, lp["moe"], h), \
+                    jnp.float32(0)
+            return moe_lib.apply_moe_decode(cfg, lp["moe"], h), jnp.float32(0)
+        return moe_lib.apply_moe(cfg, lp["moe"], h)
+    return apply_mlp(cfg, lp["mlp"], h), jnp.float32(0)
+
+
+def _layer_fwd(cfg: ModelConfig, lp, x: jax.Array, positions: jax.Array,
+               impl: Optional[str]) -> Tuple[jax.Array, jax.Array]:
+    from repro.perf import perf
+    seq_axis = "seq_mp" if perf().seq_parallel else None
+    h = x + attn.attention_block(cfg, lp["attn"], rms_norm(x, lp["ln1"], cfg.norm_eps),
+                                 positions, causal=True, impl=impl)
+    h = constrain(h, "batch", seq_axis, None)
+    y, aux = _ffn(cfg, lp, rms_norm(h, lp["ln2"], cfg.norm_eps), decode=False)
+    return constrain(h + y, "batch", seq_axis, None), aux
+
+
+def forward_hidden(cfg: ModelConfig, params, embeds: jax.Array,
+                   positions: jax.Array, remat: bool = False,
+                   impl: Optional[str] = None) -> Tuple[jax.Array, jax.Array]:
+    """embeds (B,S,d) -> (hidden (B,S,d), moe_aux scalar)."""
+    sub_stacks = params["layers"]
+
+    def body(x, lps):
+        aux_total = jnp.float32(0)
+        for lp in lps:
+            x, aux = _layer_fwd(cfg, lp, x, positions, impl)
+            aux_total = aux_total + aux
+        return x, aux_total
+
+    if remat:
+        from repro.perf import remat_policy_fn
+        body = jax.checkpoint(body, policy=remat_policy_fn())
+    x, auxs = jax.lax.scan(body, embeds, sub_stacks)
+    return rms_norm(x, params["final_norm"], cfg.norm_eps), jnp.sum(auxs)
+
+
+def lm_loss(cfg: ModelConfig, params, batch: Dict, remat: bool = True) -> jax.Array:
+    if "embeds" in batch:  # vlm stub frontend
+        embeds, positions = batch["embeds"], batch["positions"]
+    else:
+        embeds = embed_tokens(params["embed"], batch["tokens"])
+        b, s = batch["tokens"].shape
+        positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    h, aux = forward_hidden(cfg, params, embeds, positions, remat=remat)
+    logits = logits_from_hidden(cfg, params["embed"], h)
+    return softmax_cross_entropy(logits, batch["labels"]) + 0.01 * aux
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode with stacked KV caches
+# ---------------------------------------------------------------------------
+
+def _collect_kv_layer(cfg, lp, x, positions, impl):
+    """Layer fwd that also returns this layer's (k, v) for the cache."""
+    xn = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    q, k, v = attn.qkv_project(cfg, lp["attn"], xn, positions)
+    o = attn.multi_head_attention(q, k, v, causal=True, impl=impl)
+    b, s = x.shape[:2]
+    from repro.distributed.sharding import weight_use
+    h = x + jnp.einsum("bse,ed->bsd", o.reshape(b, s, cfg.q_dim),
+                       weight_use(lp["attn"]["wo"], "heads", None))
+    y, _ = _ffn(cfg, lp, rms_norm(h, lp["ln2"], cfg.norm_eps), decode=False)
+    return constrain(h + y, "batch", None, None), (k, v)
+
+
+def lm_prefill(cfg: ModelConfig, params, batch: Dict,
+               impl: Optional[str] = None) -> Tuple[Dict, jax.Array]:
+    """Returns (cache, last-position logits (B,V)). Cache capacity == S."""
+    if "embeds" in batch:
+        embeds, positions = batch["embeds"], batch["positions"]
+    else:
+        b, s = batch["tokens"].shape
+        embeds = embed_tokens(params["embed"], batch["tokens"])
+        positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+
+    def body(x, lps):
+        kvs = []
+        for lp in lps:
+            x, kv = _collect_kv_layer(cfg, lp, x, positions, impl)
+            kvs.append(kv)
+        return x, tuple(kvs)
+
+    x, kvs = jax.lax.scan(body, embeds, params["layers"])
+    h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_from_hidden(cfg, params["embed"], h[:, -1:, :])[:, 0, :]
+    # Cache is stored SLOT-MAJOR: [slot0 layers..., slot1 layers...]; decode
+    # slices it the same way, so ordering is consistent end-to-end.
+    ks = jnp.concatenate([kv[0] for kv in kvs], axis=0) if len(kvs) > 1 else kvs[0][0]
+    vs = jnp.concatenate([kv[1] for kv in kvs], axis=0) if len(kvs) > 1 else kvs[0][1]
+    cache = {"k": ks, "v": vs}
+    return cache, logits
+
+
+def make_decode_cache(cfg: ModelConfig, batch_size: int, max_len: int, dtype):
+    hd = cfg.resolved_head_dim
+    shape = (cfg.n_layers, batch_size, max_len, cfg.n_kv_heads, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def lm_decode_step(cfg: ModelConfig, params, cache: Dict, batch: Dict,
+                   impl: Optional[str] = None) -> Tuple[Dict, jax.Array]:
+    """One decode step.  batch: {"token" (B,1) | "embeds" (B,1,d), "cur_len" ()}.
+
+    cache: {"k": (L,B,Smax,KV,hd), "v": ...}; the new token's K/V are written
+    at cur_len; logits for the new token are returned.
+    """
+    cur_len = batch["cur_len"]
+    if "embeds" in batch:
+        x, positions = batch["embeds"], batch["positions"]
+    else:
+        x = embed_tokens(params["embed"], batch["token"])
+        b = batch["token"].shape[0]
+        positions = jnp.broadcast_to(cur_len[None, None], (b, 1)).astype(jnp.int32)
+
+    every = cfg.moe.every if cfg.moe else 1
+
+    def body(x, xs):
+        lps, kcs, vcs = xs
+        new_kc, new_vc = [], []
+        for i, lp in enumerate(lps):
+            kc, vc = kcs[i], vcs[i]
+            xn = rms_norm(x, lp["ln1"], cfg.norm_eps)
+            o, kc, vc = attn.attention_decode_block(cfg, lp["attn"], xn, kc, vc,
+                                                    cur_len, positions)
+            h = x + o
+            y, _ = _ffn(cfg, lp, rms_norm(h, lp["ln2"], cfg.norm_eps), decode=True)
+            x = h + y
+            new_kc.append(kc)
+            new_vc.append(vc)
+        return x, (tuple(new_kc), tuple(new_vc))
+
+    n_super = cfg.n_layers // every
+    # Slot-major cache layout (matches lm_prefill).
+    k_slots = tuple(cache["k"][i * n_super:(i + 1) * n_super] for i in range(every))
+    v_slots = tuple(cache["v"][i * n_super:(i + 1) * n_super] for i in range(every))
+    x, (new_k, new_v) = jax.lax.scan(body, x, (params["layers"], k_slots, v_slots))
+    cache = {"k": jnp.concatenate(new_k, axis=0) if every > 1 else new_k[0],
+             "v": jnp.concatenate(new_v, axis=0) if every > 1 else new_v[0]}
+    h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_from_hidden(cfg, params["embed"], h)[:, 0, :]
+    return cache, logits

@@ -1,0 +1,76 @@
+"""Performance knobs for the §Perf hillclimbing loop.
+
+Each knob is an env var so a dry-run subprocess can flip it without code
+edits; ``benchmarks/hillclimb.py`` drives the hypothesis -> change ->
+re-lower -> measure cycles and records them in EXPERIMENTS.md §Perf.
+
+Knobs (defaults = the paper-faithful baseline):
+  REPRO_REMAT_POLICY   dots | nothing
+      dots    — save no-batch-dim dot outputs (fast recompute, high memory)
+      nothing — save only layer boundaries (lowest memory, ~30% fwd recompute)
+  REPRO_TRAIN_SHARDING fsdp_tp | dp
+      fsdp_tp — weights sharded over (data x model); the baseline
+      dp      — pure data parallelism over ALL mesh axes, weights replicated
+                (what Auto Distribution picks for small models when the
+                per-device memory constraint is satisfied)
+  REPRO_SEQ_PARALLEL   0 | 1
+      1 — residual stream sharded over the model axis on the sequence dim
+          between attention/mlp regions (Korthikanti-style SP)
+  REPRO_MOE_DECODE     gather | dispatch
+      gather   — each token gathers its experts' weights (baseline)
+      dispatch — capacity-based token all-to-all to expert shards
+  REPRO_ATTN_CHUNK     int (q-chunk for the online-softmax attention path)
+  REPRO_NORM_F32       1 | 0
+      0 — rms_norm computes in the activation dtype (bf16): prevents the
+          CPU-backend convert-folding that upgrades downstream dots and
+          collectives to f32 (on TPU the MXU keeps bf16 inputs regardless)
+  REPRO_OPT_STATE      f32 | int8
+      int8 — block-quantized AdamW moments (~2.03 B/param instead of 8)
+  REPRO_WEIGHT_AG      0 | 1
+      1 — constrain layer weights to TP-only inside the layer body, forcing
+          GSPMD to ALL-GATHER the (small) FSDP weight shards instead of
+          partial-summing + all-reducing the (huge) activations — the fix
+          for the dominant collective in the qwen2-vl train cell (§Perf)
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+
+
+@dataclasses.dataclass(frozen=True)
+class PerfConfig:
+    remat_policy: str = "dots"
+    train_sharding: str = "fsdp_tp"
+    seq_parallel: bool = False
+    moe_decode: str = "gather"
+    attn_chunk: int = 1024
+    norm_f32: bool = True
+    opt_state: str = "f32"
+    weight_ag: bool = False
+
+
+def perf() -> PerfConfig:
+    return PerfConfig(
+        remat_policy=os.environ.get("REPRO_REMAT_POLICY", "dots"),
+        train_sharding=os.environ.get("REPRO_TRAIN_SHARDING", "fsdp_tp"),
+        seq_parallel=os.environ.get("REPRO_SEQ_PARALLEL", "0") == "1",
+        moe_decode=os.environ.get("REPRO_MOE_DECODE", "gather"),
+        attn_chunk=int(os.environ.get("REPRO_ATTN_CHUNK", "1024")),
+        norm_f32=os.environ.get("REPRO_NORM_F32", "1") == "1",
+        opt_state=os.environ.get("REPRO_OPT_STATE", "f32"),
+        weight_ag=os.environ.get("REPRO_WEIGHT_AG", "0") == "1",
+    )
+
+
+def remat_policy_fn():
+    import jax
+    p = perf().remat_policy
+    if p == "nothing":
+        return jax.checkpoint_policies.nothing_saveable
+    return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+
+
+def knob_snapshot() -> dict:
+    p = perf()
+    return dataclasses.asdict(p)

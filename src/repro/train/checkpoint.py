@@ -1,0 +1,111 @@
+"""Checkpointing: atomic, numpy-backed, resumable.
+
+Layout:  <dir>/step_<N>/
+            manifest.json       {step, leaf paths, shapes, dtypes, extra}
+            arrays.npz          flattened leaves (keyed by index)
+
+Writes go to a temp dir + atomic rename, so a node failure mid-save never
+corrupts the latest checkpoint.  ``restore_latest`` picks the newest complete
+manifest — the trainer's crash-recovery path (see fault_tolerance.py).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: Any,
+                    extra: Optional[Dict] = None, keep: int = 3) -> str:
+    ckpt_dir = Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    leaves, treedef = _flatten(tree)
+    tmp = Path(tempfile.mkdtemp(dir=ckpt_dir, prefix=".tmp_"))
+    try:
+        def to_np(l):
+            a = np.asarray(l)
+            # numpy can't serialize ml_dtypes (bfloat16 etc.): widen to f32;
+            # restore casts back to the target leaf dtype.
+            if a.dtype.kind not in "fiub" or a.dtype.itemsize == 0:
+                a = a.astype(np.float32)
+            elif a.dtype.name == "bfloat16":
+                a = a.astype(np.float32)
+            return a
+        arrays = {f"a{i}": to_np(l) for i, l in enumerate(leaves)}
+        np.savez(tmp / "arrays.npz", **arrays)
+        manifest = {
+            "step": int(step),
+            "n_leaves": len(leaves),
+            "treedef": str(treedef),
+            "extra": extra or {},
+            "complete": True,
+        }
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        final = ckpt_dir / f"step_{step:08d}"
+        if final.exists():
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    _gc(ckpt_dir, keep)
+    return str(final)
+
+
+def _gc(ckpt_dir: Path, keep: int):
+    steps = sorted(ckpt_dir.glob("step_*"))
+    for old in steps[:-keep]:
+        shutil.rmtree(old, ignore_errors=True)
+
+
+def list_checkpoints(ckpt_dir: str):
+    d = Path(ckpt_dir)
+    if not d.exists():
+        return []
+    out = []
+    for p in sorted(d.glob("step_*")):
+        m = p / "manifest.json"
+        if m.exists():
+            try:
+                mf = json.loads(m.read_text())
+                if mf.get("complete"):
+                    out.append((mf["step"], str(p)))
+            except json.JSONDecodeError:
+                continue
+    return out
+
+
+def restore_checkpoint(path: str, tree_like: Any) -> Tuple[Any, Dict]:
+    """Restore into the structure of `tree_like` (shape/dtype validated)."""
+    p = Path(path)
+    manifest = json.loads((p / "manifest.json").read_text())
+    data = np.load(p / "arrays.npz")
+    leaves, treedef = _flatten(tree_like)
+    if len(leaves) != manifest["n_leaves"]:
+        raise ValueError(
+            f"checkpoint has {manifest['n_leaves']} leaves, expected {len(leaves)}")
+    new_leaves = []
+    for i, ref in enumerate(leaves):
+        arr = data[f"a{i}"]
+        if hasattr(ref, "shape") and tuple(arr.shape) != tuple(ref.shape):
+            raise ValueError(f"leaf {i} shape {arr.shape} != {ref.shape}")
+        new_leaves.append(jax.numpy.asarray(arr, dtype=getattr(ref, "dtype", None)))
+    return jax.tree.unflatten(treedef, new_leaves), manifest
+
+
+def restore_latest(ckpt_dir: str, tree_like: Any) -> Optional[Tuple[Any, Dict]]:
+    ckpts = list_checkpoints(ckpt_dir)
+    if not ckpts:
+        return None
+    return restore_checkpoint(ckpts[-1][1], tree_like)

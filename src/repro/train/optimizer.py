@@ -1,0 +1,128 @@
+"""AdamW with global-norm clipping, cosine schedule, and an optional
+block-quantized int8 moment representation (a distributed-optimization
+memory trick: optimizer HBM drops from 8 B/param to ~2.03 B/param).
+
+Pure-pytree implementation (no optax dependency).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_frac: float = 0.1
+    # "f32" | "int8": int8 stores m/v block-quantized (block 256, f32 scales).
+    state_dtype: str = "f32"
+    quant_block: int = 256
+
+
+def cosine_lr(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = cfg.lr * step / max(1, cfg.warmup_steps)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / max(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(math.pi * t))
+    return jnp.where(step < cfg.warmup_steps, warm, cfg.lr * cos)
+
+
+# -- int8 block quantization -------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+class Quantized:
+    """Block-quantized f32 tensor: int8 payload + per-block f32 scales."""
+
+    def __init__(self, q, scale, shape, pad):
+        self.q, self.scale, self.shape, self.pad = q, scale, shape, pad
+
+    def tree_flatten(self):
+        return (self.q, self.scale), (self.shape, self.pad)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], aux[0], aux[1])
+
+
+def quantize(x: jax.Array, block: int) -> Quantized:
+    flat = x.reshape(-1)
+    pad = (-flat.size) % block
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return Quantized(q, scale.astype(jnp.float32), x.shape, pad)
+
+
+def dequantize(d: Quantized) -> jax.Array:
+    flat = (d.q.astype(jnp.float32) * d.scale).reshape(-1)
+    if d.pad:
+        flat = flat[:flat.size - d.pad]
+    return flat.reshape(d.shape)
+
+
+class AdamW:
+    def __init__(self, cfg: AdamWConfig):
+        self.cfg = cfg
+
+    def init(self, params) -> Dict[str, Any]:
+        def zero_like(p):
+            z = jnp.zeros(p.shape, jnp.float32)
+            if self.cfg.state_dtype == "int8":
+                return quantize(z, self.cfg.quant_block)
+            return z
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(zero_like, params),
+            "v": jax.tree.map(zero_like, params),
+        }
+
+    def update(self, grads, state, params) -> Tuple[Any, Dict[str, Any], Dict]:
+        cfg = self.cfg
+        step = state["step"] + 1
+        lr = cosine_lr(cfg, step)
+
+        leaves = jax.tree.leaves(grads)
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in leaves))
+        scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-12))
+
+        bc1 = 1 - cfg.b1 ** step.astype(jnp.float32)
+        bc2 = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            if cfg.state_dtype == "int8":
+                m, v = dequantize(m), dequantize(v)
+            g = g.astype(jnp.float32) * scale
+            m = cfg.b1 * m + (1 - cfg.b1) * g
+            v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+            mh, vh = m / bc1, v / bc2
+            delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+            if cfg.state_dtype == "int8":
+                m = quantize(m, cfg.quant_block)
+                v = quantize(v, cfg.quant_block)
+            return new_p, m, v
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state["m"])
+        flat_v = treedef.flatten_up_to(state["v"])
+        out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+        new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+        new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+        metrics = {"lr": lr, "grad_norm": gnorm}
+        return new_params, {"step": step, "m": new_m, "v": new_v}, metrics

@@ -1,0 +1,130 @@
+"""Training loop: sharded steps, checkpoint/restart, straggler detection.
+
+Runs anywhere a mesh runs: the production 16x16 / 2x16x16 pods (via
+launch/train.py) or the 1-device CPU mesh (smoke tests, examples).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.distributed import sharding as shd
+from repro.distributed.fault_tolerance import FaultTolerantLoop, StragglerDetector
+from repro.launch.steps import make_train_step
+from repro.models import build_model
+from repro.train.checkpoint import restore_latest, save_checkpoint
+from repro.train.data import TokenPipeline
+from repro.train.optimizer import AdamWConfig
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    seq_len: int = 512
+    global_batch: int = 8
+    steps: int = 100
+    checkpoint_every: int = 50
+    log_every: int = 10
+    workdir: Optional[str] = None
+    seed: int = 0
+    remat: bool = True
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, tcfg: TrainerConfig,
+                 opt_cfg: Optional[AdamWConfig] = None, mesh=None):
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.mesh = mesh
+        self.fns = build_model(cfg)
+        step_fn, self.opt = make_train_step(cfg, opt_cfg, remat=tcfg.remat)
+        if mesh is not None:
+            params_abs = jax.eval_shape(self.fns.init, jax.random.PRNGKey(0))
+            pspecs = shd.param_specs(cfg, params_abs, mesh)
+            opt_abs = jax.eval_shape(self.opt.init, params_abs)
+            ospecs = shd.opt_state_specs(pspecs, opt_abs, mesh)
+            self._step = jax.jit(
+                step_fn,
+                in_shardings=(shd.to_named(pspecs, mesh),
+                              shd.to_named(ospecs, mesh), None),
+                out_shardings=(shd.to_named(pspecs, mesh),
+                               shd.to_named(ospecs, mesh), None),
+                donate_argnums=(0, 1))
+        else:
+            self._step = jax.jit(step_fn, donate_argnums=(0, 1))
+        self.pipeline = TokenPipeline(
+            cfg.vocab, tcfg.seq_len, tcfg.global_batch, seed=tcfg.seed,
+            family=cfg.family, d_model=cfg.d_model)
+        self.metrics_log = []
+        self.detector = StragglerDetector()
+
+    # -- state ---------------------------------------------------------------
+    def init_state(self):
+        params = self.fns.init(jax.random.PRNGKey(self.tcfg.seed))
+        return {"params": params, "opt": self.opt.init(params)}
+
+    def try_restore(self, state):
+        if not self.tcfg.workdir:
+            return state, 0
+        r = restore_latest(self.tcfg.workdir, state)
+        if r is None:
+            return state, 0
+        tree, manifest = r
+        return tree, manifest["step"]
+
+    def save(self, state, step):
+        if self.tcfg.workdir:
+            save_checkpoint(self.tcfg.workdir, step, state)
+
+    # -- loop ----------------------------------------------------------------
+    def train(self, fail_at: Optional[int] = None) -> Dict:
+        """Runs the loop; `fail_at` injects one failure (tests/examples)."""
+        state = self.init_state()
+        state, start = self.try_restore(state)
+        failed = [False]
+
+        ctx = self.mesh if self.mesh is not None else _null_ctx()
+        with ctx:
+            step = start
+            while step < self.tcfg.steps:
+                batch_np = self.pipeline.batch_at(step)
+                batch = {k: jax.numpy.asarray(v) for k, v in batch_np.items()}
+                if fail_at is not None and step == fail_at and not failed[0]:
+                    failed[0] = True
+                    # simulated node failure -> restore path
+                    state = self.init_state()
+                    r = self.try_restore(state)
+                    state, step = r
+                    continue
+                t0 = time.monotonic()
+                params, opt, metrics = self._step(state["params"],
+                                                  state["opt"], batch)
+                state = {"params": params, "opt": opt}
+                loss = float(metrics["loss"])
+                dt = time.monotonic() - t0
+                self.detector.record(step, dt)
+                if step % self.tcfg.log_every == 0 or step == self.tcfg.steps - 1:
+                    toks = self.tcfg.global_batch * self.tcfg.seq_len
+                    self.metrics_log.append(
+                        {"step": step, "loss": loss, "sec": dt,
+                         "tokens_per_s": toks / max(dt, 1e-9)})
+                    print(f"step {step:5d} loss {loss:.4f} "
+                          f"({toks / max(dt,1e-9):,.0f} tok/s)", flush=True)
+                step += 1
+                if step % self.tcfg.checkpoint_every == 0:
+                    self.save(state, step)
+            self.save(state, step)
+        return {"state": state, "final_step": step, "log": self.metrics_log,
+                "stragglers": len(self.detector.events)}
+
+
+class _null_ctx:
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        return False

@@ -1,0 +1,65 @@
+"""Buffer schedule (§3.3.1): liveness, aliasing, bin-packing planners."""
+from hypothesis import given, settings, strategies as st
+
+from repro.core.buffer_schedule import (BufferSpec, liveness_from_term,
+                                        naive_peak, plan_greedy, plan_optimal,
+                                        validate_plan)
+from repro.core.tensor_ir import T, inp, matmul, unary
+
+
+def test_liveness_intervals():
+    x = inp("x", (8, 8))
+    y = unary(unary(x, kind="exp"), kind="relu")
+    bufs = liveness_from_term(y)
+    assert bufs[0].end >= bufs[0].start
+    # x is used by the first unary only
+    assert bufs[0].end == 1
+
+
+def test_alias_zero_copy():
+    x = inp("x", (8, 8))
+    v = T("reshape", x, shape=(64,))  # view op
+    bufs = liveness_from_term(unary(x, kind="exp"))
+    assert all(b.alias_of is None for b in bufs)
+
+
+def test_reuse_beats_naive():
+    x = inp("x", (64, 64))
+    t = unary(unary(unary(x, kind="exp"), kind="relu"), kind="exp")
+    bufs = liveness_from_term(t, dtype_bytes=4)
+    off, peak = plan_greedy(bufs)
+    assert validate_plan(bufs, off)
+    assert peak < naive_peak(bufs)
+
+
+def test_optimal_not_worse_than_greedy():
+    t = matmul(unary(matmul(inp("a", (32, 32)), inp("b", (32, 32))),
+                     kind="exp"), inp("c", (32, 32)))
+    bufs = liveness_from_term(t, dtype_bytes=4)
+    _, pg = plan_greedy(bufs)
+    oo, po = plan_optimal(bufs)
+    assert validate_plan(bufs, oo)
+    assert po <= pg <= naive_peak(bufs)
+
+
+@st.composite
+def interval_set(draw):
+    n = draw(st.integers(2, 10))
+    out = []
+    for i in range(n):
+        start = draw(st.integers(0, 20))
+        end = start + draw(st.integers(1, 10))
+        size = draw(st.sampled_from([64, 128, 256, 1024]))
+        out.append(BufferSpec(f"b{i}", size, start, end))
+    return out
+
+
+@given(interval_set())
+@settings(max_examples=50, deadline=None)
+def test_planners_always_valid(bufs):
+    og, pg = plan_greedy(bufs)
+    assert validate_plan(bufs, og)
+    assert pg <= naive_peak(bufs)
+    oo, po = plan_optimal(bufs)
+    assert validate_plan(bufs, oo)
+    assert po <= pg + 1e-9

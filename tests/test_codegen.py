@@ -1,0 +1,46 @@
+"""Codegen: packed-layout array transforms + term compilation properties."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.codegen import _pack_array, _unpack_array, compile_term, kernel_plan
+from repro.core.schedule.minlp import MINLPSolver, Schedule
+from repro.core.tensor_ir import T, binary, inp, matmul, transpose, unary
+
+
+@given(st.sampled_from([(8, 128), (128, 128)]),
+       st.sampled_from([(128, 256), (256, 128), (256, 256)]))
+@settings(max_examples=12, deadline=None)
+def test_pack_unpack_roundtrip(lanes, shape):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=shape), jnp.float32)
+    packed = _pack_array(x, lanes, (0, 1))
+    assert packed.shape == (shape[0] // lanes[0], shape[1] // lanes[1],
+                            lanes[0], lanes[1])
+    back = _unpack_array(packed, lanes, (0, 1), 2)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(x))
+
+
+def test_pack_is_blocked_layout():
+    x = jnp.arange(16).reshape(4, 4)
+    p = _pack_array(x, (2, 2), (0, 1))
+    # block (0,0) is the top-left 2x2 tile
+    np.testing.assert_array_equal(np.asarray(p[0, 0]), [[0, 1], [4, 5]])
+
+
+def test_compile_term_all_ops():
+    rng = np.random.default_rng(1)
+    a = inp("a", (8, 8))
+    t = binary(unary(transpose(a, (1, 0)), kind="exp"),
+               inp("b", (8, 8)), kind="mul")
+    f = compile_term(t)
+    env = {"a": jnp.asarray(rng.normal(size=(8, 8)), jnp.float32),
+           "b": jnp.asarray(rng.normal(size=(8, 8)), jnp.float32)}
+    want = jnp.exp(env["a"].T) * env["b"]
+    np.testing.assert_allclose(np.asarray(f(**env)), np.asarray(want),
+                               rtol=1e-6)
+
+
+def test_kernel_plan_defaults_on_empty_schedule():
+    plan = kernel_plan(Schedule({}, 0.0, 0.0, 0.0, 0))
+    assert plan.block_m >= 128 and plan.block_k >= 128

@@ -1,0 +1,73 @@
+"""E-graph core: union-find, congruence closure, saturation (§3.1.1)."""
+import pytest
+
+from repro.core.egraph import EGraph, ENode
+from repro.core.rewrite import TRANSPOSE_RULES
+from repro.core.tensor_ir import binary, inp, matmul, term_shape, transpose, unary
+
+
+def test_hashcons_dedup():
+    eg = EGraph()
+    a = eg.add_term(inp("A", (4, 4)))
+    b = eg.add_term(inp("A", (4, 4)))
+    assert a == b
+    assert eg.size() == 1
+
+
+def test_union_merges_classes():
+    eg = EGraph()
+    a = eg.add_term(inp("A", (4, 4)))
+    b = eg.add_term(inp("B", (4, 4)))
+    r = eg.union(a, b)
+    assert eg.find(a) == eg.find(b) == r
+    assert len(eg.nodes(r)) == 2
+
+
+def test_union_shape_mismatch_raises():
+    eg = EGraph()
+    a = eg.add_term(inp("A", (4, 4)))
+    b = eg.add_term(inp("B", (4, 8)))
+    with pytest.raises(ValueError):
+        eg.union(a, b)
+
+
+def test_congruence_closure():
+    # f(a), f(b): after union(a, b), congruence must merge f(a) and f(b)
+    eg = EGraph()
+    a = eg.add_term(inp("A", (4, 4)))
+    b = eg.add_term(inp("B", (4, 4)))
+    fa = eg.add(ENode("unary", (a,), (("kind", "exp"),)))
+    fb = eg.add(ENode("unary", (b,), (("kind", "exp"),)))
+    assert eg.find(fa) != eg.find(fb)
+    eg.union(a, b)
+    eg.rebuild()
+    assert eg.find(fa) == eg.find(fb)
+
+
+def test_analysis_shape_inference():
+    eg = EGraph()
+    t = matmul(inp("A", (8, 16)), inp("B", (16, 32)))
+    cid = eg.add_term(t)
+    assert eg.shape(cid) == (8, 32)
+    assert eg.shape(cid) == term_shape(t)
+
+
+def test_saturation_reaches_fixpoint():
+    eg = EGraph()
+    A = inp("A", (8, 8))
+    t = transpose(transpose(A, (1, 0)), (1, 0))
+    root = eg.add_term(t)
+    stats = eg.saturate(TRANSPOSE_RULES, max_iters=10)
+    assert stats["iters"] <= 10
+    # double transpose folded: root class contains the input node itself
+    ops = {n.op for n in eg.nodes(root)}
+    assert "input" in ops
+
+
+def test_saturation_node_limit():
+    eg = EGraph()
+    x = inp("x", (8, 8))
+    t = binary(transpose(x, (1, 0)), transpose(x, (1, 0)), kind="add")
+    eg.add_term(t)
+    stats = eg.saturate(TRANSPOSE_RULES, max_iters=50, node_limit=12)
+    assert eg.size() <= 12 + 10  # one iteration of slack

@@ -1,0 +1,54 @@
+"""Extraction: greedy DP vs WPMaxSAT vs specialized B&B (§3.1.1)."""
+import pytest
+
+from repro.core.egraph import EGraph
+from repro.core.extraction import (branch_bound_extract, greedy_extract,
+                                   wpmaxsat_extract)
+from repro.core.rewrite import TRANSPOSE_RULES
+from repro.core.tensor_ir import binary, inp, matmul, transpose, unary
+
+
+def _fig2_graph():
+    A, B = inp("A", (32, 16)), inp("B", (16, 32))
+    term = transpose(unary(binary(transpose(A, (1, 0)), B, kind="add"),
+                           kind="exp"), (1, 0))
+    eg = EGraph()
+    root = eg.add_term(term)
+    eg.saturate(TRANSPOSE_RULES, max_iters=8)
+    return eg, root
+
+
+def test_extractors_agree_on_cost():
+    eg, root = _fig2_graph()
+    c_greedy, _ = greedy_extract(eg, root)
+    c_sat, _ = wpmaxsat_extract(eg, root)
+    c_bb, _ = branch_bound_extract(eg, root)
+    assert c_sat <= c_greedy + 1e-12
+    assert abs(c_bb - c_sat) < 1e-12
+
+
+def test_extraction_selects_one_node_per_class():
+    eg, root = _fig2_graph()
+    _, choice = wpmaxsat_extract(eg, root)
+    for cid, node in choice.items():
+        assert node in eg.nodes(cid)
+        for ch in node.children:
+            assert eg.find(ch) in choice  # children resolved
+
+
+def test_memory_cap_infeasible_raises():
+    eg, root = _fig2_graph()
+    with pytest.raises(ValueError):
+        branch_bound_extract(eg, root, mem_fn=lambda n: 100.0, cap=50.0)
+
+
+def test_memory_cap_binding():
+    eg, root = _fig2_graph()
+    # every node costs 1 unit of memory: cap = #classes is feasible
+    c_free, ch_free = branch_bound_extract(eg, root, mem_fn=lambda n: 1.0,
+                                           cap=1000.0)
+    used = len(ch_free)
+    c_tight, ch_tight = branch_bound_extract(eg, root, mem_fn=lambda n: 1.0,
+                                             cap=float(used))
+    assert len(ch_tight) <= used
+    assert c_tight >= c_free - 1e-15

@@ -1,0 +1,52 @@
+"""HLO analyzer: dot FLOPs, while trip counts, collective byte parsing."""
+import jax
+import jax.numpy as jnp
+
+from repro.launch.hlo_analysis import analyze_hlo, collective_time_s, roofline_terms
+
+
+def _compile_text(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_dot_flops_simple():
+    a = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    b = jax.ShapeDtypeStruct((256, 64), jnp.float32)
+    text = _compile_text(lambda x, y: x @ y, a, b)
+    res = analyze_hlo(text, 1)
+    want = 2 * 128 * 64 * 256
+    assert abs(res["flops"] - want) / want < 0.01
+
+
+def test_while_trip_count_multiplies_flops():
+    a = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+
+    def scanned(x):
+        def body(c, _):
+            return c @ x, None
+        out, _ = jax.lax.scan(body, x, None, length=7)
+        return out
+
+    text = _compile_text(scanned, a)
+    res = analyze_hlo(text, 1)
+    one = 2 * 64 * 64 * 64
+    # 7 iterations of one matmul (allow slack for fusion rewrites)
+    assert res["flops"] >= 6 * one
+    assert res["flops"] <= 9 * one
+
+
+def test_collective_model_factors():
+    coll = {"all-reduce": {"bytes": 1e9, "count": 1, "max_group": 4}}
+    t_ar = collective_time_s(coll)
+    coll2 = {"all-gather": {"bytes": 1e9, "count": 1, "max_group": 4}}
+    t_ag = collective_time_s(coll2)
+    assert abs(t_ar / t_ag - 2.0) < 0.01  # ring all-reduce moves 2x
+
+
+def test_roofline_bottleneck_identification():
+    r = roofline_terms({"flops": 1e15, "bytes_traffic": 1e9,
+                        "collectives": {}})
+    assert r["bottleneck"] == "compute"
+    r = roofline_terms({"flops": 1e9, "bytes_traffic": 1e13,
+                        "collectives": {}})
+    assert r["bottleneck"] == "memory"

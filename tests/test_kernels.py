@@ -1,0 +1,139 @@
+"""Per-kernel allclose vs the ref.py oracles: shape + dtype sweeps
+(interpret mode executes the kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.models.attention import multi_head_attention
+
+RNG = np.random.default_rng(42)
+
+
+def _arr(shape, dtype, scale=0.5):
+    return jnp.asarray(RNG.normal(size=shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n", [(128, 128, 128), (256, 512, 128),
+                                   (384, 256, 512)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_sweep(m, k, n, dtype):
+    a, b = _arr((m, k), dtype), _arr((k, n), dtype)
+    out = ops.matmul(a, b, block_m=128, block_n=128, block_k=128)
+    want = ref.matmul_ref(a, b)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-3
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol * k ** 0.5)
+
+
+def test_matmul_block_divisibility_assert():
+    a, b = _arr((100, 128), jnp.float32), _arr((128, 128), jnp.float32)
+    with pytest.raises(AssertionError):
+        ops.matmul(a, b, block_m=64, block_n=64, block_k=64)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("h,kv", [(4, 4), (4, 2), (8, 1)])
+def test_flash_attention_sweep(causal, h, kv):
+    b, s, hd = 2, 256, 64
+    q = _arr((b, s, h, hd), jnp.float32, 0.3)
+    k = _arr((b, s, kv, hd), jnp.float32, 0.3)
+    v = _arr((b, s, kv, hd), jnp.float32, 0.3)
+    out = ops.flash_attention(q, k, v, causal=causal, block_q=64, block_kv=64)
+    want = multi_head_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_flash_attention_bf16():
+    b, s, h, hd = 1, 128, 2, 64
+    q = _arr((b, s, h, hd), jnp.bfloat16, 0.3)
+    k = _arr((b, s, h, hd), jnp.bfloat16, 0.3)
+    v = _arr((b, s, h, hd), jnp.bfloat16, 0.3)
+    out = ops.flash_attention(q, k, v, block_q=64, block_kv=64)
+    want = multi_head_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=5e-2, atol=5e-2)
+
+
+def test_flash_attention_q_offset_decode_chunk():
+    """Cross-attention of a q suffix against a longer kv prefix."""
+    b, h, hd = 1, 2, 64
+    sq, skv = 64, 256
+    q = _arr((b, sq, h, hd), jnp.float32, 0.3)
+    k = _arr((b, skv, h, hd), jnp.float32, 0.3)
+    v = _arr((b, skv, h, hd), jnp.float32, 0.3)
+    out = ops.flash_attention(q, k, v, causal=True, q_offset=skv - sq,
+                              block_q=64, block_kv=64)
+    want = multi_head_attention(q, k, v, causal=True, q_offset=skv - sq)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(64, 128), (256, 512), (8, 1024)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_sweep(shape, dtype):
+    x, w = _arr(shape, dtype), _arr(shape[-1:], dtype)
+    out = ops.rmsnorm(x, w)
+    want = ref.rmsnorm_ref(x, w)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_rmsnorm_3d():
+    x, w = _arr((2, 32, 256), jnp.float32), _arr((256,), jnp.float32)
+    np.testing.assert_allclose(np.asarray(ops.rmsnorm(x, w)),
+                               np.asarray(ref.rmsnorm_ref(x, w)),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# ssm scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("t,d,n", [(16, 32, 8), (64, 128, 16), (32, 64, 4)])
+def test_ssm_scan_sweep(t, d, n):
+    b = 2
+    a = jnp.asarray(RNG.uniform(0.6, 0.99, size=(b, t, d, n)), jnp.float32)
+    bb = _arr((b, t, d, n), jnp.float32, 0.1)
+    c = _arr((b, t, n), jnp.float32)
+    h0 = _arr((b, d, n), jnp.float32, 0.1)
+    y, hl = ops.ssm_scan(a, bb, c, h0, block_d=min(32, d))
+    y_ref, hl_ref = jax.vmap(ref.ssm_scan_ref)(a, bb, c, h0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(hl), np.asarray(hl_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_ssm_scan_carries_state():
+    """Chunked invocation with carried h == one long scan."""
+    b, t, d, n = 1, 32, 16, 4
+    a = jnp.asarray(RNG.uniform(0.6, 0.99, size=(b, t, d, n)), jnp.float32)
+    bb = _arr((b, t, d, n), jnp.float32, 0.1)
+    c = _arr((b, t, n), jnp.float32)
+    h0 = jnp.zeros((b, d, n), jnp.float32)
+    y_full, h_full = ops.ssm_scan(a, bb, c, h0, block_d=16)
+    y1, h1 = ops.ssm_scan(a[:, :16], bb[:, :16], c[:, :16], h0, block_d=16)
+    y2, h2 = ops.ssm_scan(a[:, 16:], bb[:, 16:], c[:, 16:], h1, block_d=16)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], axis=1)),
+                               np.asarray(y_full), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(h2), np.asarray(h_full),
+                               rtol=1e-5, atol=1e-5)

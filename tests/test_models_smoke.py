@@ -1,0 +1,143 @@
+"""Per-arch smoke tests: reduced same-family config, one forward/train step
+on CPU, output shapes + no NaNs; decode-vs-prefill logit consistency."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import SHAPES, get_config, list_archs, reduced_config
+from repro.models import build_model
+
+ALL_ARCHS = list_archs()
+
+
+def _batch_for(cfg, b, s, rng):
+    toks = jax.random.randint(rng, (b, s), 1, cfg.vocab)
+    labels = jnp.roll(toks, -1, axis=1)
+    if cfg.family == "vlm":
+        return {"embeds": jax.random.normal(rng, (b, s, cfg.d_model)) * 0.02,
+                "positions": jnp.broadcast_to(
+                    jnp.arange(s)[None, None], (3, b, s)).astype(jnp.int32),
+                "labels": labels}
+    if cfg.family == "audio":
+        return {"frames": jax.random.normal(rng, (b, s, cfg.d_model)) * 0.02,
+                "tokens": toks, "labels": labels}
+    return {"tokens": toks, "labels": labels}
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_train_step(arch):
+    cfg = reduced_config(get_config(arch))
+    fns = build_model(cfg)
+    params = fns.init(jax.random.PRNGKey(0))
+    batch = _batch_for(cfg, 2, 16, jax.random.PRNGKey(1))
+    loss, grads = jax.value_and_grad(
+        lambda p: fns.loss(p, batch, remat=False))(params)
+    assert jnp.isfinite(loss), f"{arch}: loss not finite"
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in jax.tree.leaves(grads)))
+    assert jnp.isfinite(gn) and gn > 0, f"{arch}: bad grad norm"
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_prefill_shapes(arch):
+    cfg = reduced_config(get_config(arch))
+    fns = build_model(cfg)
+    params = fns.init(jax.random.PRNGKey(0))
+    b, s = 2, 8
+    batch = _batch_for(cfg, b, s, jax.random.PRNGKey(1))
+    batch.pop("labels")
+    cache, logits = fns.prefill(params, batch)
+    assert logits.shape == (b, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+
+def _embed_cache(cache_small, cache_big):
+    def place(small, big):
+        if small.shape == big.shape:
+            return small
+        for ax in range(small.ndim):
+            if small.shape[ax] != big.shape[ax]:
+                return jax.lax.dynamic_update_slice_in_dim(
+                    big, small.astype(big.dtype), 0, axis=ax)
+        return small
+    return jax.tree.map(place, cache_small, cache_big)
+
+
+@pytest.mark.parametrize("arch", ["qwen3-0.6b", "nemotron-4-15b",
+                                  "falcon-mamba-7b", "zamba2-2.7b",
+                                  "whisper-small", "olmoe-1b-7b",
+                                  "llama4-maverick-400b-a17b"])
+def test_decode_matches_prefill(arch):
+    cfg = reduced_config(get_config(arch))
+    if cfg.moe is not None:  # avoid capacity drops in the comparison
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=16.0))
+    fns = build_model(cfg)
+    params = fns.init(jax.random.PRNGKey(0))
+    B, S = 2, 8
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S + 1), 1, cfg.vocab)
+    if cfg.family == "audio":
+        frames = jax.random.normal(jax.random.PRNGKey(2), (B, S, cfg.d_model)) * 0.1
+        b1 = {"frames": frames, "tokens": toks[:, :S]}
+        b2 = {"frames": frames, "tokens": toks[:, :S + 1]}
+    else:
+        b1, b2 = {"tokens": toks[:, :S]}, {"tokens": toks[:, :S + 1]}
+    cache1, _ = fns.prefill(params, b1)
+    _, logits2 = fns.prefill(params, b2)
+    if cfg.family == "ssm":
+        cache, dbatch = cache1, {"token": toks[:, S:S + 1]}
+    else:
+        cache = _embed_cache(cache1, fns.make_cache(B, S + 4))
+        dbatch = {"token": toks[:, S:S + 1], "cur_len": jnp.int32(S)}
+    _, logits_dec = fns.decode_step(params, cache, dbatch)
+    np.testing.assert_allclose(np.asarray(logits_dec, np.float32),
+                               np.asarray(logits2, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_full_configs_match_assignment():
+    """The registered full configs carry the exact assigned hyperparams."""
+    expect = {
+        "stablelm-3b": (32, 2560, 32, 32, 6912, 50304),
+        "qwen3-0.6b": (28, 1024, 16, 8, 3072, 151936),
+        "nemotron-4-15b": (32, 6144, 48, 8, 24576, 256000),
+        "phi3-mini-3.8b": (32, 3072, 32, 32, 8192, 32064),
+        "falcon-mamba-7b": (64, 4096, 1, 1, 0, 65024),
+        "qwen2-vl-72b": (80, 8192, 64, 8, 29568, 152064),
+        "llama4-maverick-400b-a17b": (48, 5120, 40, 8, 8192, 202048),
+        "olmoe-1b-7b": (16, 2048, 16, 16, 1024, 50304),
+        "whisper-small": (12, 768, 12, 12, 3072, 51865),
+        "zamba2-2.7b": (54, 2560, 32, 32, 10240, 32000),
+    }
+    for arch, (L, d, h, kv, ff, v) in expect.items():
+        cfg = get_config(arch)
+        assert (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                cfg.d_ff, cfg.vocab) == (L, d, h, kv, ff, v), arch
+
+
+def test_param_counts_in_band():
+    """Analytic param counts should be in the ballpark of the arch names."""
+    bands = {"qwen3-0.6b": (0.4e9, 0.8e9),
+             "falcon-mamba-7b": (6e9, 9e9),
+             "qwen2-vl-72b": (60e9, 80e9),
+             "llama4-maverick-400b-a17b": (330e9, 460e9),
+             "olmoe-1b-7b": (6e9, 8.5e9),
+             "nemotron-4-15b": (12e9, 18e9)}
+    for arch, (lo, hi) in bands.items():
+        n = get_config(arch).param_count()
+        assert lo <= n <= hi, f"{arch}: {n:.3e} outside [{lo:.0e},{hi:.0e}]"
+    # MoE active params
+    a = get_config("llama4-maverick-400b-a17b").active_param_count()
+    assert 12e9 <= a <= 25e9
+    a = get_config("olmoe-1b-7b").active_param_count()
+    assert 0.8e9 <= a <= 2e9
+
+
+def test_long500k_skip_rules():
+    from repro.configs.base import cell_is_runnable
+    assert not cell_is_runnable(get_config("qwen3-0.6b"), SHAPES["long_500k"])[0]
+    assert cell_is_runnable(get_config("falcon-mamba-7b"), SHAPES["long_500k"])[0]
+    assert cell_is_runnable(get_config("zamba2-2.7b"), SHAPES["long_500k"])[0]

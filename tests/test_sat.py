@@ -1,0 +1,65 @@
+"""DPLL SAT + weighted partial MaxSAT (property-tested vs brute force)."""
+import itertools
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sat import sat_solve, wpmaxsat
+
+
+def test_sat_simple():
+    # (x1 | x2) & (!x1 | x2) & (!x2 | x3)
+    m = sat_solve(3, [[1, 2], [-1, 2], [-2, 3]])
+    assert m is not None
+    assert m.get(2) is True and m.get(3) is True
+
+
+def test_unsat():
+    assert sat_solve(1, [[1], [-1]]) is None
+
+
+def test_wpmaxsat_prefers_cheap():
+    # must pick x1 or x2; x1 costs 5, x2 costs 1
+    r = wpmaxsat(2, [[1, 2]], [(-1, 5.0), (-2, 1.0)])
+    assert r is not None
+    assert r.assignment.get(2) is True or r.cost <= 1.0
+    assert abs(r.cost - 1.0) < 1e-9
+
+
+def _brute_force(n, hard, soft):
+    best = None
+    for bits in itertools.product([False, True], repeat=n):
+        assign = {i + 1: bits[i] for i in range(n)}
+        if not all(any(assign[abs(l)] == (l > 0) for l in cl) for cl in hard):
+            continue
+        cost = sum(w for lit, w in soft if assign[abs(lit)] != (lit > 0))
+        if best is None or cost < best:
+            best = cost
+    return best
+
+
+@st.composite
+def maxsat_instance(draw):
+    n = draw(st.integers(2, 6))
+    n_clauses = draw(st.integers(1, 8))
+    hard = []
+    for _ in range(n_clauses):
+        k = draw(st.integers(1, 3))
+        cl = [draw(st.integers(1, n)) * draw(st.sampled_from([1, -1]))
+              for _ in range(k)]
+        hard.append(cl)
+    soft = [(-(i + 1), float(draw(st.integers(1, 9))))
+            for i in range(n) if draw(st.booleans())]
+    return n, hard, soft
+
+
+@given(maxsat_instance())
+@settings(max_examples=60, deadline=None)
+def test_wpmaxsat_matches_brute_force(inst):
+    n, hard, soft = inst
+    expected = _brute_force(n, hard, soft)
+    r = wpmaxsat(n, hard, soft)
+    if expected is None:
+        assert r is None
+    else:
+        assert r is not None
+        assert abs(r.cost - expected) < 1e-9

@@ -1,0 +1,54 @@
+"""SBP abstraction (§3.1.3): shard shapes, boxing costs, signatures."""
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sbp import (B, P, Placement, S, boxing_cost, boxing_ops,
+                            memory_bytes, shard_shape, valid_ndsbps)
+
+PL = Placement(("data", "model"), (4, 2))
+
+
+def test_shard_shape():
+    assert shard_shape((8, 16), (S(0), S(1)), PL) == (2, 8)
+    assert shard_shape((8, 16), (B, B), PL) == (8, 16)
+    assert shard_shape((6, 16), (S(0), B), PL) is None  # 6 % 4 != 0
+
+
+def test_memory_bytes():
+    assert memory_bytes((8, 16), (S(0), S(1)), PL, 2) == 2 * 2 * 8
+    assert memory_bytes((8, 16), (B, B), PL, 2) == 2 * 8 * 16
+
+
+def test_boxing_kinds():
+    shape = (8, 16)
+    ops = boxing_ops((S(0), B), (B, B), shape, PL)
+    assert ops == [("all-gather", 2 * 8 * 16 // 4 * 4, 4)]
+    ops = boxing_ops((P, B), (B, B), shape, PL)
+    assert ops[0][0] == "all-reduce"
+    ops = boxing_ops((P, B), (S(0), B), shape, PL)
+    assert ops[0][0] == "reduce-scatter"
+    ops = boxing_ops((S(0), B), (S(1), B), shape, PL)
+    assert ops[0][0] == "all-to-all"
+    assert boxing_ops((B, B), (S(0), B), shape, PL) == [("slice", 0, 4)]
+
+
+def test_all_reduce_twice_all_gather():
+    shape = (64, 64)
+    ar = boxing_cost((P, B), (B, B), shape, PL)
+    ag = boxing_cost((S(0), B), (B, B), shape, PL)
+    assert ar > ag  # 2x the ring traffic
+
+
+def test_valid_ndsbps_divisibility():
+    nds = valid_ndsbps((8, 6), PL)
+    # model axis (size 2): S(1) valid on dim of size 6; data axis (4): not
+    assert (S(0), S(1)) in nds
+    assert all(shard_shape((8, 6), nd, PL) is not None for nd in nds)
+
+
+@given(st.tuples(st.sampled_from([4, 8, 16, 64]), st.sampled_from([4, 8, 32])))
+@settings(max_examples=20, deadline=None)
+def test_boxing_cost_nonnegative(shape):
+    for src in valid_ndsbps(shape, PL, allow_partial=True):
+        for dst in valid_ndsbps(shape, PL):
+            c = boxing_cost(src, dst, shape, PL)
+            assert c is None or c >= 0.0

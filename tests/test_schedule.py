@@ -1,0 +1,58 @@
+"""Auto Schedule (§3.2): MINLP capacity/coverage + MCTS improvement."""
+from repro.core.schedule import (attention_tile_graph, auto_schedule,
+                                 matmul_tile_graph, mlp_tile_graph)
+from repro.core.schedule.mcts import MCTS, enumerate_actions, apply_action
+from repro.core.schedule.minlp import MINLPSolver, VMEM_BYTES
+from repro.core.codegen import kernel_plan
+
+
+def test_minlp_capacity_respected():
+    tg = matmul_tile_graph(4096, 4096, 4096)
+    sched = MINLPSolver().solve(tg)
+    assert sched.feasible
+    assert sched.vmem_peak <= VMEM_BYTES
+    tiles = sched.tiles[0]
+    for l in ("i", "j", "k"):
+        assert tg.extent(l) % tiles[l] == 0  # domain coverage (Eq. 10)
+
+
+def test_merge_action_legality():
+    tg = attention_tile_graph(1024, 128)
+    acts = enumerate_actions(tg)
+    merges = [a for a in acts if a[0] == "merge"]
+    # mm1 -> exp and exp -> mm2 are the only legal fusions
+    assert ("merge", (0, 1)) in merges
+    assert ("merge", (1, 2)) in merges
+    assert ("merge", (0, 2)) not in merges
+
+
+def test_fusion_reduces_memory_time():
+    """exp is pure data movement: fusing it into mm1 must cut HBM traffic."""
+    tg = attention_tile_graph(2048, 128)
+    solver = MINLPSolver()
+    unfused = solver.solve(tg)
+    fused = solver.solve(tg.merge(0, 1))
+    assert fused.t_mem < unfused.t_mem
+
+
+def test_mcts_never_regresses():
+    tg = attention_tile_graph(2048, 128)
+    state, sched, baseline = auto_schedule(tg, iterations=20)
+    assert sched.latency <= baseline.latency + 1e-15
+
+
+def test_mcts_finds_fusion_when_memory_bound():
+    # small head dim -> exp traffic dominates -> fusion should be chosen
+    tg = attention_tile_graph(4096, 64)
+    state, sched, baseline = auto_schedule(tg, iterations=30)
+    fused_sizes = [len(g.ops) for g in state.groups]
+    assert max(fused_sizes) >= 2
+
+
+def test_kernel_plan_alignment():
+    tg = matmul_tile_graph(2048, 2048, 2048)
+    sched = MINLPSolver().solve(tg)
+    plan = kernel_plan(sched)
+    assert plan.block_m % 128 == 0
+    assert plan.block_n % 128 == 0
+    assert plan.block_k % 128 == 0
