@@ -1,13 +1,15 @@
 """Compiler-pass benchmarks: the paper's three modules measured on their own
-running examples (modeled latencies + search wall time).
+running examples (modeled latencies + search wall time), all driven through
+the unified ``repro.pipeline`` entry point.
 
   * vectorize — Fig. 3 attention-like chain + MLP chains: cost reduction,
     pack/unpack counts, search time.
   * distribution — SBP search on MLP block (Fig. 6 granularity): plan cost
     and peak memory, unconstrained vs memory-capped.
   * schedule — MCTS+MINLP vs unfused baseline on matmul / mlp / attention
-    tile graphs (Fig. 7).
+    terms (Fig. 7), lowered through the Term -> TileGraph bridge.
   * buffer — liveness bin-packing vs naive allocation.
+  * pipeline — the full chain end-to-end, cold and cache-warm.
 """
 from __future__ import annotations
 
@@ -15,68 +17,101 @@ import time
 
 from repro.core.buffer_schedule import (liveness_from_term, naive_peak,
                                         plan_greedy, plan_optimal)
-from repro.core.distribution import auto_distribute
-from repro.core.sbp import Placement
-from repro.core.schedule import (attention_tile_graph, auto_schedule,
-                                 matmul_tile_graph, mlp_tile_graph)
 from repro.core.tensor_ir import inp, matmul, unary
-from repro.core.vectorize import auto_vectorize, count_ops
+from repro.core.vectorize import count_ops
+from repro.pipeline import CompileOptions, CompileTarget, Compiler
 
 
-def bench_vectorize():
+def _fig3_term():
+    return matmul(unary(matmul(inp("Q", (1024, 128)), inp("K", (128, 1024))),
+                        kind="exp"), inp("V", (1024, 128)))
+
+
+def _mlp_term(t=4096, d=1024, f=4096, act="exp"):
+    x = inp("x", (t, d))
+    w1, w2 = inp("w1", (d, f)), inp("w2", (f, d))
+    return matmul(unary(matmul(x, w1), kind=act), w2)
+
+
+def bench_vectorize(quick: bool = False):
     rows = []
     cases = {
-        "fig3_attention": matmul(unary(matmul(inp("Q", (1024, 128)),
-                                              inp("K", (128, 1024))),
-                                       kind="exp"), inp("V", (1024, 128))),
-        "mlp_chain": matmul(unary(matmul(inp("x", (2048, 512)),
-                                         inp("w1", (512, 2048))), kind="relu"),
-                            inp("w2", (2048, 512))),
+        "fig3_attention": _fig3_term(),
+        "mlp_chain": _mlp_term(2048, 512, 2048, act="relu"),
     }
+    opts = CompileOptions(extraction="greedy", schedule=False, cache=False)
     for name, term in cases.items():
+        compiler = Compiler(cache_dir=None)
         t0 = time.monotonic()
-        cost, packed, stats = auto_vectorize(term, use_sat=False)
+        res = compiler.compile(term, options=opts)
         dt = time.monotonic() - t0
-        speedup = stats["baseline_cost"] / cost
+        r = res.report
         rows.append((f"vectorize_{name}", dt * 1e6,
-                     f"modeled_speedup={speedup:.2f}x_packs={count_ops(packed, 'pack')}"))
+                     f"modeled_speedup={r.modeled_speedup:.2f}x"
+                     f"_packs={count_ops(res.term, 'pack')}"))
     return rows
 
 
-def bench_distribution():
+def bench_distribution(quick: bool = False):
     rows = []
-    x = inp("x", (4096, 1024))
-    w1, w2 = inp("w1", (1024, 4096)), inp("w2", (4096, 1024))
-    term = matmul(unary(matmul(x, w1), kind="exp"), w2)
-    pl = Placement(("data", "model"), (4, 4))
+    term = _mlp_term()
+    mesh = dict(mesh_axes=("data", "model"), mesh_sizes=(4, 4))
+    opts = CompileOptions(extraction="greedy", vectorize=False,
+                          schedule=False, cache=False)
+    compiler = Compiler(cache_dir=None)
     t0 = time.monotonic()
-    free = auto_distribute(term, pl, use_sat=False)
+    free = compiler.compile(term, target=CompileTarget(**mesh),
+                            options=opts).report.distribution
     dt = time.monotonic() - t0
     rows.append(("distribute_mlp_free", dt * 1e6,
-                 f"cost={free.cost:.3e}s_peak={free.peak_memory/1e6:.1f}MB"))
+                 f"cost={free['cost']:.3e}s"
+                 f"_peak={free['peak_memory'] / 1e6:.1f}MB"))
     t0 = time.monotonic()
-    capped = auto_distribute(term, pl, mem_capacity=25_000_000)
+    capped = compiler.compile(
+        term, target=CompileTarget(**mesh, memory_capacity=25_000_000),
+        options=opts).report.distribution
     dt = time.monotonic() - t0
     rows.append(("distribute_mlp_cap25MB", dt * 1e6,
-                 f"cost={capped.cost:.3e}s_peak={capped.peak_memory/1e6:.1f}MB"))
+                 f"cost={capped['cost']:.3e}s"
+                 f"_peak={capped['peak_memory'] / 1e6:.1f}MB"))
     return rows
 
 
-def bench_schedule():
+def bench_schedule(quick: bool = False):
     rows = []
-    for name, tg in [("matmul4k", matmul_tile_graph(4096, 4096, 4096)),
-                     ("mlp", mlp_tile_graph(8192, 1024, 4096)),
-                     ("attention", attention_tile_graph(4096, 64))]:
+    if quick:
+        cases = [
+            ("matmul1k", matmul(inp("A", (1024, 1024)), inp("B", (1024, 1024)))),
+            ("mlp", _mlp_term(2048, 512, 1024, act="silu")),
+            ("attention", matmul(unary(matmul(inp("Q", (1024, 64)),
+                                              inp("K", (64, 1024))),
+                                       kind="exp"),
+                                 inp("V", (1024, 64)))),
+        ]
+    else:
+        cases = [
+            ("matmul4k", matmul(inp("A", (4096, 4096)), inp("B", (4096, 4096)))),
+            ("mlp", _mlp_term(8192, 1024, 4096, act="silu")),
+            ("attention", matmul(unary(matmul(inp("Q", (4096, 64)),
+                                              inp("K", (64, 4096))),
+                                       kind="exp"),
+                                 inp("V", (4096, 64)))),
+        ]
+    opts = CompileOptions(extraction="greedy", vectorize=False,
+                          schedule_iterations=8 if quick else 25, cache=False)
+    for name, term in cases:
+        compiler = Compiler(cache_dir=None)
         t0 = time.monotonic()
-        state, sched, base = auto_schedule(tg, iterations=25)
+        s = compiler.compile(term, options=opts).report.schedule
         dt = time.monotonic() - t0
+        fused = max(len(g) for g in s["groups"])
         rows.append((f"schedule_{name}", dt * 1e6,
-                     f"latency={sched.latency:.3e}s_vs_base={base.latency:.3e}s"
-                     f"_fused={max(len(g.ops) for g in state.groups)}"))
+                     f"latency={s['latency']:.3e}s"
+                     f"_vs_base={s['baseline_latency']:.3e}s_fused={fused}"))
     return rows
 
 
-def bench_buffer():
+def bench_buffer(quick: bool = False):
     term = matmul(unary(matmul(inp("a", (512, 512)), inp("b", (512, 512))),
                         kind="exp"), inp("c", (512, 512)))
     bufs = liveness_from_term(term, dtype_bytes=2)
@@ -88,12 +123,35 @@ def bench_buffer():
              f"naive={naive_peak(bufs)}_greedy={pg}_optimal={po}")]
 
 
+def bench_pipeline(quick: bool = False):
+    """Full end-to-end chain: cold compile, then cache-warm recompile."""
+    rows = []
+    compiler = Compiler(cache_dir=None)
+    term = _fig3_term()
+    opts = CompileOptions(schedule_iterations=8 if quick else 25)
+    t0 = time.monotonic()
+    res = compiler.compile(term, options=opts)
+    cold = time.monotonic() - t0
+    r = res.report
+    passes = "_".join(f"{k}={v * 1e3:.1f}ms" for k, v in r.pass_times.items())
+    rows.append(("pipeline_fig3_cold", cold * 1e6,
+                 f"speedup={r.modeled_speedup:.2f}x_{passes}"))
+    t0 = time.monotonic()
+    res2 = compiler.compile(term, options=opts)
+    warm = time.monotonic() - t0
+    rows.append(("pipeline_fig3_warm", warm * 1e6,
+                 f"cache_hit={res2.report.cache_hit}"
+                 f"_saved={(cold - warm) / cold * 100:.1f}%"))
+    return rows
+
+
 def main(quick: bool = False):
     rows = []
-    rows += bench_vectorize()
-    rows += bench_distribution()
-    rows += bench_schedule()
-    rows += bench_buffer()
+    rows += bench_vectorize(quick)
+    rows += bench_distribution(quick)
+    rows += bench_schedule(quick)
+    rows += bench_buffer(quick)
+    rows += bench_pipeline(quick)
     return rows
 
 

@@ -1,8 +1,10 @@
 """Benchmark harness: one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--quick]
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--skip-fig9]
 
-Prints ``name,us_per_call,derived`` CSV rows.
+Prints ``name,us_per_call,derived`` CSV rows.  Exits nonzero when any module
+emits an ERROR row, so CI smoke runs fail loudly instead of swallowing
+exceptions into the CSV.
 """
 from __future__ import annotations
 
@@ -11,7 +13,7 @@ import sys
 import traceback
 
 
-def main() -> None:
+def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="small shapes / fewer repeats")
@@ -27,14 +29,19 @@ def main() -> None:
         modules.insert(0, ("fig9", bench_single_chip))
 
     print("name,us_per_call,derived")
+    n_errors = 0
     for name, mod in modules:
         try:
             for row in mod.main(quick=args.quick):
                 print(",".join(str(x) for x in row), flush=True)
         except Exception:
+            n_errors += 1
             print(f"{name},ERROR,{traceback.format_exc().splitlines()[-1]}",
                   flush=True)
+    if n_errors:
+        print(f"benchmarks.run: {n_errors} module(s) errored", file=sys.stderr)
+    return 1 if n_errors else 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

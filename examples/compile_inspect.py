@@ -1,15 +1,34 @@
-"""Mini dry-run: lower + compile one (arch x shape) cell on the production
-mesh and print its roofline terms.  (512 fake devices — set before jax
-import, which is why this example re-execs through repro.launch.dryrun.)
+"""Compile inspection: the unified pipeline report for one arch's attention
+block, then (optionally) the full XLA dry-run of the (arch x shape) cell on
+the production mesh.  (The dry-run fakes 512 devices — that flag must be set
+before jax imports, which is why it re-execs through repro.launch.dryrun.)
 
     PYTHONPATH=src python examples/compile_inspect.py --arch qwen3-0.6b --shape decode_32k
+    PYTHONPATH=src python examples/compile_inspect.py --pipeline-only
 """
 import argparse
-import json
 import subprocess
 import sys
-import tempfile
 from pathlib import Path
+
+
+def pipeline_report(arch: str, shape: str) -> None:
+    """Term-level compile of the arch's attention block through
+    repro.pipeline, with per-pass telemetry."""
+    sys.path.insert(0, str(Path(__file__).parents[1] / "src"))
+    from repro.configs.base import SHAPES, get_config
+    from repro.pipeline import CompileOptions, compile
+    from repro.serve.engine import attention_block_term
+
+    cfg = get_config(arch)
+    spec = SHAPES[shape]
+    # cap the modeled sequence so the e-graph stays inspection-sized
+    seq = min(spec.seq_len, 4096)
+    term = attention_block_term(seq, cfg.resolved_head_dim)
+    res = compile(term, options=CompileOptions(extraction="greedy"))
+    print(f"=== pipeline report: {arch} attention block "
+          f"(seq {seq} x head_dim {cfg.resolved_head_dim}) ===")
+    print(res.report.summary())
 
 
 def main():
@@ -17,7 +36,14 @@ def main():
     ap.add_argument("--arch", default="qwen3-0.6b")
     ap.add_argument("--shape", default="decode_32k")
     ap.add_argument("--mesh", default="pod1")
+    ap.add_argument("--pipeline-only", action="store_true",
+                    help="skip the (slow) XLA dry-run subprocess")
     args = ap.parse_args()
+
+    pipeline_report(args.arch, args.shape)
+    if args.pipeline_only:
+        return
+
     r = subprocess.run(
         [sys.executable, "-m", "repro.launch.dryrun", "--arch", args.arch,
          "--shape", args.shape, "--mesh", args.mesh],

@@ -1,4 +1,4 @@
-"""Quickstart: the three nncase passes + a training step, all on CPU.
+"""Quickstart: the full nncase pipeline in one call + a training step, on CPU.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -8,57 +8,70 @@ import numpy as np
 
 from repro.configs.base import get_config, reduced_config
 from repro.core.codegen import compile_term
-from repro.core.distribution import auto_distribute, ndsbp_to_pspec, build_distributed_egraph
-from repro.core.sbp import Placement
-from repro.core.schedule import attention_tile_graph, auto_schedule
+from repro.core.distribution import ndsbp_to_pspec
 from repro.core.tensor_ir import inp, matmul, unary
-from repro.core.vectorize import auto_vectorize, count_ops
+from repro.core.vectorize import count_ops
 from repro.models import build_model
+from repro.pipeline import CompileTarget, Compiler
 
 
-def demo_auto_vectorize():
-    print("=== Auto Vectorize (Fig. 3): O = MatMul(Exp(MatMul(Q,K)), V) ===")
+def fig3_term():
+    """O = MatMul(Exp(MatMul(Q, K)), V) — the paper's running example."""
     Q, K, V = inp("Q", (1024, 128)), inp("K", (128, 1024)), inp("V", (1024, 128))
-    term = matmul(unary(matmul(Q, K), kind="exp"), V)
-    cost, packed, stats = auto_vectorize(term)
-    print(f"  baseline {stats['baseline_cost']:.3e}s -> packed {cost:.3e}s "
-          f"({stats['baseline_cost'] / cost:.1f}x modeled)")
-    print(f"  pack ops: {count_ops(packed, 'pack')} (inputs only), "
-          f"unpack: {count_ops(packed, 'unpack')} (output only) — "
+    return matmul(unary(matmul(Q, K), kind="exp"), V)
+
+
+def demo_pipeline(compiler: Compiler):
+    print("=== One-call pipeline (Fig. 3): O = MatMul(Exp(MatMul(Q,K)), V) ===")
+    term = fig3_term()
+    res = compiler.compile(term)
+    r = res.report
+    print(f"  baseline {r.baseline_cost:.3e}s -> packed {r.optimized_cost:.3e}s "
+          f"({r.modeled_speedup:.1f}x modeled)")
+    print(f"  pack ops: {count_ops(res.term, 'pack')} (inputs only), "
+          f"unpack: {count_ops(res.term, 'unpack')} (output only) — "
           "blocked layout passes through Exp")
-    # semantics preserved
+    print("  pass times: " + " ".join(
+        f"{k}={v * 1e3:.1f}ms" for k, v in r.pass_times.items()))
+    # semantics preserved vs. the unoptimized reference interpretation
     rng = np.random.default_rng(0)
     env = {n: jnp.array(rng.normal(size=s) * 0.1, jnp.float32)
            for n, s in [("Q", (1024, 128)), ("K", (128, 1024)), ("V", (1024, 128))]}
-    err = float(jnp.max(jnp.abs(compile_term(packed)(**env)
-                                - compile_term(term)(**env))))
+    err = float(jnp.max(jnp.abs(res(**env) - compile_term(term)(**env))))
     print(f"  max abs err packed-vs-logical: {err:.2e}")
+    res2 = compiler.compile(term)
+    print(f"  recompile: cache_hit={res2.report.cache_hit} "
+          f"({res2.report.total_seconds * 1e3:.1f}ms vs "
+          f"{res.report.total_seconds * 1e3:.1f}ms cold)")
 
 
-def demo_auto_distribute():
+def demo_auto_distribute(compiler: Compiler):
     print("=== Auto Distribution (SBP search on a 4x4 mesh) ===")
     x = inp("x", (4096, 1024))
     w1, w2 = inp("w1", (1024, 4096)), inp("w2", (4096, 1024))
     y = matmul(unary(matmul(x, w1), kind="exp"), w2)
-    pl = Placement(("data", "model"), (4, 4))
-    dg = build_distributed_egraph(y, pl)
-    free = auto_distribute(y, pl, use_sat=False)
-    print(f"  unconstrained: cost {free.cost:.3e}s, peak {free.peak_memory/1e6:.1f} MB/dev")
-    capped = auto_distribute(y, pl, mem_capacity=25_000_000)
-    print(f"  25MB cap:      cost {capped.cost:.3e}s, peak {capped.peak_memory/1e6:.1f} MB/dev")
-    for tid, nd in sorted(capped.assignments.items()):
-        t = dg.terms[tid]
-        print(f"    {t.op:8s} {t.attr('name') or '':4s} -> {nd} "
-              f"(pspec {ndsbp_to_pspec(nd, pl, 2)})")
+    mesh = dict(mesh_axes=("data", "model"), mesh_sizes=(4, 4))
+    free = compiler.compile(y, target=CompileTarget(**mesh)).report.distribution
+    print(f"  unconstrained: cost {free['cost']:.3e}s, "
+          f"peak {free['peak_memory'] / 1e6:.1f} MB/dev")
+    capped_res = compiler.compile(
+        y, target=CompileTarget(**mesh, memory_capacity=25_000_000))
+    capped = capped_res.report.distribution
+    print(f"  25MB cap:      cost {capped['cost']:.3e}s, "
+          f"peak {capped['peak_memory'] / 1e6:.1f} MB/dev")
+    pl = CompileTarget(**mesh).placement
+    for tid, nd in sorted(capped["assignments"].items()):
+        print(f"    term {tid:2d} -> {nd} (pspec {ndsbp_to_pspec(nd, pl, 2)})")
 
 
-def demo_auto_schedule():
+def demo_auto_schedule(compiler: Compiler):
     print("=== Auto Schedule (MCTS structure + MINLP tiles) ===")
-    tg = attention_tile_graph(4096, 128)
-    state, sched, base = auto_schedule(tg, iterations=25)
-    print(f"  baseline {base.latency:.3e}s -> scheduled {sched.latency:.3e}s")
-    print(f"  fused groups: {[g.ops for g in state.groups]}")
-    print(f"  VMEM tiles: {sched.tiles} (peak {sched.vmem_peak/2**20:.1f} MB)")
+    res = compiler.compile(fig3_term())
+    s = res.report.schedule
+    print(f"  baseline {s['baseline_latency']:.3e}s -> scheduled {s['latency']:.3e}s")
+    print(f"  fused groups: {s['groups']}")
+    print(f"  kernel plan: {res.report.kernel_plan} "
+          f"(vmem peak {s['vmem_peak'] / 2**20:.1f} MB)")
 
 
 def demo_train_step():
@@ -72,7 +85,8 @@ def demo_train_step():
 
 
 if __name__ == "__main__":
-    demo_auto_vectorize()
-    demo_auto_distribute()
-    demo_auto_schedule()
+    compiler = Compiler()
+    demo_pipeline(compiler)
+    demo_auto_distribute(compiler)
+    demo_auto_schedule(compiler)
     demo_train_step()

@@ -14,7 +14,7 @@ import dataclasses
 import itertools
 from typing import Dict, List, Optional, Tuple
 
-from repro.core.tensor_ir import DTYPE_BYTES, Term, term_shape
+from repro.core.tensor_ir import Term, term_shape
 
 VIEW_OPS = ("reshape", "squeeze", "slice_view")
 

@@ -16,8 +16,7 @@ is XLA and the μkernels are Pallas kernels, so codegen here means:
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Callable, Dict, Optional, Tuple
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -8,11 +8,9 @@ Auto Vectorize trade-off (§3.1.2).
 """
 from __future__ import annotations
 
-import math
-from typing import Dict, Tuple
+from typing import Tuple
 
 from repro.core.egraph import EGraph, ENode
-from repro.core.tensor_ir import DTYPE_BYTES
 
 PEAK_FLOPS = 197e12        # MXU bf16
 VPU_FLOPS = 197e12 / 16    # vector unit, rough 1/16 of MXU

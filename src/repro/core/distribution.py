@@ -26,8 +26,7 @@ import dataclasses
 import itertools
 from typing import Dict, List, Optional, Tuple
 
-from repro.core import sbp as sbp_lib
-from repro.core.cost_model import HBM_BW, PEAK_FLOPS, UNPACKED_MXU_EFF, VPU_FLOPS
+from repro.core.cost_model import HBM_BW, PEAK_FLOPS, VPU_FLOPS
 from repro.core.egraph import EGraph, ENode
 from repro.core.extraction import greedy_extract, wpmaxsat_extract
 from repro.core.sbp import (B, NdSbp, P, Placement, S, boxing_cost,

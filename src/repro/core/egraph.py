@@ -8,8 +8,7 @@ analysis is checked on every union.
 from __future__ import annotations
 
 import dataclasses
-import itertools
-from typing import Any, Callable, Dict, Iterable, List, Optional, Set, Tuple
+from typing import Any, Dict, Iterable, List, Set, Tuple
 
 from repro.core.tensor_ir import Term, infer_shape
 

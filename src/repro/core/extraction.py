@@ -15,7 +15,6 @@ Both return (total_cost, {eclass_id: chosen ENode}).
 """
 from __future__ import annotations
 
-import math
 from typing import Callable, Dict, Optional, Tuple
 
 from repro.core.cost_model import node_cost

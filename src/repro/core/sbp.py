@@ -7,7 +7,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+from typing import List, Optional, Tuple
 
 from repro.core.cost_model import ALPHA, ICI_BW
 

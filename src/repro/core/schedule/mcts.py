@@ -7,7 +7,6 @@ solver as a deterministic evaluator, and the reward is 1/latency.
 from __future__ import annotations
 
 import dataclasses
-import itertools
 import math
 import random
 from typing import Dict, List, Optional, Tuple

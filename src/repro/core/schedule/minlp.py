@@ -20,11 +20,9 @@ special-purpose MINLP (the paper uses OR-Tools; we stay self-contained).
 from __future__ import annotations
 
 import dataclasses
-import itertools
-import math
 from typing import Dict, List, Optional, Tuple
 
-from repro.core.schedule.ntt import MICRO_KERNELS, ukernel_time
+from repro.core.schedule.ntt import ukernel_time
 from repro.core.schedule.tile_graph import TileGraph
 
 VMEM_BYTES = 16 * 2**20

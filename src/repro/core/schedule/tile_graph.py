@@ -14,7 +14,7 @@ Actions (MCTS edges, §3.2.1):
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Optional, Tuple
 
 
 @dataclasses.dataclass(frozen=True)

@@ -20,7 +20,7 @@ On TPU the extracted packed graph maps onto the Pallas kernels in
 """
 from __future__ import annotations
 
-from typing import Iterable, List, Tuple
+from typing import Iterable, List
 
 from repro.core.egraph import EGraph, ENode, M, MixedTerm
 from repro.core.extraction import extract_term, greedy_extract, wpmaxsat_extract

@@ -23,7 +23,7 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.configs.base import ModelConfig, ShapeSpec
+from repro.configs.base import ModelConfig
 
 
 # Logical activation axes -> mesh axes.  This table is the Auto Distribution
@@ -104,8 +104,16 @@ def batch_axes(mesh: Mesh):
     from repro.perf import perf
     if perf().train_sharding == "dp":
         # pure data parallelism: batch over EVERY mesh axis
-        return tuple(mesh.shape.keys())
-    return ("pod", "data") if "pod" in mesh.shape else ("data",)
+        return _unwrap(tuple(mesh.shape.keys()))
+    return ("pod", "data") if "pod" in mesh.shape else "data"
+
+
+def _unwrap(entry):
+    """1-tuples -> bare axis name: PartitionSpec(('data',)) and
+    PartitionSpec('data') shard identically but no longer compare equal."""
+    if isinstance(entry, tuple) and len(entry) == 1:
+        return entry[0]
+    return entry
 
 
 def _fits(dim: int, mesh: Mesh, entry) -> bool:

@@ -30,7 +30,6 @@ RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
 def run_cell(arch: str, shape_name: str, mesh_kind: str, out_path: Path,
              save_hlo: bool = False) -> dict:
     import jax
-    import jax.numpy as jnp
     from repro.configs.base import SHAPES, cell_is_runnable, get_config
     from repro.distributed import sharding as shd
     from repro.launch.mesh import make_production_mesh

@@ -1,10 +1,9 @@
 """Step builders shared by the dry-run, trainer, server, and benchmarks."""
 from __future__ import annotations
 
-from typing import Callable, Dict, Optional, Tuple
+from typing import Callable, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import build_model

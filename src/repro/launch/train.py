@@ -10,8 +10,6 @@ from __future__ import annotations
 
 import argparse
 
-import jax
-
 from repro.configs.base import get_config, reduced_config
 from repro.launch.mesh import make_local_mesh, make_production_mesh
 from repro.train.optimizer import AdamWConfig

@@ -5,8 +5,7 @@ cross-attn + MLP.  Both stacks are scanned.
 """
 from __future__ import annotations
 
-import math
-from typing import Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
@@ -15,7 +14,7 @@ from repro.configs.base import ModelConfig
 from repro.models import attention as attn
 from repro.models.layers import (
     apply_mlp, embed_tokens, init_embed, init_mlp, logits_from_hidden,
-    rms_norm, sinusoidal_positions, softmax_cross_entropy, truncated_normal,
+    rms_norm, sinusoidal_positions, softmax_cross_entropy,
 )
 
 

@@ -8,8 +8,7 @@ one-segment sized).  KV caches are per *call site*: (n_segments, B, S, KV, hd).
 """
 from __future__ import annotations
 
-import math
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp

@@ -7,7 +7,6 @@ layer) so the scan body stays homogeneous.
 """
 from __future__ import annotations
 
-import functools
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -19,7 +18,7 @@ from repro.models import attention as attn
 from repro.models import moe as moe_lib
 from repro.models.layers import (
     apply_mlp, embed_tokens, init_embed, init_mlp, logits_from_hidden,
-    rms_norm, softmax_cross_entropy, truncated_normal,
+    rms_norm, softmax_cross_entropy,
 )
 
 

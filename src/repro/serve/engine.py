@@ -6,18 +6,26 @@ all live slots; finished slots are refilled from the queue after a prefill.
 Prefill for a new request runs at batch=slot granularity and its KV is
 spliced into the shared cache — the standard slot/continuous-batching
 architecture, sized down so it runs on CPU for tests/examples.
+
+Kernel planning goes through the unified ``repro.pipeline`` entry point: at
+construction the engine compiles its attention block (max_len x head_dim)
+once and keeps the resulting ``KernelPlan`` + ``CompileReport``.  The
+pipeline's compile cache makes repeated engine construction (serve restarts,
+tests) skip saturation and search entirely.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig, jnp_dtype
+from repro.configs.base import ModelConfig
 from repro.models import build_model
+from repro.pipeline import CompileOptions, Compiler, default_compiler
+from repro.core.tensor_ir import inp, matmul, unary
 
 
 @dataclasses.dataclass
@@ -29,9 +37,18 @@ class Request:
     done: bool = False
 
 
+def attention_block_term(seq_len: int, head_dim: int):
+    """The engine's attention inner block as a pipeline-compilable term."""
+    q = inp("Q", (seq_len, head_dim))
+    k = inp("K", (head_dim, seq_len))
+    v = inp("V", (seq_len, head_dim))
+    return matmul(unary(matmul(q, k), kind="exp"), v)
+
+
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, max_batch: int = 4,
-                 max_len: int = 256):
+                 max_len: int = 256, compiler: Optional[Compiler] = None,
+                 plan_kernels: bool = True):
         assert cfg.family in ("dense", "moe", "vlm"), \
             "slot engine currently targets decoder-LM families"
         self.cfg = cfg
@@ -46,6 +63,18 @@ class ServeEngine:
         self._decode = jax.jit(
             lambda p, c, b: self.fns.decode_step(p, c, b))
         self.steps = 0
+        # unified pipeline: compile the attention block once; cached, so a
+        # second engine on the same shapes reuses the plan without re-search
+        self.compile_report = None
+        self.kernel_plan = None
+        if plan_kernels:
+            compiler = compiler or default_compiler()
+            res = compiler.compile(
+                attention_block_term(max_len, cfg.resolved_head_dim),
+                options=CompileOptions(extraction="greedy",
+                                       schedule_iterations=10))
+            self.compile_report = res.report
+            self.kernel_plan = res.report.kernel_plan
 
     # -- request lifecycle -----------------------------------------------
     def submit(self, req: Request):

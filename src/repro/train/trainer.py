@@ -14,7 +14,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.distributed import sharding as shd
-from repro.distributed.fault_tolerance import FaultTolerantLoop, StragglerDetector
+from repro.distributed.fault_tolerance import StragglerDetector
 from repro.launch.steps import make_train_step
 from repro.models import build_model
 from repro.train.checkpoint import restore_latest, save_checkpoint

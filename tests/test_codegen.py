@@ -1,11 +1,11 @@
 """Codegen: packed-layout array transforms + term compilation properties."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.codegen import _pack_array, _unpack_array, compile_term, kernel_plan
-from repro.core.schedule.minlp import MINLPSolver, Schedule
-from repro.core.tensor_ir import T, binary, inp, matmul, transpose, unary
+from repro.core.schedule.minlp import Schedule
+from repro.core.tensor_ir import T, binary, inp, transpose, unary
 
 
 @given(st.sampled_from([(8, 128), (128, 128)]),

@@ -5,7 +5,7 @@ from repro.core.egraph import EGraph
 from repro.core.extraction import (branch_bound_extract, greedy_extract,
                                    wpmaxsat_extract)
 from repro.core.rewrite import TRANSPOSE_RULES
-from repro.core.tensor_ir import binary, inp, matmul, transpose, unary
+from repro.core.tensor_ir import binary, inp, transpose, unary
 
 
 def _fig2_graph():

@@ -1,9 +1,6 @@
 """Cross-layer integration: trainer on an explicit mesh, non-dense-family
 training, pipeline prefetch, and the dry-run cell runner on a local mesh."""
-import tempfile
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -1,7 +1,7 @@
 """DPLL SAT + weighted partial MaxSAT (property-tested vs brute force)."""
 import itertools
 
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.sat import sat_solve, wpmaxsat
 

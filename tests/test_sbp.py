@@ -1,5 +1,5 @@
 """SBP abstraction (§3.1.3): shard shapes, boxing costs, signatures."""
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.sbp import (B, P, Placement, S, boxing_cost, boxing_ops,
                             memory_bytes, shard_shape, valid_ndsbps)

@@ -1,7 +1,7 @@
 """Auto Schedule (§3.2): MINLP capacity/coverage + MCTS improvement."""
 from repro.core.schedule import (attention_tile_graph, auto_schedule,
-                                 matmul_tile_graph, mlp_tile_graph)
-from repro.core.schedule.mcts import MCTS, enumerate_actions, apply_action
+                                 matmul_tile_graph)
+from repro.core.schedule.mcts import MCTS, enumerate_actions
 from repro.core.schedule.minlp import MINLPSolver, VMEM_BYTES
 from repro.core.codegen import kernel_plan
 

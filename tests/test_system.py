@@ -3,7 +3,7 @@ hypothesis invariants over the whole rewrite->extract->codegen path."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.codegen import compile_term

@@ -1,7 +1,7 @@
 """Auto Vectorize (§3.1.2): MetaPackOperation + FoldNopPack + pass-through."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.codegen import compile_term
 from repro.core.tensor_ir import binary, inp, matmul, unary
