@@ -1,0 +1,174 @@
+"""Serving-throughput benchmark: the paged engine on a synthetic
+multi-request workload, emitting a ``BENCH_serve.json`` trajectory point.
+
+    PYTHONPATH=src python -m benchmarks.bench_serve --quick \
+        --out BENCH_serve.json \
+        --baseline benchmarks/baselines/serve.json --max-regress 0.2
+
+Called from ``benchmarks.run`` it yields one CSV row per serving metric; the
+CLI additionally writes the JSON point and gates on the committed baseline
+(REASONING COMPILER's loop: serving metrics feed back into the compiler's CI,
+so a pass that tanks tokens/sec fails the push that introduced it).
+
+The workload is the acceptance scenario from the paged-engine PR: 12 requests
+with mixed prompt/output lengths through ``max_batch=4``, which must all
+finish, keep pool utilization under 100%, and peak strictly below the dense
+``max_batch x max_len`` footprint.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from typing import List, Tuple
+
+WORKLOAD_REQUESTS = 12
+MAX_BATCH = 4
+MAX_LEN = 64
+BLOCK_SIZE = 8
+
+
+def _build_engine():
+    import jax
+
+    from repro.configs.base import get_config, reduced_config
+    from repro.models import build_model
+    from repro.serve.engine import ServeEngine
+
+    cfg = reduced_config(get_config("qwen3-0.6b"))
+    fns = build_model(cfg)
+    params = fns.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, max_batch=MAX_BATCH, max_len=MAX_LEN,
+                      block_size=BLOCK_SIZE)
+    return cfg, eng
+
+
+def _workload(cfg, n: int, seed: int = 0) -> List:
+    """Mixed prompt lengths (3..20) and output lengths (4..14)."""
+    import numpy as np
+
+    from repro.serve.engine import Request, SamplingParams
+
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        plen = int(rng.integers(3, 21))
+        max_new = int(rng.integers(4, 15))
+        prompt = rng.integers(1, cfg.vocab, size=plen).tolist()
+        sp = SamplingParams() if i % 3 else \
+            SamplingParams(temperature=0.8, top_k=40, seed=i)
+        reqs.append(Request(rid=i, prompt=prompt, max_new=max_new, sampling=sp))
+    return reqs
+
+
+def run_workload(quick: bool = False) -> Tuple[object, dict]:
+    """Returns (ServeMetrics, workload descriptor).  ``quick`` is the CI
+    smoke size; the full run pushes 3x the requests through the same pool so
+    queueing/admission actually bites."""
+    cfg, eng = _build_engine()
+    n = WORKLOAD_REQUESTS if quick else 3 * WORKLOAD_REQUESTS
+
+    # warm the prefill/decode jit caches outside the measured window
+    for r in _workload(cfg, 2, seed=99):
+        eng.submit(r)
+    eng.run_until_done()
+    eng.reset_metrics()
+
+    reqs = _workload(cfg, n)
+    for r in reqs:
+        eng.submit(r)
+    finished = eng.run_until_done()
+    m = eng.metrics()
+    desc = {
+        "requests": n,
+        "finished": len(finished),
+        "max_batch": MAX_BATCH,
+        "max_len": MAX_LEN,
+        "block_size": BLOCK_SIZE,
+        "arch": cfg.name,
+        "quick": quick,
+    }
+    return m, desc
+
+
+def main(quick: bool = False):
+    """benchmarks.run entry: one row per headline serving metric."""
+    m, desc = run_workload(quick)
+    if desc["finished"] != desc["requests"]:
+        raise RuntimeError(
+            f"serve workload incomplete: {desc['finished']}/{desc['requests']}")
+    us_per_tok = 1e6 / max(m.tokens_per_sec, 1e-9)
+    yield ("serve_paged_decode", f"{us_per_tok:.1f}",
+           f"{m.tokens_per_sec:.1f} tok/s over {desc['requests']} reqs")
+    yield ("serve_paged_ttft", f"{m.ttft_mean_s * 1e6:.0f}",
+           f"mean time-to-first-token; max {m.ttft_max_s * 1e3:.0f}ms")
+    yield ("serve_paged_pool", f"{m.peak_pool_utilization:.3f}",
+           f"peak {m.peak_blocks_used}/{m.pool_blocks} blocks "
+           f"(dense equiv {m.dense_equiv_blocks})")
+
+
+def _check(m, desc) -> List[str]:
+    """The PR's acceptance assertions, enforced on every bench run."""
+    errs = []
+    if desc["finished"] != desc["requests"]:
+        errs.append(f"only {desc['finished']}/{desc['requests']} finished")
+    if not m.tokens_per_sec > 0:
+        errs.append("tokens_per_sec not positive")
+    if not m.ttft_mean_s > 0:
+        errs.append("ttft not recorded")
+    if not m.peak_pool_utilization < 1.0:
+        errs.append(f"pool peaked at {m.peak_pool_utilization:.0%} (expected <100%)")
+    if not m.peak_blocks_used < m.dense_equiv_blocks:
+        errs.append(f"peak blocks {m.peak_blocks_used} not below dense "
+                    f"footprint {m.dense_equiv_blocks}")
+    return errs
+
+
+def cli() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default="BENCH_serve.json")
+    ap.add_argument("--baseline", default="")
+    ap.add_argument("--max-regress", type=float, default=0.2,
+                    help="fail if tokens/sec drops more than this fraction "
+                         "below the committed baseline")
+    args = ap.parse_args()
+
+    m, desc = run_workload(quick=args.quick)
+    point = {
+        "bench": "serve",
+        "unix_time": time.time(),
+        "workload": desc,
+        "tokens_per_sec": m.tokens_per_sec,
+        "ttft_mean_s": m.ttft_mean_s,
+        "itl_mean_s": m.itl_mean_s,
+        "peak_pool_utilization": m.peak_pool_utilization,
+        "peak_blocks_used": m.peak_blocks_used,
+        "dense_equiv_blocks": m.dense_equiv_blocks,
+        "preemptions": m.preemptions,
+        "metrics": m.to_dict(),
+    }
+    with open(args.out, "w") as f:
+        json.dump(point, f, indent=2)
+    print(m.summary())
+    print(f"trajectory point written to {args.out}")
+
+    errs = _check(m, desc)
+    if args.baseline:
+        with open(args.baseline) as f:
+            base = json.load(f)
+        floor = base["tokens_per_sec"] * (1.0 - args.max_regress)
+        verdict = "OK" if m.tokens_per_sec >= floor else "REGRESSION"
+        print(f"baseline gate: {m.tokens_per_sec:.1f} tok/s vs floor "
+              f"{floor:.1f} (baseline {base['tokens_per_sec']:.1f} "
+              f"- {args.max_regress:.0%}) -> {verdict}")
+        if m.tokens_per_sec < floor:
+            errs.append(f"throughput regression: {m.tokens_per_sec:.1f} < {floor:.1f}")
+    for e in errs:
+        print(f"bench_serve: FAIL: {e}", file=sys.stderr)
+    return 1 if errs else 0
+
+
+if __name__ == "__main__":
+    sys.exit(cli())

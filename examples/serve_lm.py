@@ -1,36 +1,39 @@
-"""Batched serving example: continuous batching over slot-based KV cache.
+"""Paged-KV serving example: continuous batching with per-request sampling.
 
     PYTHONPATH=src python examples/serve_lm.py
 """
-import time
-
 import jax
 import numpy as np
 
 from repro.configs.base import get_config, reduced_config
 from repro.models import build_model
-from repro.serve.engine import Request, ServeEngine
+from repro.serve.engine import Request, SamplingParams, ServeEngine
 
 
 def main():
     cfg = reduced_config(get_config("qwen3-0.6b"))
     fns = build_model(cfg)
     params = fns.init(jax.random.PRNGKey(0))
-    eng = ServeEngine(cfg, params, max_batch=4, max_len=64)
+    eng = ServeEngine(cfg, params, max_batch=4, max_len=64, block_size=8)
     rng = np.random.default_rng(0)
-    reqs = [Request(rid=i, prompt=rng.integers(1, cfg.vocab, size=6).tolist(),
-                    max_new=12) for i in range(8)]
+    reqs = []
+    for i in range(8):
+        prompt = rng.integers(1, cfg.vocab, size=int(rng.integers(4, 10))).tolist()
+        # half greedy, half temperature sampling — per-request strategies
+        sp = SamplingParams() if i % 2 == 0 else \
+            SamplingParams(temperature=0.8, top_k=40, seed=i)
+        reqs.append(Request(rid=i, prompt=prompt, max_new=12, sampling=sp))
     for r in reqs:
         eng.submit(r)
-    t0 = time.monotonic()
-    eng.run_until_done()
-    dt = time.monotonic() - t0
-    done = sum(r.done for r in reqs)
-    toks = sum(len(r.out) for r in reqs)
-    print(f"completed {done}/8 requests, {toks} tokens in {dt:.2f}s "
-          f"({toks/dt:.1f} tok/s, {eng.steps} batched decode steps)")
-    for r in reqs[:3]:
-        print(f"  req {r.rid}: prompt {r.prompt} -> {r.out}")
+    finished = eng.run_until_done()
+    m = eng.metrics()
+    print(m.summary())
+    print(f"dense slot cache would pin {m.dense_equiv_blocks} blocks; "
+          f"paged peak was {m.peak_blocks_used}")
+    for r in finished[:3]:
+        mode = "greedy" if r.sampling.temperature <= 0 else \
+            f"T={r.sampling.temperature}/top{r.sampling.top_k}"
+        print(f"  req {r.rid} ({mode}): prompt {r.prompt} -> {r.out}")
 
 
 if __name__ == "__main__":

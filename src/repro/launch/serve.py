@@ -1,19 +1,22 @@
-"""Serving driver: batched decode over synthetic prompts.
+"""Serving driver: paged-KV continuous batching over synthetic prompts.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
-        --requests 8 --max-new 16
+        --requests 8 --max-new 16 --block-size 8 --temperature 0.8 --top-k 40
+
+Prints per-run ServeMetrics; ``--metrics-out`` dumps them as JSON (the same
+shape bench_serve emits into BENCH_serve.json).
 """
 from __future__ import annotations
 
 import argparse
-import time
+import json
 
 import jax
 import numpy as np
 
 from repro.configs.base import get_config, reduced_config
 from repro.models import build_model
-from repro.serve.engine import Request, ServeEngine
+from repro.serve.engine import Request, SamplingParams, ServeEngine
 
 
 def main():
@@ -24,6 +27,18 @@ def main():
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--num-blocks", type=int, default=0,
+                    help="KV pool size in blocks (0 = dense-capacity parity)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="prompt tokens prefetched per engine step "
+                         "(0 = one block)")
+    ap.add_argument("--admission", choices=["conservative", "optimistic"],
+                    default="conservative")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--metrics-out", default="")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -32,17 +47,24 @@ def main():
     fns = build_model(cfg)
     params = fns.init(jax.random.PRNGKey(0))
     eng = ServeEngine(cfg, params, max_batch=args.max_batch,
-                      max_len=args.max_len)
-    rng = np.random.default_rng(0)
+                      max_len=args.max_len, block_size=args.block_size,
+                      num_blocks=args.num_blocks or None,
+                      prefill_chunk_tokens=args.prefill_chunk or None,
+                      admission=args.admission)
+    rng = np.random.default_rng(args.seed)
     for i in range(args.requests):
-        prompt = rng.integers(1, cfg.vocab, size=8).tolist()
-        eng.submit(Request(rid=i, prompt=prompt, max_new=args.max_new))
-    t0 = time.monotonic()
+        prompt = rng.integers(1, cfg.vocab, size=int(rng.integers(4, 12))).tolist()
+        eng.submit(Request(rid=i, prompt=prompt, max_new=args.max_new,
+                           sampling=SamplingParams(temperature=args.temperature,
+                                                   top_k=args.top_k,
+                                                   seed=args.seed + i)))
     eng.run_until_done()
-    dt = time.monotonic() - t0
-    total_tokens = args.requests * args.max_new
-    print(f"{args.requests} requests, {total_tokens} tokens in {dt:.2f}s "
-          f"-> {total_tokens / dt:.1f} tok/s (decode steps: {eng.steps})")
+    m = eng.metrics()
+    print(m.summary())
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            json.dump(m.to_dict(), f, indent=2)
+        print(f"metrics written to {args.metrics_out}")
 
 
 if __name__ == "__main__":

@@ -106,19 +106,127 @@ def multi_head_attention(q: jax.Array, k: jax.Array, v: jax.Array,
 
 def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                      cur_len: jax.Array) -> jax.Array:
-    """q (B,1,H,hd); caches (B,Smax,KV,hd); positions >= cur_len are masked."""
+    """q (B,1,H,hd); caches (B,Smax,KV,hd); positions >= cur_len are masked.
+
+    ``cur_len`` may be a scalar (all rows share one length — the dense slot
+    engine's aligned decode) or a (B,) vector of per-request lengths (the
+    paged engine's continuous batching, where every row is at its own
+    position).
+    """
     b, _, h, hd = q.shape
     kv = k_cache.shape[2]
     scale = 1.0 / math.sqrt(hd)
     kh = _repeat_kv(k_cache, h // kv)
     vh = _repeat_kv(v_cache, h // kv)
     scores = jnp.einsum("bqhd,bkhd->bhqk", q, kh).astype(jnp.float32) * scale
-    mask_add = jnp.where(jnp.arange(k_cache.shape[1]) < cur_len, 0.0, -1e30
-                         ).astype(jnp.float32)
-    scores = scores + mask_add[None, None, None, :]
+    kpos = jnp.arange(k_cache.shape[1])
+    lens = jnp.asarray(cur_len)
+    if lens.ndim == 0:
+        mask_add = jnp.where(kpos < lens, 0.0, -1e30
+                             ).astype(jnp.float32)[None, None, None, :]
+    else:
+        mask_add = jnp.where(kpos[None, :] < lens[:, None], 0.0, -1e30
+                             ).astype(jnp.float32)[:, None, None, :]
+    scores = scores + mask_add
     probs = jax.nn.softmax(scores, axis=-1).astype(vh.dtype)
     out = jnp.einsum("bhqk,bkhd->bqhd", probs, vh)
     return out
+
+
+# ---------------------------------------------------------------------------
+# Paged KV: block-pool scatter/gather attention
+# ---------------------------------------------------------------------------
+
+def paged_gather(pages: jax.Array, tables: jax.Array) -> jax.Array:
+    """pages (N,bs,KV,hd), tables (B,M) int32 -> (B, M*bs, KV, hd).
+
+    Linear position within the gathered view equals the token position for
+    the owning request (blocks appear in table order), so causal/length masks
+    apply directly to the gathered axis.  Null-padded table entries gather
+    block 0 — masked out by the caller's length mask.
+    """
+    b, m = tables.shape
+    _, bs, kv, hd = pages.shape
+    return pages[tables].reshape(b, m * bs, kv, hd)
+
+
+def paged_scatter_token(pages: jax.Array, tables: jax.Array,
+                        positions: jax.Array, values: jax.Array) -> jax.Array:
+    """Write one token's KV per batch row into the block pool.
+
+    pages (N,bs,KV,hd); tables (B,M); positions (B,) token index for each
+    row; values (B,KV,hd).  Rows whose table entry is the null block (dead
+    batch rows) all collide on block 0 — harmless, block 0 is never read
+    unmasked.
+    """
+    bs = pages.shape[1]
+    m = tables.shape[1]
+    idx = jnp.clip(positions // bs, 0, m - 1)
+    blk = jnp.take_along_axis(tables, idx[:, None], axis=1)[:, 0]
+    return pages.at[blk, positions % bs].set(values.astype(pages.dtype))
+
+
+def attention_decode_block_paged(cfg: ModelConfig, p, x: jax.Array,
+                                 k_pages: jax.Array, v_pages: jax.Array,
+                                 block_tables: jax.Array, seq_lens: jax.Array):
+    """One-token attention against a paged cache.
+
+    x (B,1,d); pages (N,bs,KV,hd); block_tables (B,M); seq_lens (B,) — the
+    number of KV entries already written for each row (the new token's KV is
+    written at position seq_lens[b]).  Returns (out, k_pages, v_pages).
+    """
+    positions = seq_lens[:, None].astype(jnp.int32)
+    q, k, v = qkv_project(cfg, p, x, positions)
+    k_pages = paged_scatter_token(k_pages, block_tables, seq_lens, k[:, 0])
+    v_pages = paged_scatter_token(v_pages, block_tables, seq_lens, v[:, 0])
+    kg = paged_gather(k_pages, block_tables)
+    vg = paged_gather(v_pages, block_tables)
+    o = decode_attention(q, kg, vg, seq_lens + 1)
+    b = x.shape[0]
+    from repro.distributed.sharding import weight_use
+    out = jnp.einsum("bse,ed->bsd", o.reshape(b, 1, cfg.q_dim),
+                     weight_use(p["wo"], "heads", None))
+    return out, k_pages, v_pages
+
+
+def attention_prefill_chunk_block(cfg: ModelConfig, p, x: jax.Array,
+                                  k_pages: jax.Array, v_pages: jax.Array,
+                                  block_table: jax.Array, chunk_pos: jax.Array,
+                                  prompt_len: jax.Array):
+    """One prompt chunk's attention against the paged cache (batch of 1).
+
+    x (1,C,d); block_table (1,M); chunk_pos (C,) absolute token positions of
+    the chunk (start..start+C-1); prompt_len () — positions >= prompt_len are
+    padding (their KV goes to the null block, their outputs are discarded by
+    the engine).  The chunk attends to every previously-written position plus
+    itself, causally — this is what lets prefill proceed in small chunks
+    interleaved with decode steps without ever stalling the decode batch.
+    """
+    q, k, v = qkv_project(cfg, p, x, chunk_pos[None, :])
+    bs = k_pages.shape[1]
+    m = block_table.shape[1]
+    valid = chunk_pos < prompt_len
+    idx = jnp.clip(chunk_pos // bs, 0, m - 1)
+    blk = jnp.where(valid, block_table[0, idx], 0)
+    off = chunk_pos % bs
+    k_pages = k_pages.at[blk, off].set(k[0].astype(k_pages.dtype))
+    v_pages = v_pages.at[blk, off].set(v[0].astype(v_pages.dtype))
+    kg = paged_gather(k_pages, block_table)     # (1, M*bs, KV, hd)
+    vg = paged_gather(v_pages, block_table)
+    h_q = q.shape[2]
+    kv = kg.shape[2]
+    scale = 1.0 / math.sqrt(cfg.resolved_head_dim)
+    kh = _repeat_kv(kg, h_q // kv).transpose(0, 2, 1, 3)   # (1,H,M*bs,hd)
+    vh = _repeat_kv(vg, h_q // kv).transpose(0, 2, 1, 3)
+    qh = q.transpose(0, 2, 1, 3)                           # (1,H,C,hd)
+    kpos = jnp.arange(m * bs)
+    mask_add = _causal_mask_add(chunk_pos, kpos)[None, None]
+    o = _attend_block(qh, kh, vh, mask_add, scale).transpose(0, 2, 1, 3)
+    c = x.shape[1]
+    from repro.distributed.sharding import weight_use
+    out = jnp.einsum("bse,ed->bsd", o.reshape(1, c, cfg.q_dim),
+                     weight_use(p["wo"], "heads", None))
+    return out, k_pages, v_pages
 
 
 # ---------------------------------------------------------------------------

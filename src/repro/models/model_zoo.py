@@ -6,7 +6,7 @@ exclusively through this interface.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -23,6 +23,11 @@ class ModelFns:
     decode_step: Callable    # (params, cache, batch) -> (cache, logits)
     make_cache: Callable     # (batch_size, max_len) -> cache pytree
     input_specs: Callable    # (shape_spec) -> dict of ShapeDtypeStruct
+    # Paged-KV serving interface (block-table-aware); None for families that
+    # don't have a paged path yet (ssm/hybrid caches are O(1) per request).
+    make_paged_cache: Optional[Callable] = None  # (num_blocks, block_size) -> cache
+    decode_paged: Optional[Callable] = None      # (params, cache, batch) -> (cache, logits)
+    prefill_chunk: Optional[Callable] = None     # (params, cache, batch) -> (cache, logits)
 
 
 def _sds(shape, dtype):
@@ -63,6 +68,9 @@ def build_model(cfg: ModelConfig) -> ModelFns:
             decode_step=lambda p, c, b: transformer.lm_decode_step(cfg, p, c, b),
             make_cache=lambda bs, ml: transformer.make_decode_cache(cfg, bs, ml, dtype),
             input_specs=input_specs,
+            make_paged_cache=lambda nb, bsz: transformer.make_paged_cache(cfg, nb, bsz, dtype),
+            decode_paged=lambda p, c, b: transformer.lm_decode_step_paged(cfg, p, c, b),
+            prefill_chunk=lambda p, c, b: transformer.lm_prefill_chunk(cfg, p, c, b),
         )
 
     if fam == "ssm":

@@ -176,6 +176,15 @@ def make_decode_cache(cfg: ModelConfig, batch_size: int, max_len: int, dtype):
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 
+def make_paged_cache(cfg: ModelConfig, num_blocks: int, block_size: int, dtype):
+    """Block-pool KV cache shared by all in-flight requests: live memory
+    scales with tokens actually written, not max_batch x max_len.  Block 0 is
+    the null block (see repro.serve.paged_cache)."""
+    hd = cfg.resolved_head_dim
+    shape = (cfg.n_layers, num_blocks, block_size, cfg.n_kv_heads, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
 def lm_decode_step(cfg: ModelConfig, params, cache: Dict, batch: Dict,
                    impl: Optional[str] = None) -> Tuple[Dict, jax.Array]:
     """One decode step.  batch: {"token" (B,1) | "embeds" (B,1,d), "cur_len" ()}.
@@ -190,8 +199,6 @@ def lm_decode_step(cfg: ModelConfig, params, cache: Dict, batch: Dict,
         x = embed_tokens(params["embed"], batch["token"])
         b = batch["token"].shape[0]
         positions = jnp.broadcast_to(cur_len[None, None], (b, 1)).astype(jnp.int32)
-
-    every = cfg.moe.every if cfg.moe else 1
 
     def body(x, xs):
         lps, kcs, vcs = xs
@@ -208,13 +215,106 @@ def lm_decode_step(cfg: ModelConfig, params, cache: Dict, batch: Dict,
             new_vc.append(vc)
         return x, (tuple(new_kc), tuple(new_vc))
 
-    n_super = cfg.n_layers // every
-    # Slot-major cache layout (matches lm_prefill).
-    k_slots = tuple(cache["k"][i * n_super:(i + 1) * n_super] for i in range(every))
-    v_slots = tuple(cache["v"][i * n_super:(i + 1) * n_super] for i in range(every))
+    every, k_slots, v_slots = _slot_major_split(cfg, cache)
     x, (new_k, new_v) = jax.lax.scan(body, x, (params["layers"], k_slots, v_slots))
-    cache = {"k": jnp.concatenate(new_k, axis=0) if every > 1 else new_k[0],
-             "v": jnp.concatenate(new_v, axis=0) if every > 1 else new_v[0]}
+    cache = _slot_major_merge(new_k, new_v, every)
     h = rms_norm(x, params["final_norm"], cfg.norm_eps)
     logits = logits_from_hidden(cfg, params["embed"], h)[:, 0, :]
     return cache, logits
+
+
+def _slot_major_split(cfg: ModelConfig, cache: Dict):
+    """Slice a cache's leading (L, ...) slabs into per-super-layer stacks —
+    the slot-major convention lm_prefill established, shared by the dense and
+    paged cache layouts."""
+    every = cfg.moe.every if cfg.moe else 1
+    n_super = cfg.n_layers // every
+    k_slots = tuple(cache["k"][i * n_super:(i + 1) * n_super] for i in range(every))
+    v_slots = tuple(cache["v"][i * n_super:(i + 1) * n_super] for i in range(every))
+    return every, k_slots, v_slots
+
+
+def _slot_major_merge(new_k, new_v, every: int) -> Dict:
+    return {"k": jnp.concatenate(new_k, axis=0) if every > 1 else new_k[0],
+            "v": jnp.concatenate(new_v, axis=0) if every > 1 else new_v[0]}
+
+
+# ---------------------------------------------------------------------------
+# Paged serving: block-table-aware chunked prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def lm_decode_step_paged(cfg: ModelConfig, params, cache: Dict, batch: Dict):
+    """One decode step over a paged cache.
+
+    batch: {"token" (B,1) int32, "block_tables" (B,M) int32,
+    "seq_lens" (B,) int32}.  Every row sits at its own position — no shared
+    ``cur_len`` — which is what makes continuous batching (rows at wildly
+    different depths) exact instead of aligned-and-masked.
+    """
+    seq_lens = batch["seq_lens"].astype(jnp.int32)
+    tables = batch["block_tables"].astype(jnp.int32)
+    x = embed_tokens(params["embed"], batch["token"])
+
+    def body(x, xs):
+        lps, kcs, vcs = xs
+        new_kc, new_vc = [], []
+        for i, lp in enumerate(lps):
+            kc, vc = kcs[i], vcs[i]
+            xn = rms_norm(x, lp["ln1"], cfg.norm_eps)
+            o, kc, vc = attn.attention_decode_block_paged(
+                cfg, lp["attn"], xn, kc, vc, tables, seq_lens)
+            h = x + o
+            y, _ = _ffn(cfg, lp, rms_norm(h, lp["ln2"], cfg.norm_eps), decode=True)
+            x = h + y
+            new_kc.append(kc)
+            new_vc.append(vc)
+        return x, (tuple(new_kc), tuple(new_vc))
+
+    every, k_slots, v_slots = _slot_major_split(cfg, cache)
+    x, (new_k, new_v) = jax.lax.scan(body, x, (params["layers"], k_slots, v_slots))
+    h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_from_hidden(cfg, params["embed"], h)[:, 0, :]
+    return _slot_major_merge(new_k, new_v, every), logits
+
+
+def lm_prefill_chunk(cfg: ModelConfig, params, cache: Dict, batch: Dict):
+    """Process one prompt chunk for a single request into the paged cache.
+
+    batch: {"tokens" (1,C) int32 (null-padded past the prompt),
+    "block_table" (1,M) int32, "start" () int32 — absolute position of the
+    chunk's first token, "prompt_len" () int32}.  Returns (cache,
+    logits (1,C,V)) — the engine reads the logit row of the prompt's last
+    token from the final chunk.
+
+    Note for MoE archs: expert capacity is computed per forward call, so a
+    chunked prefill can route/drop tokens slightly differently than one full
+    prefill of the same prompt.  Dense archs are bit-identical to lm_prefill.
+    """
+    start = batch["start"].astype(jnp.int32)
+    prompt_len = batch["prompt_len"].astype(jnp.int32)
+    table = batch["block_table"].astype(jnp.int32)
+    c = batch["tokens"].shape[1]
+    chunk_pos = start + jnp.arange(c, dtype=jnp.int32)
+    x = embed_tokens(params["embed"], batch["tokens"])
+
+    def body(x, xs):
+        lps, kcs, vcs = xs
+        new_kc, new_vc = [], []
+        for i, lp in enumerate(lps):
+            kc, vc = kcs[i], vcs[i]
+            xn = rms_norm(x, lp["ln1"], cfg.norm_eps)
+            o, kc, vc = attn.attention_prefill_chunk_block(
+                cfg, lp["attn"], xn, kc, vc, table, chunk_pos, prompt_len)
+            h = x + o
+            y, _ = _ffn(cfg, lp, rms_norm(h, lp["ln2"], cfg.norm_eps), decode=False)
+            x = h + y
+            new_kc.append(kc)
+            new_vc.append(vc)
+        return x, (tuple(new_kc), tuple(new_vc))
+
+    every, k_slots, v_slots = _slot_major_split(cfg, cache)
+    x, (new_k, new_v) = jax.lax.scan(body, x, (params["layers"], k_slots, v_slots))
+    h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_from_hidden(cfg, params["embed"], h)
+    return _slot_major_merge(new_k, new_v, every), logits

@@ -1,31 +1,61 @@
-"""Batched serving engine: slot-based continuous batching over a shared KV
-cache (decode-centric, matching the paper's token-throughput evaluation).
+"""Paged-KV continuous-batching serve engine.
 
-Requests occupy fixed batch slots; every engine step decodes one token for
-all live slots; finished slots are refilled from the queue after a prefill.
-Prefill for a new request runs at batch=slot granularity and its KV is
-spliced into the shared cache — the standard slot/continuous-batching
-architecture, sized down so it runs on CPU for tests/examples.
+KV memory is a shared **block pool** (``repro.serve.paged_cache``): each
+request holds an ordered block table, blocks are allocated as its sequence
+grows and freed the step it retires, so live KV scales with tokens actually
+resident instead of the dense slot cache's ``max_batch x max_len``
+preallocation (the MNN-LLM block-wise layout, arXiv 2506.10443).
 
-Kernel planning goes through the unified ``repro.pipeline`` entry point: at
-construction the engine compiles its attention block (max_len x head_dim)
-once and keeps the resulting ``KernelPlan`` + ``CompileReport``.  The
-pipeline's compile cache makes repeated engine construction (serve restarts,
-tests) skip saturation and search entirely.
+Scheduling is continuous batching with **chunked prefill**: every engine step
+runs (a) at most one prompt chunk for one admitting request and (b) one
+batched decode step for every live request — a long prompt therefore never
+stalls tokens streaming out of the decode batch.  Admission is worst-case by
+default: a request enters a slot only when the pool can hold
+``ceil((prompt + max_new) / block_size)`` blocks for it, so an admitted
+request can never die to pool exhaustion.  ``admission="optimistic"`` reserves
+only the prompt footprint and preempts the youngest request when the pool runs
+dry (preempted requests restart from their prompt; counted in metrics).
+
+Per-request sampling: greedy, temperature, top-k — Gumbel-max draws keyed on
+(request seed, token index), stateless and host-side, so runs are exactly
+reproducible (including across preemption restarts) with no per-token device
+dispatch in the decode loop.
+
+Kernel planning goes through the unified ``repro.pipeline`` entry point: the
+engine compiles its *paged* attention shapes — a 1-token decode query and a
+prefill chunk query against the pooled KV span — so the compiler plans for
+the layout serving actually uses.  The pipeline's compile cache makes
+repeated engine construction skip saturation and search entirely.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+import time
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.tensor_ir import inp, matmul, unary
 from repro.models import build_model
 from repro.pipeline import CompileOptions, Compiler, default_compiler
-from repro.core.tensor_ir import inp, matmul, unary
+from repro.serve.paged_cache import (BlockPool, BlockTable, PoolExhausted,
+                                     ServeMetrics, blocks_for_tokens,
+                                     dense_equiv_blocks, worst_case_blocks)
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request decoding strategy.  temperature <= 0 means greedy;
+    top_k == 0 means the full vocabulary."""
+    temperature: float = 0.0
+    top_k: int = 0
+    seed: int = 0
+
+
+GREEDY = SamplingParams()
 
 
 @dataclasses.dataclass
@@ -33,105 +63,395 @@ class Request:
     rid: int
     prompt: List[int]
     max_new: int = 16
+    sampling: SamplingParams = GREEDY
     out: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    rejected: bool = False
+    reject_reason: str = ""
+    # timing (monotonic seconds; filled in by the engine)
+    t_submit: float = 0.0
+    t_first: float = 0.0
+    t_done: float = 0.0
 
 
-def attention_block_term(seq_len: int, head_dim: int):
-    """The engine's attention inner block as a pipeline-compilable term."""
-    q = inp("Q", (seq_len, head_dim))
-    k = inp("K", (head_dim, seq_len))
-    v = inp("V", (seq_len, head_dim))
+@dataclasses.dataclass
+class _Active:
+    """A request occupying a batch slot."""
+    req: Request
+    table: BlockTable
+    reserved_left: int          # blocks still earmarked in the pool for us
+    admit_seq: int              # admission order (preemption picks the max)
+    next_prefill: int = 0       # prompt tokens already prefilled
+    pos: int = 0                # KV entries written (valid only post-prefill)
+
+    @property
+    def prefill_done(self) -> bool:
+        return self.next_prefill >= len(self.req.prompt)
+
+
+# ---------------------------------------------------------------------------
+# Pipeline terms: the attention shapes serving actually executes
+# ---------------------------------------------------------------------------
+
+def _attn_term(q_rows: int, kv_span: int, head_dim: int):
+    """O = MatMul(Exp(MatMul(Q, K)), V) with ``q_rows`` queries against a
+    ``kv_span``-position KV — the one attention inner block every serving
+    shape instantiates."""
+    q = inp("Q", (q_rows, head_dim))
+    k = inp("K", (head_dim, kv_span))
+    v = inp("V", (kv_span, head_dim))
     return matmul(unary(matmul(q, k), kind="exp"), v)
 
 
+def attention_block_term(seq_len: int, head_dim: int):
+    """Square attention inner block (kept for inspection tooling)."""
+    return _attn_term(seq_len, seq_len, head_dim)
+
+
+def paged_decode_attention_term(span: int, head_dim: int):
+    """One decode token's attention against a request's pooled KV span
+    (``span`` = max_blocks_per_seq * block_size gathered positions)."""
+    return _attn_term(1, span, head_dim)
+
+
+def chunked_prefill_attention_term(chunk: int, span: int, head_dim: int):
+    """A prefill chunk's attention: ``chunk`` queries against the span."""
+    return _attn_term(chunk, span, head_dim)
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, max_batch: int = 4,
-                 max_len: int = 256, compiler: Optional[Compiler] = None,
+                 max_len: int = 256, block_size: int = 16,
+                 num_blocks: Optional[int] = None,
+                 prefill_chunk_tokens: Optional[int] = None,
+                 admission: str = "conservative",
+                 compiler: Optional[Compiler] = None,
                  plan_kernels: bool = True):
-        assert cfg.family in ("dense", "moe", "vlm"), \
-            "slot engine currently targets decoder-LM families"
+        # vlm is excluded deliberately: the paged prefill/decode path embeds
+        # raw token ids with 2-D positions, which would silently degrade
+        # M-RoPE + vision-embeds frontends; wiring the embeds interface
+        # through chunked prefill is a roadmap item.
+        assert cfg.family in ("dense", "moe"), \
+            "paged engine targets token-frontend decoder-LM families"
+        assert admission in ("conservative", "optimistic")
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
         self.max_len = max_len
+        self.block_size = block_size
+        self.max_blocks_per_seq = blocks_for_tokens(max_len, block_size)
+        if num_blocks is None:
+            # capacity parity with the dense slot cache, plus the null block;
+            # smaller pools trade throughput for memory via admission control
+            num_blocks = max_batch * self.max_blocks_per_seq + 1
+        self.pool = BlockPool(num_blocks, block_size)
+        self.admission = admission
+        self.prefill_chunk_tokens = prefill_chunk_tokens or block_size
+
         self.fns = build_model(cfg)
-        self.cache = self.fns.make_cache(max_batch, max_len)
-        self.slots: List[Optional[Request]] = [None] * max_batch
-        self.slot_len = np.zeros(max_batch, dtype=np.int64)
+        assert self.fns.decode_paged is not None, \
+            f"family {cfg.family!r} has no paged decode path"
+        self.cache = self.fns.make_paged_cache(num_blocks, block_size)
+        self._decode_fn = jax.jit(lambda p, c, b: self.fns.decode_paged(p, c, b))
+        self._prefill_fn = jax.jit(lambda p, c, b: self.fns.prefill_chunk(p, c, b))
+
+        self.slots: List[Optional[_Active]] = [None] * max_batch
         self.queue: List[Request] = []
-        self._decode = jax.jit(
-            lambda p, c, b: self.fns.decode_step(p, c, b))
+        self.finished: List[Request] = []
+        self.rejected: List[Request] = []
         self.steps = 0
-        # unified pipeline: compile the attention block once; cached, so a
-        # second engine on the same shapes reuses the plan without re-search
+        self._admit_seq = 0
+        self._t0: Optional[float] = None
+        self._t_last = 0.0
+        self._submitted = 0
+        self._prefill_tokens = 0
+        self._decode_tokens = 0
+        self._preemptions = 0
+
+        # unified pipeline: compile the paged attention shapes once (cached,
+        # so a second engine on the same shapes skips the search passes)
+        self.compile_reports: Dict[str, object] = {}
         self.compile_report = None
         self.kernel_plan = None
         if plan_kernels:
             compiler = compiler or default_compiler()
-            res = compiler.compile(
-                attention_block_term(max_len, cfg.resolved_head_dim),
-                options=CompileOptions(extraction="greedy",
-                                       schedule_iterations=10))
-            self.compile_report = res.report
-            self.kernel_plan = res.report.kernel_plan
+            hd = cfg.resolved_head_dim
+            span = self.max_blocks_per_seq * block_size
+            opts = CompileOptions(extraction="greedy", schedule_iterations=10)
+            dec = compiler.compile(paged_decode_attention_term(span, hd),
+                                   options=opts)
+            pre = compiler.compile(
+                chunked_prefill_attention_term(self.prefill_chunk_tokens,
+                                               span, hd), options=opts)
+            self.compile_reports = {"decode": dec.report, "prefill": pre.report}
+            self.compile_report = dec.report
+            self.kernel_plan = dec.report.kernel_plan
 
     # -- request lifecycle -----------------------------------------------
-    def submit(self, req: Request):
+    def submit(self, req: Request) -> None:
+        req.t_submit = time.monotonic()
+        self._submitted += 1
         self.queue.append(req)
 
-    def _prefill_into_slot(self, slot: int, req: Request):
-        toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
-        cache1, logits = self.fns.prefill(self.params, {"tokens": toks})
-        # splice single-request cache into the batched slot cache
-        def splice(big, small):
-            if small.shape[1] == 1 and big.shape[1] == self.max_batch:
-                seq_ax = 2
-                pad = [(0, 0)] * small.ndim
-                pad[seq_ax] = (0, big.shape[seq_ax] - small.shape[seq_ax])
-                small2 = jnp.pad(small.astype(big.dtype), pad)
-                return big.at[:, slot:slot + 1].set(small2)
-            return big
-        self.cache = jax.tree.map(splice, self.cache, cache1)
-        self.slot_len[slot] = len(req.prompt)
-        first = int(jnp.argmax(logits[0]))
-        req.out.append(first)
-        self.slots[slot] = req
+    def _reject(self, req: Request, reason: str) -> None:
+        req.rejected = True
+        req.done = True
+        req.reject_reason = reason
+        self.rejected.append(req)
 
-    def _refill(self):
-        for i in range(self.max_batch):
-            if self.slots[i] is None and self.queue:
-                self._prefill_into_slot(i, self.queue.pop(0))
+    def _admit(self) -> int:
+        """Move queued requests into free slots, FIFO, under admission
+        control.  Head-of-line order is preserved: if the head doesn't fit
+        *right now*, nothing behind it jumps the queue."""
+        admitted = 0
+        while self.queue:
+            req = self.queue[0]
+            worst = worst_case_blocks(len(req.prompt), req.max_new,
+                                      self.block_size)
+            if not req.prompt:
+                self.queue.pop(0)
+                self._reject(req, "empty prompt")
+                continue
+            if req.max_new < 1:
+                self.queue.pop(0)
+                self._reject(req, f"max_new must be >= 1, got {req.max_new}")
+                continue
+            if len(req.prompt) + req.max_new > self.max_len:
+                self.queue.pop(0)
+                self._reject(req, f"prompt+max_new {len(req.prompt) + req.max_new}"
+                                  f" exceeds max_len {self.max_len}")
+                continue
+            if worst > self.pool.usable_blocks:
+                self.queue.pop(0)
+                self._reject(req, f"worst-case footprint {worst} blocks exceeds "
+                                  f"pool capacity {self.pool.usable_blocks}")
+                continue
+            slot = next((i for i, s in enumerate(self.slots) if s is None), None)
+            if slot is None:
+                break
+            need = worst if self.admission == "conservative" else \
+                blocks_for_tokens(len(req.prompt), self.block_size)
+            if not self.pool.reserve(need):
+                break
+            self.slots[slot] = _Active(
+                req=req, table=BlockTable(self.block_size),
+                reserved_left=need, admit_seq=self._admit_seq)
+            self._admit_seq += 1
+            self.queue.pop(0)
+            admitted += 1
+        return admitted
 
-    # -- engine step -------------------------------------------------------
-    def step(self):
-        """One decode step for all live slots (aligned decode: the engine
-        tracks a per-slot length; the batched step uses the max and per-slot
-        masking happens through the cache contents)."""
-        self._refill()
-        live = [i for i, s in enumerate(self.slots) if s is not None]
-        if not live:
-            return False
-        cur = int(self.slot_len[live].max())
-        tok = np.zeros((self.max_batch, 1), np.int32)
-        for i in live:
-            tok[i, 0] = self.slots[i].out[-1]
-        batch = {"token": jnp.asarray(tok), "cur_len": jnp.int32(cur)}
-        self.cache, logits = self._decode(self.params, self.cache, batch)
-        nxt = np.asarray(jnp.argmax(logits, axis=-1))
-        self.steps += 1
-        for i in live:
-            req = self.slots[i]
-            req.out.append(int(nxt[i]))
-            self.slot_len[i] += 1
-            if len(req.out) >= req.max_new or self.slot_len[i] >= self.max_len - 1:
-                req.done = True
-                self.slots[i] = None
+    # -- block accounting --------------------------------------------------
+    def _grow(self, a: _Active, n_tokens: int) -> bool:
+        """Grow ``a``'s table to hold ``n_tokens`` positions; False if the
+        pool ran dry and preemption couldn't help (optimistic mode only —
+        conservative reservations make this infallible)."""
+        while a.table.capacity < n_tokens:
+            if a.reserved_left > 0:
+                a.table.blocks.append(self.pool.alloc(reserved=True))
+                a.reserved_left -= 1
+                continue
+            try:
+                a.table.blocks.append(self.pool.alloc(reserved=False))
+            except PoolExhausted:
+                # Evict the youngest active request — possibly ourselves.
+                # Age-ordered eviction means the oldest request always makes
+                # progress, so overcommit can't livelock into mutual
+                # preemption ping-pong.
+                victim = max((s for s in self.slots if s is not None),
+                             key=lambda s: s.admit_seq)
+                self._requeue(victim)
+                if victim is a:
+                    return False
         return True
 
-    def run_until_done(self, max_steps: int = 1000) -> List[Request]:
-        finished: List[Request] = []
+    def _requeue(self, victim: _Active) -> None:
+        """Preempt: free the victim's blocks and restart it from its prompt
+        at the queue head.  KV is dropped (preemption-by-swap is a roadmap
+        item), so its generated tokens are discarded."""
+        victim.table.release_to(self.pool)
+        self.pool.release(victim.reserved_left)
+        victim.reserved_left = 0
+        # counters report *delivered* work: back out the discarded tokens so
+        # preemption churn can't inflate the CI-gated tokens/sec
+        self._prefill_tokens -= victim.next_prefill
+        self._decode_tokens -= max(len(victim.req.out) - 1, 0)
+        victim.req.out.clear()
+        self.queue.insert(0, victim.req)
+        self.slots[self.slots.index(victim)] = None
+        self._preemptions += 1
+
+    def _retire(self, a: _Active, now: Optional[float] = None) -> None:
+        a.req.done = True
+        a.req.t_done = time.monotonic() if now is None else now
+        a.table.release_to(self.pool)
+        self.pool.release(a.reserved_left)
+        a.reserved_left = 0
+        self.finished.append(a.req)
+        self.slots[self.slots.index(a)] = None
+
+    # -- sampling ----------------------------------------------------------
+    @staticmethod
+    def _sample(logits_row: np.ndarray, sp: SamplingParams, n_emitted: int) -> int:
+        """Gumbel-max sampling keyed on (seed, token index): stateless, so a
+        preempted request replays the same draws on restart, and host-side,
+        so the decode hot loop pays no per-token device dispatches."""
+        if sp.temperature <= 0.0:
+            return int(np.argmax(logits_row))
+        x = logits_row.astype(np.float64) / sp.temperature
+        if 0 < sp.top_k < x.size:
+            kth = np.partition(x, -sp.top_k)[-sp.top_k]
+            x = np.where(x < kth, -np.inf, x)
+        rng = np.random.default_rng(
+            np.random.SeedSequence([sp.seed & (2**63 - 1), n_emitted]))
+        return int(np.argmax(x + rng.gumbel(size=x.size)))
+
+    # -- prefill -----------------------------------------------------------
+    def _prefill_step(self) -> bool:
+        """Run ONE prompt chunk for the oldest admitting request.  Bounding
+        prefill work per engine step is what keeps decode latency flat while
+        long prompts trickle in."""
+        pending = [s for s in self.slots if s is not None and not s.prefill_done]
+        if not pending:
+            return False
+        a = min(pending, key=lambda s: s.admit_seq)
+        req, c = a.req, self.prefill_chunk_tokens
+        plen = len(req.prompt)
+        start = a.next_prefill
+        end = min(start + c, plen)
+        if not self._grow(a, end):
+            return True  # preempted ourselves; the step still did work
+        chunk = req.prompt[start:end] + [0] * (c - (end - start))
+        batch = {
+            "tokens": jnp.asarray([chunk], jnp.int32),
+            "block_table": jnp.asarray(
+                [a.table.padded(self.max_blocks_per_seq)], jnp.int32),
+            "start": jnp.int32(start),
+            "prompt_len": jnp.int32(plen),
+        }
+        self.cache, logits = self._prefill_fn(self.params, self.cache, batch)
+        a.next_prefill = end
+        self._prefill_tokens += end - start
+        if a.prefill_done:
+            a.pos = plen
+            row = np.asarray(logits[0, plen - 1 - start])
+            first = self._sample(row, req.sampling, 0)
+            req.out.append(first)
+            req.t_first = time.monotonic()
+            if req.max_new <= 1:
+                self._retire(a)
+        return True
+
+    # -- decode ------------------------------------------------------------
+    def _decode_step(self) -> bool:
+        """One batched decode step for every live (prefill-complete) slot."""
+        live = [s for s in self.slots if s is not None and s.prefill_done]
+        # make sure every live row can write its next KV entry; under
+        # optimistic admission this can preempt (an earlier row's growth may
+        # evict a later row — or the row itself, when it is the youngest)
+        for a in live:
+            if a in self.slots:
+                self._grow(a, a.pos + 1)
+        live = [a for a in live if a in self.slots]
+        if not live:
+            return False
+
+        m = self.max_blocks_per_seq
+        tok = np.zeros((self.max_batch, 1), np.int32)
+        tables = np.zeros((self.max_batch, m), np.int32)
+        lens = np.zeros((self.max_batch,), np.int32)
+        rows = []
+        for a in live:
+            i = self.slots.index(a)
+            rows.append((i, a))
+            tok[i, 0] = a.req.out[-1]
+            tables[i] = a.table.padded(m)
+            lens[i] = a.pos
+        batch = {"token": jnp.asarray(tok),
+                 "block_tables": jnp.asarray(tables),
+                 "seq_lens": jnp.asarray(lens)}
+        self.cache, logits = self._decode_fn(self.params, self.cache, batch)
+        logits_np = np.asarray(logits)
+        now = time.monotonic()
+        for i, a in rows:
+            req = a.req
+            nxt = self._sample(logits_np[i], req.sampling, len(req.out))
+            req.out.append(nxt)
+            a.pos += 1
+            self._decode_tokens += 1
+            if len(req.out) >= req.max_new or a.pos >= self.max_len:
+                self._retire(a, now=now)
+        return True
+
+    # -- engine loop -------------------------------------------------------
+    def step(self) -> bool:
+        """One engine iteration: admit, one prefill chunk, one batched decode
+        step.  Returns False when there is nothing left to do."""
+        if self._t0 is None:
+            self._t0 = time.monotonic()
+        worked = self._admit() > 0
+        worked = self._prefill_step() or worked
+        worked = self._decode_step() or worked
+        if worked:
+            self.steps += 1
+            self._t_last = time.monotonic()
+        return worked
+
+    def run_until_done(self, max_steps: int = 100_000) -> List[Request]:
+        """Drive the engine until queue and slots drain; returns the finished
+        requests in completion order (rejected requests are in
+        ``self.rejected``, not here)."""
         for _ in range(max_steps):
-            if not self.step() and not self.queue:
+            if not self.step():
                 break
-        return finished
+        return list(self.finished)
+
+    def reset_metrics(self) -> None:
+        """Zero the run counters (benchmarks warm the jit caches with a
+        throwaway workload first, then measure a clean window).  Requests
+        already finished are dropped from the ledger — callers keep their own
+        references."""
+        assert all(s is None for s in self.slots) and not self.queue, \
+            "reset_metrics with requests in flight"
+        self.steps = 0
+        self._t0 = None
+        self._t_last = 0.0
+        self._submitted = 0
+        self._prefill_tokens = 0
+        self._decode_tokens = 0
+        self._preemptions = 0
+        self.finished = []
+        self.rejected = []
+        self.pool.peak_used = self.pool.num_used
+
+    # -- metrics -----------------------------------------------------------
+    def metrics(self) -> ServeMetrics:
+        wall = max(self._t_last - self._t0, 1e-9) if self._t0 else 0.0
+        fin = self.finished
+        ttfts = [r.t_first - r.t_submit for r in fin if r.t_first > 0]
+        itl_num = sum(r.t_done - r.t_first for r in fin if len(r.out) > 1)
+        itl_den = sum(len(r.out) - 1 for r in fin if len(r.out) > 1)
+        return ServeMetrics(
+            wall_s=wall,
+            requests_submitted=self._submitted,
+            requests_finished=len(fin),
+            requests_rejected=len(self.rejected),
+            prefill_tokens=self._prefill_tokens,
+            decode_tokens=self._decode_tokens,
+            engine_steps=self.steps,
+            tokens_per_sec=self._decode_tokens / wall if wall else 0.0,
+            ttft_mean_s=float(np.mean(ttfts)) if ttfts else 0.0,
+            ttft_max_s=float(np.max(ttfts)) if ttfts else 0.0,
+            itl_mean_s=itl_num / itl_den if itl_den else 0.0,
+            peak_blocks_used=self.pool.peak_used,
+            pool_blocks=self.pool.usable_blocks,
+            block_size=self.block_size,
+            peak_pool_utilization=self.pool.peak_used / self.pool.usable_blocks,
+            dense_equiv_blocks=dense_equiv_blocks(self.max_batch, self.max_len,
+                                                  self.block_size),
+            preemptions=self._preemptions,
+        )

@@ -1,0 +1,210 @@
+"""Paged KV-cache bookkeeping: block pool, per-request block tables, metrics.
+
+This module is the *allocator* half of the paged serve engine — pure Python /
+numpy, no jax — so it can be unit-tested in milliseconds and reasoned about
+independently of the model code.  The device-side layout it manages is
+
+    cache["k"], cache["v"]: (n_layers, num_blocks, block_size, n_kv, head_dim)
+
+Block 0 is the **null block**: never allocated, used as the scatter/gather
+target for padded batch rows and padded block-table entries.  Garbage written
+there is never read unmasked (attention masks by per-request sequence length),
+so collisions on the null block are harmless by construction.
+
+Admission control works on *worst-case footprints*: a request needs at most
+``ceil((len(prompt) + max_new) / block_size)`` blocks over its lifetime.  The
+conservative policy reserves that up front so a request, once admitted, can
+never fail a mid-flight allocation; the optimistic policy reserves only the
+prompt's blocks and relies on preemption when the pool runs dry (MNN-LLM-style
+block-wise management, arXiv 2506.10443).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+NULL_BLOCK = 0
+
+
+def blocks_for_tokens(n_tokens: int, block_size: int) -> int:
+    """Number of blocks needed to hold ``n_tokens`` KV entries."""
+    return -(-n_tokens // block_size)  # ceil div
+
+
+def worst_case_blocks(prompt_len: int, max_new: int, block_size: int) -> int:
+    """Upper bound on blocks a request can ever hold.
+
+    The last sampled token's KV is never written (generation stops first), so
+    the bound is prompt + max_new - 1 written positions; we keep the simpler
+    prompt + max_new bound — one spare block at most, and it keeps the
+    admission math obviously safe.
+    """
+    return blocks_for_tokens(prompt_len + max_new, block_size)
+
+
+class PoolExhausted(Exception):
+    """Raised by ``alloc`` when no free block exists (callers that admit
+    conservatively should never see this; optimistic callers catch it and
+    preempt)."""
+
+
+class BlockPool:
+    """Fixed-size pool of KV blocks with reservation accounting.
+
+    ``num_blocks`` counts the device-side slabs *including* the null block;
+    ``usable_blocks`` is what requests can actually hold.  ``reserve`` /
+    ``release`` move blocks between the free and reserved ledgers without
+    touching device memory — an admitted request draws its actual blocks out
+    of its own reservation via ``alloc(reserved=True)``.
+    """
+
+    def __init__(self, num_blocks: int, block_size: int):
+        if num_blocks < 2:
+            raise ValueError("need at least 2 blocks (block 0 is the null block)")
+        if block_size < 1:
+            raise ValueError("block_size must be >= 1")
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        # LIFO free list keeps recently-freed (cache-warm) blocks hot.
+        self._free: List[int] = list(range(num_blocks - 1, 0, -1))
+        self._reserved = 0
+        self.peak_used = 0
+
+    # -- introspection ----------------------------------------------------
+    @property
+    def usable_blocks(self) -> int:
+        return self.num_blocks - 1
+
+    @property
+    def num_free(self) -> int:
+        """Blocks not handed out (ignores reservations)."""
+        return len(self._free)
+
+    @property
+    def num_used(self) -> int:
+        return self.usable_blocks - len(self._free)
+
+    @property
+    def num_reserved(self) -> int:
+        return self._reserved
+
+    def available(self) -> int:
+        """Blocks free AND not spoken for by a reservation."""
+        return len(self._free) - self._reserved
+
+    def utilization(self) -> float:
+        return self.num_used / self.usable_blocks
+
+    # -- reservations -----------------------------------------------------
+    def can_reserve(self, n: int) -> bool:
+        return n <= self.available()
+
+    def reserve(self, n: int) -> bool:
+        """Logically earmark ``n`` free blocks; False if they don't exist."""
+        if not self.can_reserve(n):
+            return False
+        self._reserved += n
+        return True
+
+    def release(self, n: int) -> None:
+        """Return ``n`` unused reservation slots to the available ledger."""
+        if n > self._reserved:
+            raise ValueError(f"releasing {n} > reserved {self._reserved}")
+        self._reserved -= n
+
+    # -- alloc / free -----------------------------------------------------
+    def alloc(self, reserved: bool = False) -> int:
+        """Pop one free block id.  ``reserved=True`` draws the block out of an
+        existing reservation (the caller must have reserved it); otherwise the
+        block must be available over and above all reservations."""
+        if reserved:
+            if self._reserved < 1:
+                raise ValueError("alloc(reserved=True) without a reservation")
+            if not self._free:
+                raise PoolExhausted("reservation ledger corrupt: no free block")
+            self._reserved -= 1
+        else:
+            if self.available() < 1:
+                raise PoolExhausted(
+                    f"no unreserved block free (used {self.num_used}/"
+                    f"{self.usable_blocks}, reserved {self._reserved})")
+        blk = self._free.pop()
+        self.peak_used = max(self.peak_used, self.num_used)
+        return blk
+
+    def free(self, blocks: List[int]) -> None:
+        for b in blocks:
+            if b == NULL_BLOCK:
+                raise ValueError("attempt to free the null block")
+            if not (0 < b < self.num_blocks):
+                raise ValueError(f"block id {b} out of range")
+            if b in self._free:
+                raise ValueError(f"double free of block {b}")
+            self._free.append(b)
+
+
+@dataclasses.dataclass
+class ServeMetrics:
+    """One serving run's scorecard (emitted into BENCH_serve.json)."""
+    wall_s: float = 0.0
+    requests_submitted: int = 0
+    requests_finished: int = 0
+    requests_rejected: int = 0
+    prefill_tokens: int = 0
+    decode_tokens: int = 0
+    engine_steps: int = 0
+    tokens_per_sec: float = 0.0          # decode tokens / wall
+    ttft_mean_s: float = 0.0             # submit -> first token
+    ttft_max_s: float = 0.0
+    itl_mean_s: float = 0.0              # mean inter-token latency
+    peak_blocks_used: int = 0
+    pool_blocks: int = 0                 # usable blocks in the pool
+    block_size: int = 0
+    peak_pool_utilization: float = 0.0
+    dense_equiv_blocks: int = 0          # max_batch * ceil(max_len/block_size)
+    preemptions: int = 0
+
+    def to_dict(self) -> Dict[str, float]:
+        return dataclasses.asdict(self)
+
+    def summary(self) -> str:
+        return (f"{self.requests_finished}/{self.requests_submitted} requests, "
+                f"{self.decode_tokens} decode tokens in {self.wall_s:.2f}s -> "
+                f"{self.tokens_per_sec:.1f} tok/s | ttft {self.ttft_mean_s*1e3:.0f}ms "
+                f"| itl {self.itl_mean_s*1e3:.1f}ms | pool peak "
+                f"{self.peak_blocks_used}/{self.pool_blocks} blocks "
+                f"({self.peak_pool_utilization:.0%}) | "
+                f"{self.preemptions} preemptions, {self.requests_rejected} rejected")
+
+
+@dataclasses.dataclass
+class BlockTable:
+    """A request's ordered block list: token position p lives at
+    ``blocks[p // block_size]`` offset ``p % block_size``."""
+    block_size: int
+    blocks: List[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def capacity(self) -> int:
+        return len(self.blocks) * self.block_size
+
+    def ensure(self, n_tokens: int, pool: BlockPool, reserved: bool) -> None:
+        """Grow the table until it can hold ``n_tokens`` positions."""
+        while self.capacity < n_tokens:
+            self.blocks.append(pool.alloc(reserved=reserved))
+
+    def padded(self, max_blocks: int) -> List[int]:
+        """Fixed-width view for device-side batching (null-block padded)."""
+        if len(self.blocks) > max_blocks:
+            raise ValueError(f"table {len(self.blocks)} blocks > max {max_blocks}")
+        return self.blocks + [NULL_BLOCK] * (max_blocks - len(self.blocks))
+
+    def release_to(self, pool: BlockPool) -> None:
+        pool.free(self.blocks)
+        self.blocks = []
+
+
+def dense_equiv_blocks(max_batch: int, max_len: int, block_size: int) -> int:
+    """KV footprint (in blocks) of the old dense slot cache: every slot
+    preallocates max_len positions regardless of the request in it."""
+    return max_batch * blocks_for_tokens(max_len, block_size)

@@ -1,0 +1,126 @@
+"""Paged KV allocator: pure-Python tests, no jax import, millisecond-fast.
+
+Covers the satellite checklist: alloc/free round-trips, exhaustion surfacing
+as a controlled failure (admission rejection at the engine layer), and block
+tables staying consistent across interleaved prefill/decode/retire."""
+import pytest
+
+from repro.serve.paged_cache import (NULL_BLOCK, BlockPool, BlockTable,
+                                     PoolExhausted, blocks_for_tokens,
+                                     dense_equiv_blocks, worst_case_blocks)
+
+
+def test_block_math():
+    assert blocks_for_tokens(1, 8) == 1
+    assert blocks_for_tokens(8, 8) == 1
+    assert blocks_for_tokens(9, 8) == 2
+    assert worst_case_blocks(prompt_len=7, max_new=9, block_size=8) == 2
+    assert worst_case_blocks(prompt_len=8, max_new=9, block_size=8) == 3
+    assert dense_equiv_blocks(max_batch=4, max_len=60, block_size=8) == 4 * 8
+
+
+def test_alloc_free_roundtrip():
+    pool = BlockPool(num_blocks=9, block_size=4)
+    assert pool.usable_blocks == 8
+    got = [pool.alloc() for _ in range(8)]
+    assert len(set(got)) == 8, "allocated block ids must be unique"
+    assert NULL_BLOCK not in got, "the null block is never handed out"
+    assert pool.num_free == 0 and pool.num_used == 8
+    assert pool.peak_used == 8
+    with pytest.raises(PoolExhausted):
+        pool.alloc()
+    pool.free(got)
+    assert pool.num_free == 8 and pool.num_used == 0
+    # full round-trip: the same capacity is allocatable again
+    again = [pool.alloc() for _ in range(8)]
+    assert sorted(again) == sorted(got)
+    assert pool.peak_used == 8  # peak survives the free/realloc cycle
+
+
+def test_free_rejects_garbage():
+    pool = BlockPool(num_blocks=5, block_size=4)
+    blk = pool.alloc()
+    pool.free([blk])
+    with pytest.raises(ValueError):
+        pool.free([blk])            # double free
+    with pytest.raises(ValueError):
+        pool.free([NULL_BLOCK])     # null block is not freeable
+    with pytest.raises(ValueError):
+        pool.free([99])             # out of range
+
+
+def test_reservations_gate_allocation():
+    pool = BlockPool(num_blocks=9, block_size=4)
+    assert pool.can_reserve(8)
+    assert not pool.can_reserve(9), "cannot reserve more than the usable pool"
+    assert pool.reserve(6)
+    assert pool.available() == 2
+    assert not pool.reserve(3), "reservation beyond availability must fail"
+    # unreserved allocation respects the reservation ledger
+    a, b = pool.alloc(), pool.alloc()
+    with pytest.raises(PoolExhausted):
+        pool.alloc()  # 6 free blocks remain, but all 6 are reserved
+    # reserved allocation draws the ledger down
+    c = pool.alloc(reserved=True)
+    assert pool.num_reserved == 5
+    pool.release(5)
+    assert pool.num_reserved == 0
+    assert pool.available() == pool.num_free == 5
+    pool.free([a, b, c])
+    with pytest.raises(ValueError):
+        pool.release(1)  # nothing reserved anymore
+
+
+def test_block_tables_stay_consistent_interleaved():
+    """Two requests interleaving prefill growth, decode growth, and retire:
+    tables never share a block, capacity covers every written position, and
+    retiring returns exactly the held blocks."""
+    pool = BlockPool(num_blocks=9, block_size=4)
+    ta, tb = BlockTable(4), BlockTable(4)
+    ta.ensure(6, pool, reserved=False)       # request A prefills 6 tokens
+    tb.ensure(3, pool, reserved=False)       # B prefills 3 (interleaved)
+    assert ta.capacity >= 6 and tb.capacity >= 3
+    assert not set(ta.blocks) & set(tb.blocks), "tables must be disjoint"
+    for step in range(7, 12):                # A decodes to 11 tokens
+        ta.ensure(step, pool, reserved=False)
+        tb.ensure(step - 3, pool, reserved=False)
+    assert not set(ta.blocks) & set(tb.blocks)
+    assert len(ta.blocks) == blocks_for_tokens(11, 4)
+    held = len(ta.blocks) + len(tb.blocks)
+    assert pool.num_used == held
+    # padded device view: fixed width, null-padded, own blocks first
+    padded = ta.padded(8)
+    assert len(padded) == 8
+    assert padded[:len(ta.blocks)] == ta.blocks
+    assert all(p == NULL_BLOCK for p in padded[len(ta.blocks):])
+    with pytest.raises(ValueError):
+        ta.padded(1)  # table wider than the padded view is a bug
+    a_blocks = list(ta.blocks)
+    ta.release_to(pool)                      # A retires
+    assert ta.blocks == [] and pool.num_used == len(tb.blocks)
+    # B can immediately grow into A's returned blocks
+    tb.ensure(30, pool, reserved=False)
+    assert set(a_blocks) & set(tb.blocks), "freed blocks are reusable"
+    tb.release_to(pool)
+    assert pool.num_used == 0
+
+
+def test_exhaustion_is_controlled_not_a_crash():
+    """Growing past the pool raises PoolExhausted (which the engine converts
+    into admission rejection / preemption) rather than corrupting state."""
+    pool = BlockPool(num_blocks=3, block_size=4)
+    t = BlockTable(4)
+    t.ensure(8, pool, reserved=False)        # takes both usable blocks
+    with pytest.raises(PoolExhausted):
+        t.ensure(9, pool, reserved=False)
+    # state is intact: the table still holds its 2 blocks, pool is just full
+    assert len(t.blocks) == 2 and pool.num_free == 0
+    t.release_to(pool)
+    assert pool.num_free == 2
+
+
+def test_pool_rejects_degenerate_shapes():
+    with pytest.raises(ValueError):
+        BlockPool(num_blocks=1, block_size=4)   # no room beside the null block
+    with pytest.raises(ValueError):
+        BlockPool(num_blocks=4, block_size=0)

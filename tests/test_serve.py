@@ -1,41 +1,54 @@
-"""Serving engine: slot batching, prefill splice, decode equivalence."""
+"""Paged serving engine: continuous batching, chunked prefill, per-request
+sampling, admission control, and the run_until_done regression."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs.base import get_config, reduced_config
 from repro.models import build_model
-from repro.serve.engine import Request, ServeEngine
+from repro.serve.engine import Request, SamplingParams, ServeEngine
+from repro.serve.paged_cache import dense_equiv_blocks
 
 
-def _setup():
+@pytest.fixture(scope="module")
+def setup():
     cfg = reduced_config(get_config("qwen3-0.6b"))
     fns = build_model(cfg)
     params = fns.init(jax.random.PRNGKey(0))
     return cfg, fns, params
 
 
-def test_engine_completes_requests():
-    cfg, fns, params = _setup()
-    eng = ServeEngine(cfg, params, max_batch=2, max_len=32)
+def test_run_until_done_returns_finished(setup):
+    """Regression: run_until_done used to declare ``finished`` and return it
+    empty; it must return every completed request."""
+    cfg, fns, params = setup
+    eng = ServeEngine(cfg, params, max_batch=2, max_len=32, block_size=4,
+                      plan_kernels=False)
     reqs = [Request(rid=i, prompt=[3 + i, 5, 7], max_new=4) for i in range(5)]
     for r in reqs:
         eng.submit(r)
-    eng.run_until_done(max_steps=100)
-    assert all(r.done for r in reqs)
-    assert all(len(r.out) >= 4 for r in reqs)
+    finished = eng.run_until_done(max_steps=200)
+    assert len(finished) == 5
+    assert {r.rid for r in finished} == {0, 1, 2, 3, 4}
+    assert all(r.done for r in finished)
+    assert all(len(r.out) == 4 for r in finished)
 
 
-def test_engine_matches_single_request_decode():
-    """Batched engine output for one request == raw prefill+decode loop."""
-    cfg, fns, params = _setup()
-    prompt = [3, 5, 7, 11]
-    eng = ServeEngine(cfg, params, max_batch=2, max_len=32)
-    r = Request(rid=0, prompt=prompt, max_new=4)
+def test_engine_matches_single_request_decode(setup):
+    """Paged engine output (chunked prefill + paged decode) for one greedy
+    request == raw dense prefill+decode loop."""
+    cfg, fns, params = setup
+    prompt = [3, 5, 7, 11, 13, 17, 19]
+    # chunk of 3 forces the prompt through 3 prefill chunks
+    eng = ServeEngine(cfg, params, max_batch=2, max_len=32, block_size=4,
+                      prefill_chunk_tokens=3, plan_kernels=False)
+    r = Request(rid=0, prompt=prompt, max_new=5)
     eng.submit(r)
-    eng.run_until_done(max_steps=50)
+    finished = eng.run_until_done(max_steps=100)
+    assert [f.rid for f in finished] == [0]
 
-    # manual greedy decode
+    # dense oracle
     cache1, logits = fns.prefill(params, {"tokens": jnp.asarray([prompt], jnp.int32)})
     def embed(small, big):
         if small.shape == big.shape:
@@ -48,10 +61,140 @@ def test_engine_matches_single_request_decode():
     cache = jax.tree.map(embed, cache1, fns.make_cache(1, 32))
     toks = [int(jnp.argmax(logits[0]))]
     cur = len(prompt)
-    for _ in range(3):
+    for _ in range(4):
         cache, lg = fns.decode_step(params, cache,
                                     {"token": jnp.asarray([[toks[-1]]], jnp.int32),
                                      "cur_len": jnp.int32(cur)})
         toks.append(int(jnp.argmax(lg[0])))
         cur += 1
-    assert r.out[:4] == toks
+    assert r.out == toks
+
+
+def test_acceptance_12_requests_mixed(setup):
+    """The PR's acceptance workload: 12 requests with mixed prompt/output
+    lengths through max_batch=4 all complete, pool utilization stays below
+    100%, and peak blocks beat the dense max_batch x max_len footprint."""
+    cfg, fns, params = setup
+    eng = ServeEngine(cfg, params, max_batch=4, max_len=64, block_size=8,
+                      plan_kernels=False)
+    rng = np.random.default_rng(0)
+    reqs = []
+    for i in range(12):
+        plen = int(rng.integers(3, 21))
+        reqs.append(Request(rid=i, prompt=rng.integers(1, cfg.vocab, size=plen).tolist(),
+                            max_new=int(rng.integers(4, 15))))
+    for r in reqs:
+        eng.submit(r)
+    finished = eng.run_until_done()
+    assert len(finished) == 12
+    assert {r.rid for r in finished} == set(range(12))
+    m = eng.metrics()
+    assert m.requests_finished == 12 and m.requests_rejected == 0
+    assert m.tokens_per_sec > 0 and m.ttft_mean_s > 0
+    assert m.peak_pool_utilization < 1.0
+    dense = dense_equiv_blocks(4, 64, 8)
+    assert m.dense_equiv_blocks == dense
+    assert m.peak_blocks_used < dense, \
+        "paged cache must beat the dense slot cache's KV footprint"
+    # blocks all returned once the workload drains
+    assert eng.pool.num_used == 0
+
+
+def test_admission_rejects_oversized(setup):
+    """A request whose worst-case footprint can never fit is rejected (not
+    crashed on); the rest of the workload is unaffected."""
+    cfg, fns, params = setup
+    # pool of 4 usable blocks x 4 tokens = 16 token capacity
+    eng = ServeEngine(cfg, params, max_batch=2, max_len=64, block_size=4,
+                      num_blocks=5, plan_kernels=False)
+    big = Request(rid=0, prompt=[1] * 12, max_new=12)     # worst 6 > 4 blocks
+    toolong = Request(rid=1, prompt=[1] * 60, max_new=8)  # 68 > max_len
+    empty = Request(rid=3, prompt=[], max_new=4)
+    nonew = Request(rid=4, prompt=[1, 2], max_new=0)
+    ok = Request(rid=2, prompt=[2, 3, 4], max_new=4)      # worst 2 blocks
+    for r in (big, toolong, empty, nonew, ok):
+        eng.submit(r)
+    finished = eng.run_until_done()
+    assert [r.rid for r in finished] == [2]
+    assert big.rejected and "pool capacity" in big.reject_reason
+    assert toolong.rejected and "max_len" in toolong.reject_reason
+    assert empty.rejected and "empty" in empty.reject_reason
+    assert nonew.rejected and "max_new" in nonew.reject_reason
+    assert {r.rid for r in eng.rejected} == {0, 1, 3, 4}
+    assert eng.metrics().requests_rejected == 4
+
+
+def test_sampling_seeded_reproducible(setup):
+    """Same seeds -> identical outputs across independent engine runs."""
+    cfg, fns, params = setup
+    def run():
+        eng = ServeEngine(cfg, params, max_batch=2, max_len=32, block_size=4,
+                          plan_kernels=False)
+        reqs = [Request(rid=i, prompt=[5, 7, 11 + i], max_new=6,
+                        sampling=SamplingParams(temperature=1.0, top_k=20, seed=i))
+                for i in range(3)]
+        for r in reqs:
+            eng.submit(r)
+        eng.run_until_done()
+        return [tuple(r.out) for r in reqs]
+    assert run() == run()
+
+
+def test_sampling_unit_properties():
+    """Sampler semantics on synthetic logits: greedy = argmax, temperature
+    draws vary per step, are seed-keyed, and respect top-k support."""
+    rng = np.random.default_rng(0)
+    logits = rng.normal(size=128).astype(np.float32)
+    greedy = ServeEngine._sample(logits, SamplingParams(), 0)
+    assert greedy == int(np.argmax(logits))
+    sp = SamplingParams(temperature=1.0, top_k=16, seed=3)
+    draws = [ServeEngine._sample(logits, sp, i) for i in range(16)]
+    assert draws == [ServeEngine._sample(logits, sp, i) for i in range(16)]
+    assert len(set(draws)) > 1, "temperature sampling must vary across steps"
+    other = [ServeEngine._sample(logits, SamplingParams(1.0, 16, 4), i)
+             for i in range(16)]
+    assert draws != other, "different seeds must give different streams"
+    topk = set(np.argsort(logits)[-16:])
+    assert set(draws) <= topk, "top-k sampling must stay in the top-k support"
+
+
+def test_optimistic_admission_preempts_and_recovers(setup):
+    """With optimistic admission and a pool too small for both requests'
+    full generations, the engine preempts the youngest, restarts it, and
+    still completes everything."""
+    cfg, fns, params = setup
+    # 6 usable blocks x 4 = 24 tokens; each request needs 4+16=20 tokens, so
+    # both fit individually but not together
+    eng = ServeEngine(cfg, params, max_batch=2, max_len=32, block_size=4,
+                      num_blocks=7, admission="optimistic", plan_kernels=False)
+    reqs = [Request(rid=i, prompt=[3, 5, 7, 11 + i], max_new=16)
+            for i in range(2)]
+    for r in reqs:
+        eng.submit(r)
+    finished = eng.run_until_done()
+    assert {r.rid for r in finished} == {0, 1}
+    assert all(len(r.out) == 16 for r in reqs)
+    m = eng.metrics()
+    assert m.preemptions >= 1, "this workload must overcommit and preempt"
+    assert eng.pool.num_used == 0
+    # conservative admission on the same workload serializes instead
+    eng2 = ServeEngine(cfg, params, max_batch=2, max_len=32, block_size=4,
+                       num_blocks=7, admission="conservative",
+                       plan_kernels=False)
+    for i in range(2):
+        eng2.submit(Request(rid=i, prompt=[3, 5, 7, 11 + i], max_new=16))
+    assert len(eng2.run_until_done()) == 2
+    assert eng2.metrics().preemptions == 0
+
+
+def test_engine_plans_paged_kernels_through_pipeline(setup):
+    """plan_kernels=True compiles the paged decode + prefill-chunk attention
+    shapes through repro.pipeline and keeps the reports."""
+    cfg, fns, params = setup
+    eng = ServeEngine(cfg, params, max_batch=2, max_len=32, block_size=8)
+    assert set(eng.compile_reports) == {"decode", "prefill"}
+    assert eng.kernel_plan is not None
+    assert eng.compile_report.pass_times, "per-pass telemetry must be present"
+    # cache hit on identical shapes: a second engine reuses the plan
+    eng2 = ServeEngine(cfg, params, max_batch=2, max_len=32, block_size=8)
+    assert eng2.compile_reports["decode"].cache_hit
