@@ -1,0 +1,127 @@
+"""Serve-bench trajectory aggregator: fold accumulated ``BENCH_serve.json``
+artifacts into a trend table and a ratchet suggestion for the committed
+baseline floor.
+
+Every CI push uploads one ``BENCH_serve.json`` point (see
+``benchmarks.bench_serve``).  Download a pile of them (or collect local
+runs) and run
+
+    PYTHONPATH=src python -m benchmarks.aggregate_serve points/*.json \
+        --baseline benchmarks/baselines/serve.json [--ratchet]
+
+to get a time-ordered markdown trend table plus a suggested
+``tokens_per_sec`` floor: the trailing-median throughput discounted by the
+regression margin the CI gate already tolerates.  ``--ratchet`` rewrites the
+baseline file in place when (and only when) the suggestion is *above* the
+committed floor — the floor only ever moves up, so a noisy slow run can
+never loosen the gate.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+import sys
+from typing import Dict, List
+
+# floor = discount * trailing median: mirrors the CI gate's 20% tolerance so
+# a freshly-ratcheted floor is passable by the very runs that produced it
+DISCOUNT = 0.8
+TRAILING = 8           # points in the trailing-median window
+MIN_RATCHET_POINTS = 3  # one lucky idle-runner point must not tighten the gate
+
+
+def load_points(paths: List[str]) -> List[Dict]:
+    points = []
+    for path in paths:
+        with open(path) as f:
+            p = json.load(f)
+        if "tokens_per_sec" not in p:
+            raise ValueError(f"{path}: not a BENCH_serve.json point "
+                             "(no tokens_per_sec)")
+        p["_path"] = path
+        points.append(p)
+    points.sort(key=lambda p: p.get("unix_time", 0.0))
+    return points
+
+
+def trend_table(points: List[Dict]) -> str:
+    """Markdown trend table, one row per trajectory point, time-ordered."""
+    lines = [
+        "| # | unix_time | tok/s | ttft_mean_ms | pool_peak | preempt | point |",
+        "|---|-----------|-------|--------------|-----------|---------|-------|",
+    ]
+    for i, p in enumerate(points):
+        lines.append(
+            f"| {i} | {p.get('unix_time', 0):.0f} "
+            f"| {p['tokens_per_sec']:.1f} "
+            f"| {p.get('ttft_mean_s', 0) * 1e3:.1f} "
+            f"| {p.get('peak_pool_utilization', 0):.3f} "
+            f"| {p.get('preemptions', 0)} "
+            f"| {p['_path']} |")
+    return "\n".join(lines)
+
+
+def suggest_floor(points: List[Dict]) -> float:
+    """Trailing-median throughput discounted by the gate margin."""
+    tail = [p["tokens_per_sec"] for p in points[-TRAILING:]]
+    return DISCOUNT * statistics.median(tail)
+
+
+def ratchet(baseline_path: str, suggestion: float, apply: bool,
+            veto_reason: str = "") -> str:
+    with open(baseline_path) as f:
+        base = json.load(f)
+    floor = base["tokens_per_sec"]
+    if suggestion <= floor:
+        return (f"floor stays {floor:.1f} tok/s "
+                f"(suggestion {suggestion:.1f} not above it)")
+    if not apply:
+        hint = f"not applied: {veto_reason}" if veto_reason \
+            else "re-run with --ratchet to apply"
+        return f"floor {floor:.1f} -> suggest {suggestion:.1f} tok/s ({hint})"
+    base["tokens_per_sec"] = round(suggestion, 1)
+    base["_comment"] = (base.get("_comment", "").split(" [ratcheted")[0]
+                        + f" [ratcheted from {floor:.1f} by "
+                          f"benchmarks.aggregate_serve over the last "
+                          f"{TRAILING}-point trailing median]")
+    with open(baseline_path, "w") as f:
+        json.dump(base, f, indent=2)
+        f.write("\n")
+    return f"floor ratcheted {floor:.1f} -> {base['tokens_per_sec']:.1f} tok/s"
+
+
+def cli() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("points", nargs="+",
+                    help="BENCH_serve.json trajectory points")
+    ap.add_argument("--baseline", default="benchmarks/baselines/serve.json")
+    ap.add_argument("--ratchet", action="store_true",
+                    help="rewrite the baseline floor when the trailing "
+                         "median supports a higher one")
+    ap.add_argument("--markdown", default="",
+                    help="also write the trend table to this file")
+    args = ap.parse_args()
+
+    points = load_points(args.points)
+    table = trend_table(points)
+    print(table)
+    if args.markdown:
+        with open(args.markdown, "w") as f:
+            f.write(table + "\n")
+    latest = points[-1]["tokens_per_sec"]
+    suggestion = suggest_floor(points)
+    print(f"\n{len(points)} points; latest {latest:.1f} tok/s; "
+          f"trailing-median floor suggestion {suggestion:.1f}")
+    apply = args.ratchet and len(points) >= MIN_RATCHET_POINTS
+    veto = ""
+    if args.ratchet and not apply:
+        veto = (f"need >= {MIN_RATCHET_POINTS} points, got {len(points)} — "
+                "one lucky run must not tighten the gate")
+        print(f"--ratchet ignored: {veto}")
+    print(ratchet(args.baseline, suggestion, apply=apply, veto_reason=veto))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(cli())

@@ -1,9 +1,17 @@
 """Kernel-level benchmarks: interpret-mode correctness + modeled μkernel
 roofline times (no wall-clock meaning on CPU interpret; the modeled numbers
 are the NTT timing model the MINLP optimizes against), plus the jnp
-reference's real CPU wall time as a sanity anchor."""
+reference's real CPU wall time as a sanity anchor.
+
+``python -m benchmarks.bench_kernels --out BENCH_paged_attn.json`` also
+emits the paged-attention trajectory point (per-residency traffic model +
+kernel-vs-oracle error) for the CI artifact trail.
+"""
 from __future__ import annotations
 
+import argparse
+import json
+import sys
 import time
 
 import jax
@@ -47,10 +55,108 @@ def bench_flash(quick=False):
     return [("kernel_flash_512", wall * 1e6, f"err={err:.1e}")]
 
 
+def _paged_attention_results(quick=False):
+    """Paged decode at several residency ratios: the dense-gather fallback's
+    real CPU wall time vs the streamed kernel's modeled HBM traffic (the
+    interpret-mode kernel has no wall-clock meaning — it is emulation — so
+    correctness error is reported instead, like bench_flash).
+
+    The traffic model is the point of the kernel: the gather path moves the
+    *full* table span (M*bs positions) per decode token regardless of how
+    much of it is resident; the kernel streams only ceil(len/bs) pages.
+
+    Returns structured dicts; ``bench_paged_attention`` formats the CSV rows
+    and ``cli`` reads the numeric errors for the trajectory point / gate.
+    """
+    b, h, kv, hd = 4, 4, 2, 64
+    bs = 8
+    m = 8 if quick else 16
+    span = m * bs
+    n_pages = b * m + 1
+    rng = np.random.default_rng(7)
+    k_pages = jnp.asarray(rng.normal(size=(n_pages, bs, kv, hd)) * 0.3,
+                          jnp.float32)
+    v_pages = jnp.asarray(rng.normal(size=(n_pages, bs, kv, hd)) * 0.3,
+                          jnp.float32)
+    # each row owns m distinct blocks (block 0 reserved as the null block)
+    tables = jnp.asarray(
+        rng.permutation(np.arange(1, n_pages))[:b * m].reshape(b, m),
+        jnp.int32)
+    q = jnp.asarray(rng.normal(size=(b, 1, h, hd)) * 0.3, jnp.float32)
+
+    gather = jax.jit(ref.paged_attention_ref)
+    rows = []
+    for ratio in (0.25, 0.5, 1.0):
+        lens = jnp.full((b,), max(1, int(span * ratio)), jnp.int32)
+        gather(q, k_pages, v_pages, tables, lens).block_until_ready()
+        t0 = time.monotonic()
+        reps = 5
+        for _ in range(reps):
+            gather(q, k_pages, v_pages, tables, lens).block_until_ready()
+        wall = (time.monotonic() - t0) / reps
+        out = ops.paged_attention(q, k_pages, v_pages, tables, lens,
+                                  pages_per_fetch=2)
+        err = float(jnp.max(jnp.abs(
+            out - gather(q, k_pages, v_pages, tables, lens))))
+        pages_resident = -(-int(lens[0]) // bs)
+        rows.append({"name": f"kernel_paged_attn_r{int(ratio * 100)}",
+                     "gather_us": wall * 1e6, "err": err,
+                     "streamed_traffic_x": m / pages_resident})
+    return rows
+
+
+def _paged_rows(results):
+    return [(r["name"], r["gather_us"],
+             f"err={r['err']:.1e}_streamed_traffic="
+             f"{r['streamed_traffic_x']:.1f}x_less") for r in results]
+
+
+def bench_paged_attention(quick=False):
+    return _paged_rows(_paged_attention_results(quick))
+
+
+def _all_rows(quick: bool, paged_rows):
+    """One composition shared by the suite entry and the standalone cli."""
+    return bench_matmul(quick) + bench_flash(quick) + paged_rows
+
+
 def main(quick: bool = False):
-    return bench_matmul(quick) + bench_flash(quick)
+    return _all_rows(quick, bench_paged_attention(quick))
+
+
+def cli() -> int:
+    """Standalone entry: write the paged-attention trajectory point
+    (BENCH_paged_attn.json) for the CI artifact trail and gate on the
+    kernel-vs-oracle error.  ``--only paged`` skips the matmul/flash rows
+    the benchmarks.run suite already covers."""
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default="BENCH_paged_attn.json")
+    ap.add_argument("--only", choices=("all", "paged"), default="all")
+    args = ap.parse_args()
+    results = _paged_attention_results(quick=args.quick)
+    rows = _paged_rows(results)
+    if args.only == "all":
+        rows = _all_rows(args.quick, rows)
+    for r in rows:
+        print(",".join(str(x) for x in r))
+    max_err = max(r["err"] for r in results)
+    point = {
+        "bench": "paged_attn",
+        "unix_time": time.time(),
+        "quick": args.quick,
+        "rows": results,
+        "max_err_vs_oracle": max_err,
+    }
+    with open(args.out, "w") as f:
+        json.dump(point, f, indent=2)
+    print(f"trajectory point written to {args.out}")
+    if max_err > 1e-4:
+        print(f"bench_kernels: FAIL: paged kernel err {max_err:.2e} > 1e-4",
+              file=sys.stderr)
+        return 1
+    return 0
 
 
 if __name__ == "__main__":
-    for r in main():
-        print(",".join(str(x) for x in r))
+    sys.exit(cli())

@@ -129,6 +129,10 @@ class KernelPlan:
     block_k: int = 512
     block_q: int = 512      # flash attention q tile
     block_kv: int = 1024    # flash attention kv tile
+    # paged attention streams whole KV pages, so its kv tile is aligned to
+    # the page granularity (8) rather than the lane width — the MINLP's kv
+    # tile choice survives at page resolution instead of collapsing to 128
+    paged_block_kv: int = 512
 
 
 def kernel_plan(schedule: Schedule, group: int = 0) -> KernelPlan:
@@ -146,4 +150,17 @@ def kernel_plan(schedule: Schedule, group: int = 0) -> KernelPlan:
         block_k=pick("k", 512),
         block_q=pick("i", 512),
         block_kv=pick("l", 1024),
+        paged_block_kv=pick("l", 512, align=8),
     )
+
+
+def paged_pages_per_fetch(plan: KernelPlan, block_size: int,
+                          max_blocks_per_seq: int) -> int:
+    """Map the schedule's kv-span tile (``paged_block_kv`` tokens) to whole
+    KV pages fetched per paged-attention grid step.  This is how the serve
+    engine turns the compiler's tiling decision into the kernel's streaming
+    granularity instead of hand-picking a constant."""
+    if block_size <= 0:
+        return 1
+    pages = max(1, plan.paged_block_kv // block_size)
+    return max(1, min(pages, max_blocks_per_seq))

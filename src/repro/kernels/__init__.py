@@ -1,4 +1,5 @@
 """Pallas TPU kernels (NTT μkernel layer): pl.pallas_call + BlockSpec VMEM
 tiling, validated against the pure-jnp oracles in ref.py (interpret mode on
-CPU).  Kernels: matmul, flash_attention, rmsnorm, ssm_scan."""
+CPU).  Kernels: matmul, flash_attention, paged_attention, rmsnorm,
+ssm_scan."""
 from repro.kernels import ops, ref  # noqa: F401

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from repro.kernels.flash_attention import flash_attention_kernel
 from repro.kernels.matmul import matmul_kernel
+from repro.kernels.paged_attention import paged_attention_kernel
 from repro.kernels.rmsnorm import rmsnorm_kernel
 from repro.kernels.ssm_scan import ssm_scan_kernel
 
@@ -47,6 +48,50 @@ def flash_attention(q, k, v, causal: bool = True, q_offset: int = 0,
                                block_q=block_q, block_kv=block_kv,
                                interpret=_interpret())
     return o.reshape(b, h, sq, hd).transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("pages_per_fetch",))
+def paged_attention(q, k_pages, v_pages, block_tables, seq_lens,
+                    pages_per_fetch: int = 1):
+    """Paged decode attention: q (B,1,H,hd), pages (N,bs,KV,hd),
+    block_tables (B,M) int32, seq_lens (B,) int32 valid KV entries per row
+    (>= 1) -> (B,1,H,hd).
+
+    Streams pages through the block table (``paged_attention_kernel``)
+    instead of gathering the span; GQA is handled by grouping the H query
+    heads under their KV head (head h serves KV head h // (H//KV), matching
+    ``_repeat_kv``'s layout) — KV is never repeated or copied.
+    """
+    b, _, h, hd = q.shape
+    kv = k_pages.shape[2]
+    group = h // kv
+    qg = q.reshape(b, kv, group, hd)        # head = kv_i * group + g_i
+    qpos = jnp.broadcast_to((seq_lens - 1)[:, None], (b, group))
+    o = paged_attention_kernel(qg, k_pages, v_pages, block_tables, qpos,
+                               seq_lens, pages_per_fetch=pages_per_fetch,
+                               interpret=_interpret())
+    return o.reshape(b, 1, h, hd)
+
+
+@functools.partial(jax.jit, static_argnames=("pages_per_fetch",))
+def paged_attention_chunk(q, k_pages, v_pages, block_tables, chunk_pos,
+                          kv_lens, pages_per_fetch: int = 1):
+    """Paged chunked-prefill attention: q (B,C,H,hd) — C query tokens at
+    absolute positions chunk_pos (C,) int32 (shared across rows; the engine
+    prefills one request at a time), attending causally to the first
+    kv_lens (B,) entries of the paged span -> (B,C,H,hd)."""
+    b, c, h, hd = q.shape
+    kv = k_pages.shape[2]
+    group = h // kv
+    # rows grouped per KV head: r = g_i * C + c_i
+    qg = q.transpose(0, 2, 1, 3).reshape(b, kv, group * c, hd)
+    qpos = jnp.broadcast_to(jnp.tile(chunk_pos, (group,))[None, :],
+                            (b, group * c))
+    o = paged_attention_kernel(qg, k_pages, v_pages, block_tables, qpos,
+                               kv_lens, pages_per_fetch=pages_per_fetch,
+                               interpret=_interpret())
+    return o.reshape(b, kv, group, c, hd).transpose(0, 3, 1, 2, 4
+                                                    ).reshape(b, c, h, hd)
 
 
 @functools.partial(jax.jit, static_argnames=("eps", "block_rows"))

@@ -27,6 +27,58 @@ def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
     return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
 
 
+def _paged_masked_attention(q, k_pages, v_pages, block_tables, qpos, kv_lens):
+    """Dense-gather oracle core: q (B,KV,R,hd) with R query rows grouped
+    under each KV head, per-row causal bound qpos (B,R), span length
+    kv_lens (B,) -> (B,KV,R,hd) in f32."""
+    b, kv, r, hd = q.shape
+    bs = k_pages.shape[1]
+    m = block_tables.shape[1]
+    kg = k_pages[block_tables].reshape(b, m * bs, kv, hd).astype(jnp.float32)
+    vg = v_pages[block_tables].reshape(b, m * bs, kv, hd).astype(jnp.float32)
+    s = jnp.einsum("bkrd,bskd->bkrs", q.astype(jnp.float32), kg) \
+        / math.sqrt(hd)
+    kpos = jnp.arange(m * bs)[None, None, None, :]
+    live = (kpos <= qpos[:, None, :, None]) & \
+           (kpos < kv_lens[:, None, None, None])
+    p = jax.nn.softmax(jnp.where(live, s, -1e30), axis=-1)
+    return jnp.einsum("bkrs,bskd->bkrd", p, vg)
+
+
+def paged_attention_ref(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                        block_tables: jax.Array, seq_lens: jax.Array
+                        ) -> jax.Array:
+    """Decode oracle for ``ops.paged_attention``: gather the full span and
+    run exact masked softmax in f32.  q (B,1,H,hd) -> (B,1,H,hd)."""
+    b, _, h, hd = q.shape
+    kv = k_pages.shape[2]
+    group = h // kv
+    qg = q.reshape(b, kv, group, hd)
+    qpos = jnp.broadcast_to((seq_lens - 1)[:, None], (b, group))
+    o = _paged_masked_attention(qg, k_pages, v_pages, block_tables,
+                                qpos, seq_lens)
+    return o.reshape(b, 1, h, hd).astype(q.dtype)
+
+
+def paged_attention_chunk_ref(q: jax.Array, k_pages: jax.Array,
+                              v_pages: jax.Array, block_tables: jax.Array,
+                              chunk_pos: jax.Array, kv_lens: jax.Array
+                              ) -> jax.Array:
+    """Chunked-prefill oracle for ``ops.paged_attention_chunk``:
+    q (B,C,H,hd), per-token absolute positions chunk_pos (C,)."""
+    b, c, h, hd = q.shape
+    kv = k_pages.shape[2]
+    group = h // kv
+    qg = q.transpose(0, 2, 1, 3).reshape(b, kv, group * c, hd)
+    qpos = jnp.broadcast_to(jnp.tile(chunk_pos, (group,))[None, :],
+                            (b, group * c))
+    o = _paged_masked_attention(qg, k_pages, v_pages, block_tables,
+                                qpos, kv_lens)
+    return o.reshape(b, kv, group, c, hd).transpose(0, 3, 1, 2, 4
+                                                    ).reshape(b, c, h, hd
+                                                              ).astype(q.dtype)
+
+
 def rmsnorm_ref(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
     xf = x.astype(jnp.float32)
     var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)

@@ -31,6 +31,35 @@ def set_default_impl(impl: str) -> None:
     _DEFAULT_IMPL = impl
 
 
+# Paged-attention tiling chosen by the compiler (repro.pipeline -> Auto
+# Schedule -> KernelPlan): the serve engine calls set_paged_plan() with the
+# pages-per-fetch its compiled KernelPlan implies before tracing its
+# decode/prefill functions.  Module-level like _DEFAULT_IMPL: read at trace
+# time, so each engine's jit closures bake in the plan active at build.
+_PAGED_PLAN = {"pages_per_fetch": 1}
+
+
+def set_paged_plan(pages_per_fetch: int) -> None:
+    assert pages_per_fetch >= 1
+    _PAGED_PLAN["pages_per_fetch"] = int(pages_per_fetch)
+
+
+def paged_plan() -> dict:
+    return dict(_PAGED_PLAN)
+
+
+def _paged_impl() -> str:
+    """Resolve the paged-attention path: the REPRO_PAGED_ATTN knob, with
+    "auto" meaning kernel on TPU and dense gather on CPU (where interpret-
+    mode Pallas would be pure emulation)."""
+    from repro.perf import perf
+    mode = perf().paged_attn
+    if mode == "auto":
+        return "kernel" if jax.default_backend() != "cpu" else "gather"
+    assert mode in ("kernel", "gather"), f"bad REPRO_PAGED_ATTN {mode!r}"
+    return mode
+
+
 def _repeat_kv(k: jax.Array, n_rep: int) -> jax.Array:
     if n_rep == 1:
         return k
@@ -179,9 +208,15 @@ def attention_decode_block_paged(cfg: ModelConfig, p, x: jax.Array,
     q, k, v = qkv_project(cfg, p, x, positions)
     k_pages = paged_scatter_token(k_pages, block_tables, seq_lens, k[:, 0])
     v_pages = paged_scatter_token(v_pages, block_tables, seq_lens, v[:, 0])
-    kg = paged_gather(k_pages, block_tables)
-    vg = paged_gather(v_pages, block_tables)
-    o = decode_attention(q, kg, vg, seq_lens + 1)
+    if _paged_impl() == "kernel":
+        from repro.kernels import ops as kops
+        o = kops.paged_attention(
+            q, k_pages, v_pages, block_tables, seq_lens + 1,
+            pages_per_fetch=_PAGED_PLAN["pages_per_fetch"])
+    else:
+        kg = paged_gather(k_pages, block_tables)
+        vg = paged_gather(v_pages, block_tables)
+        o = decode_attention(q, kg, vg, seq_lens + 1)
     b = x.shape[0]
     from repro.distributed.sharding import weight_use
     out = jnp.einsum("bse,ed->bsd", o.reshape(b, 1, cfg.q_dim),
@@ -192,7 +227,8 @@ def attention_decode_block_paged(cfg: ModelConfig, p, x: jax.Array,
 def attention_prefill_chunk_block(cfg: ModelConfig, p, x: jax.Array,
                                   k_pages: jax.Array, v_pages: jax.Array,
                                   block_table: jax.Array, chunk_pos: jax.Array,
-                                  prompt_len: jax.Array):
+                                  prompt_len: jax.Array,
+                                  m_used: Optional[int] = None):
     """One prompt chunk's attention against the paged cache (batch of 1).
 
     x (1,C,d); block_table (1,M); chunk_pos (C,) absolute token positions of
@@ -201,9 +237,17 @@ def attention_prefill_chunk_block(cfg: ModelConfig, p, x: jax.Array,
     the engine).  The chunk attends to every previously-written position plus
     itself, causally — this is what lets prefill proceed in small chunks
     interleaved with decode steps without ever stalling the decode batch.
+
+    ``m_used`` (static) bounds the attended span to the table's first
+    ``m_used`` blocks — the engine passes ceil((start+C)/bs), so a chunk
+    never re-gathers (or re-streams) the full table capacity, only the
+    blocks written so far.  Positions past the chunk are causally masked
+    either way; this is purely a traffic/FLOP win.
     """
     q, k, v = qkv_project(cfg, p, x, chunk_pos[None, :])
     bs = k_pages.shape[1]
+    if m_used is not None:
+        block_table = block_table[:, :min(m_used, block_table.shape[1])]
     m = block_table.shape[1]
     valid = chunk_pos < prompt_len
     idx = jnp.clip(chunk_pos // bs, 0, m - 1)
@@ -211,18 +255,25 @@ def attention_prefill_chunk_block(cfg: ModelConfig, p, x: jax.Array,
     off = chunk_pos % bs
     k_pages = k_pages.at[blk, off].set(k[0].astype(k_pages.dtype))
     v_pages = v_pages.at[blk, off].set(v[0].astype(v_pages.dtype))
-    kg = paged_gather(k_pages, block_table)     # (1, M*bs, KV, hd)
-    vg = paged_gather(v_pages, block_table)
-    h_q = q.shape[2]
-    kv = kg.shape[2]
-    scale = 1.0 / math.sqrt(cfg.resolved_head_dim)
-    kh = _repeat_kv(kg, h_q // kv).transpose(0, 2, 1, 3)   # (1,H,M*bs,hd)
-    vh = _repeat_kv(vg, h_q // kv).transpose(0, 2, 1, 3)
-    qh = q.transpose(0, 2, 1, 3)                           # (1,H,C,hd)
-    kpos = jnp.arange(m * bs)
-    mask_add = _causal_mask_add(chunk_pos, kpos)[None, None]
-    o = _attend_block(qh, kh, vh, mask_add, scale).transpose(0, 2, 1, 3)
     c = x.shape[1]
+    if _paged_impl() == "kernel":
+        from repro.kernels import ops as kops
+        kv_lens = (chunk_pos[-1] + 1)[None]            # span written so far
+        o = kops.paged_attention_chunk(
+            q, k_pages, v_pages, block_table, chunk_pos, kv_lens,
+            pages_per_fetch=_PAGED_PLAN["pages_per_fetch"])
+    else:
+        kg = paged_gather(k_pages, block_table)     # (1, m_used*bs, KV, hd)
+        vg = paged_gather(v_pages, block_table)
+        h_q = q.shape[2]
+        kv = kg.shape[2]
+        scale = 1.0 / math.sqrt(cfg.resolved_head_dim)
+        kh = _repeat_kv(kg, h_q // kv).transpose(0, 2, 1, 3)  # (1,H,m*bs,hd)
+        vh = _repeat_kv(vg, h_q // kv).transpose(0, 2, 1, 3)
+        qh = q.transpose(0, 2, 1, 3)                          # (1,H,C,hd)
+        kpos = jnp.arange(m * bs)
+        mask_add = _causal_mask_add(chunk_pos, kpos)[None, None]
+        o = _attend_block(qh, kh, vh, mask_add, scale).transpose(0, 2, 1, 3)
     from repro.distributed.sharding import weight_use
     out = jnp.einsum("bse,ed->bsd", o.reshape(1, c, cfg.q_dim),
                      weight_use(p["wo"], "heads", None))

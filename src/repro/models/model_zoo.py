@@ -27,7 +27,7 @@ class ModelFns:
     # don't have a paged path yet (ssm/hybrid caches are O(1) per request).
     make_paged_cache: Optional[Callable] = None  # (num_blocks, block_size) -> cache
     decode_paged: Optional[Callable] = None      # (params, cache, batch) -> (cache, logits)
-    prefill_chunk: Optional[Callable] = None     # (params, cache, batch) -> (cache, logits)
+    prefill_chunk: Optional[Callable] = None     # (params, cache, batch, m_used=) -> (cache, logits)
 
 
 def _sds(shape, dtype):
@@ -70,7 +70,8 @@ def build_model(cfg: ModelConfig) -> ModelFns:
             input_specs=input_specs,
             make_paged_cache=lambda nb, bsz: transformer.make_paged_cache(cfg, nb, bsz, dtype),
             decode_paged=lambda p, c, b: transformer.lm_decode_step_paged(cfg, p, c, b),
-            prefill_chunk=lambda p, c, b: transformer.lm_prefill_chunk(cfg, p, c, b),
+            prefill_chunk=lambda p, c, b, m_used=None: transformer.lm_prefill_chunk(
+                cfg, p, c, b, m_used=m_used),
         )
 
     if fam == "ssm":

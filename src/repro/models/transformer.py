@@ -278,7 +278,8 @@ def lm_decode_step_paged(cfg: ModelConfig, params, cache: Dict, batch: Dict):
     return _slot_major_merge(new_k, new_v, every), logits
 
 
-def lm_prefill_chunk(cfg: ModelConfig, params, cache: Dict, batch: Dict):
+def lm_prefill_chunk(cfg: ModelConfig, params, cache: Dict, batch: Dict,
+                     m_used: Optional[int] = None):
     """Process one prompt chunk for a single request into the paged cache.
 
     batch: {"tokens" (1,C) int32 (null-padded past the prompt),
@@ -286,6 +287,11 @@ def lm_prefill_chunk(cfg: ModelConfig, params, cache: Dict, batch: Dict):
     chunk's first token, "prompt_len" () int32}.  Returns (cache,
     logits (1,C,V)) — the engine reads the logit row of the prompt's last
     token from the final chunk.
+
+    ``m_used`` (static int) restricts attention to the table's first blocks
+    — the engine passes ceil((start+C)/block_size), so early chunks don't
+    gather/stream the request's full table capacity.  One retrace per
+    distinct value, bounded by max_blocks_per_seq.
 
     Note for MoE archs: expert capacity is computed per forward call, so a
     chunked prefill can route/drop tokens slightly differently than one full
@@ -305,7 +311,8 @@ def lm_prefill_chunk(cfg: ModelConfig, params, cache: Dict, batch: Dict):
             kc, vc = kcs[i], vcs[i]
             xn = rms_norm(x, lp["ln1"], cfg.norm_eps)
             o, kc, vc = attn.attention_prefill_chunk_block(
-                cfg, lp["attn"], xn, kc, vc, table, chunk_pos, prompt_len)
+                cfg, lp["attn"], xn, kc, vc, table, chunk_pos, prompt_len,
+                m_used=m_used)
             h = x + o
             y, _ = _ffn(cfg, lp, rms_norm(h, lp["ln2"], cfg.norm_eps), decode=False)
             x = h + y

@@ -31,6 +31,13 @@ Knobs (defaults = the paper-faithful baseline):
           GSPMD to ALL-GATHER the (small) FSDP weight shards instead of
           partial-summing + all-reducing the (huge) activations — the fix
           for the dominant collective in the qwen2-vl train cell (§Perf)
+  REPRO_PAGED_ATTN     auto | kernel | gather
+      auto   — paged decode/prefill attention uses the block-streaming
+               Pallas kernel on TPU and the dense-gather jnp path on CPU
+               (interpret-mode Pallas is emulation, far slower than XLA)
+      kernel — force the Pallas paged-attention kernel (interpret on CPU;
+               what the parity suite runs)
+      gather — force the dense pages[tables] gather fallback
 """
 from __future__ import annotations
 
@@ -48,6 +55,7 @@ class PerfConfig:
     norm_f32: bool = True
     opt_state: str = "f32"
     weight_ag: bool = False
+    paged_attn: str = "auto"
 
 
 def perf() -> PerfConfig:
@@ -60,6 +68,7 @@ def perf() -> PerfConfig:
         norm_f32=os.environ.get("REPRO_NORM_F32", "1") == "1",
         opt_state=os.environ.get("REPRO_OPT_STATE", "f32"),
         weight_ag=os.environ.get("REPRO_WEIGHT_AG", "0") == "1",
+        paged_attn=os.environ.get("REPRO_PAGED_ATTN", "auto"),
     )
 
 

@@ -24,8 +24,11 @@ dispatch in the decode loop.
 Kernel planning goes through the unified ``repro.pipeline`` entry point: the
 engine compiles its *paged* attention shapes — a 1-token decode query and a
 prefill chunk query against the pooled KV span — so the compiler plans for
-the layout serving actually uses.  The pipeline's compile cache makes
-repeated engine construction skip saturation and search entirely.
+the layout serving actually uses.  The plan's kv tile also fixes the paged
+flash-attention kernel's pages-per-fetch (``repro.kernels.paged_attention``;
+dispatch via the REPRO_PAGED_ATTN knob — kernel on TPU, dense-gather
+fallback on CPU).  The pipeline's compile cache makes repeated engine
+construction skip saturation and search entirely.
 """
 from __future__ import annotations
 
@@ -38,8 +41,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.codegen import paged_pages_per_fetch
 from repro.core.tensor_ir import inp, matmul, unary
 from repro.models import build_model
+from repro.models import attention as attn_lib
 from repro.pipeline import CompileOptions, Compiler, default_compiler
 from repro.serve.paged_cache import (BlockPool, BlockTable, PoolExhausted,
                                      ServeMetrics, blocks_for_tokens,
@@ -156,8 +161,6 @@ class ServeEngine:
         assert self.fns.decode_paged is not None, \
             f"family {cfg.family!r} has no paged decode path"
         self.cache = self.fns.make_paged_cache(num_blocks, block_size)
-        self._decode_fn = jax.jit(lambda p, c, b: self.fns.decode_paged(p, c, b))
-        self._prefill_fn = jax.jit(lambda p, c, b: self.fns.prefill_chunk(p, c, b))
 
         self.slots: List[Optional[_Active]] = [None] * max_batch
         self.queue: List[Request] = []
@@ -190,6 +193,28 @@ class ServeEngine:
             self.compile_reports = {"decode": dec.report, "prefill": pre.report}
             self.compile_report = dec.report
             self.kernel_plan = dec.report.kernel_plan
+
+        # the compiler's kv tile for the *decode* shape sets how many pages
+        # the paged-attention kernel streams per grid step; the jit wrappers
+        # publish it at trace time so the traced graph bakes this plan in
+        # even if another engine has since planned different shapes
+        self.pages_per_fetch = 1
+        if self.kernel_plan is not None:
+            self.pages_per_fetch = paged_pages_per_fetch(
+                self.kernel_plan, block_size, self.max_blocks_per_seq)
+
+        def _decode(p, c, b):
+            attn_lib.set_paged_plan(self.pages_per_fetch)
+            return self.fns.decode_paged(p, c, b)
+
+        def _prefill(p, c, b, m_used):
+            attn_lib.set_paged_plan(self.pages_per_fetch)
+            return self.fns.prefill_chunk(p, c, b, m_used=m_used)
+
+        self._decode_fn = jax.jit(_decode)
+        # one retrace per distinct m_used (bounded by max_blocks_per_seq),
+        # each strictly cheaper than the old full-table trace
+        self._prefill_fn = jax.jit(_prefill, static_argnames=("m_used",))
 
     # -- request lifecycle -----------------------------------------------
     def submit(self, req: Request) -> None:
@@ -333,7 +358,11 @@ class ServeEngine:
             "start": jnp.int32(start),
             "prompt_len": jnp.int32(plen),
         }
-        self.cache, logits = self._prefill_fn(self.params, self.cache, batch)
+        # attend only over blocks written so far, not the full table capacity
+        m_used = min(blocks_for_tokens(start + c, self.block_size),
+                     self.max_blocks_per_seq)
+        self.cache, logits = self._prefill_fn(self.params, self.cache, batch,
+                                              m_used=m_used)
         a.next_prefill = end
         self._prefill_tokens += end - start
         if a.prefill_done:

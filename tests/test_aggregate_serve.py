@@ -1,0 +1,79 @@
+"""The serve-bench trajectory aggregator: trend table, floor suggestion,
+ratchet-only-upward semantics."""
+import json
+
+import pytest
+
+from benchmarks.aggregate_serve import (load_points, ratchet, suggest_floor,
+                                        trend_table)
+
+
+def _point(path, t, tps, **kw):
+    p = {"bench": "serve", "unix_time": t, "tokens_per_sec": tps,
+         "ttft_mean_s": kw.get("ttft", 0.04),
+         "peak_pool_utilization": kw.get("pool", 0.4),
+         "preemptions": kw.get("preempt", 0)}
+    path.write_text(json.dumps(p))
+    return str(path)
+
+
+def test_load_sorts_by_time_and_rejects_foreign_json(tmp_path):
+    a = _point(tmp_path / "a.json", 200.0, 500.0)
+    b = _point(tmp_path / "b.json", 100.0, 400.0)
+    pts = load_points([a, b])
+    assert [p["tokens_per_sec"] for p in pts] == [400.0, 500.0]
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps({"bench": "other"}))
+    with pytest.raises(ValueError):
+        load_points([str(bad)])
+
+
+def test_trend_table_one_row_per_point(tmp_path):
+    paths = [_point(tmp_path / f"{i}.json", float(i), 100.0 + i)
+             for i in range(3)]
+    table = trend_table(load_points(paths))
+    assert len(table.splitlines()) == 2 + 3  # header + separator + rows
+    assert "102.0" in table
+
+
+def test_suggest_floor_is_discounted_trailing_median(tmp_path):
+    paths = [_point(tmp_path / f"{i}.json", float(i), tps)
+             for i, tps in enumerate([100.0, 500.0, 520.0, 540.0])]
+    pts = load_points(paths)
+    assert suggest_floor(pts) == pytest.approx(0.8 * 510.0)
+
+
+def test_cli_refuses_to_ratchet_from_too_few_points(tmp_path, capsys):
+    from benchmarks.aggregate_serve import cli
+    import sys
+    base = tmp_path / "serve.json"
+    base.write_text(json.dumps({"bench": "serve", "tokens_per_sec": 140.0,
+                                "_comment": "floor"}))
+    lucky = _point(tmp_path / "lucky.json", 1.0, 2000.0)
+    argv, sys.argv = sys.argv, ["aggregate_serve", lucky,
+                                "--baseline", str(base), "--ratchet"]
+    try:
+        assert cli() == 0
+    finally:
+        sys.argv = argv
+    assert json.loads(base.read_text())["tokens_per_sec"] == 140.0
+    assert "--ratchet ignored" in capsys.readouterr().out
+
+
+def test_ratchet_only_moves_up(tmp_path):
+    base = tmp_path / "serve.json"
+    base.write_text(json.dumps({"bench": "serve", "tokens_per_sec": 140.0,
+                                "_comment": "floor"}))
+    # suggestion below the floor: untouched even with apply
+    msg = ratchet(str(base), 100.0, apply=True)
+    assert "stays" in msg
+    assert json.loads(base.read_text())["tokens_per_sec"] == 140.0
+    # above the floor but apply=False: report only
+    msg = ratchet(str(base), 200.0, apply=False)
+    assert json.loads(base.read_text())["tokens_per_sec"] == 140.0
+    assert "--ratchet" in msg
+    # above the floor with apply: rewritten, comment annotated
+    ratchet(str(base), 200.0, apply=True)
+    new = json.loads(base.read_text())
+    assert new["tokens_per_sec"] == 200.0
+    assert "ratcheted" in new["_comment"]
