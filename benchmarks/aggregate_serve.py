@@ -22,7 +22,7 @@ import argparse
 import json
 import statistics
 import sys
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 # floor = discount * trailing median: mirrors the CI gate's 20% tolerance so
 # a freshly-ratcheted floor is passable by the very runs that produced it
@@ -31,11 +31,26 @@ TRAILING = 8           # points in the trailing-median window
 MIN_RATCHET_POINTS = 3  # one lucky idle-runner point must not tighten the gate
 
 
-def load_points(paths: List[str]) -> List[Dict]:
+def load_points(paths: List[str],
+                skipped: Optional[List[str]] = None) -> List[Dict]:
+    """Load trajectory points, tolerating a missing/empty history: a path
+    that doesn't exist or doesn't parse as JSON (a failed CI run uploads an
+    empty artifact) is skipped with a note in ``skipped`` instead of a
+    traceback.  A file that IS valid JSON but isn't a serve point still
+    raises — that's a caller error, not history noise."""
     points = []
     for path in paths:
-        with open(path) as f:
-            p = json.load(f)
+        try:
+            with open(path) as f:
+                p = json.load(f)
+        except FileNotFoundError:
+            if skipped is not None:
+                skipped.append(f"{path}: missing (no history yet?)")
+            continue
+        except json.JSONDecodeError:
+            if skipped is not None:
+                skipped.append(f"{path}: empty or unparseable JSON")
+            continue
         if "tokens_per_sec" not in p:
             raise ValueError(f"{path}: not a BENCH_serve.json point "
                              "(no tokens_per_sec)")
@@ -45,12 +60,19 @@ def load_points(paths: List[str]) -> List[Dict]:
     return points
 
 
+EMPTY_ROW = ("| – | – | – | – | – | – | no trajectory points yet — "
+             "run benchmarks.bench_serve or download CI artifacts |")
+
+
 def trend_table(points: List[Dict]) -> str:
-    """Markdown trend table, one row per trajectory point, time-ordered."""
+    """Markdown trend table, one row per trajectory point, time-ordered.
+    An empty history renders one explanatory row rather than nothing."""
     lines = [
         "| # | unix_time | tok/s | ttft_mean_ms | pool_peak | preempt | point |",
         "|---|-----------|-------|--------------|-----------|---------|-------|",
     ]
+    if not points:
+        return "\n".join(lines + [EMPTY_ROW])
     for i, p in enumerate(points):
         lines.append(
             f"| {i} | {p.get('unix_time', 0):.0f} "
@@ -93,7 +115,7 @@ def ratchet(baseline_path: str, suggestion: float, apply: bool,
 
 def cli() -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("points", nargs="+",
+    ap.add_argument("points", nargs="*",
                     help="BENCH_serve.json trajectory points")
     ap.add_argument("--baseline", default="benchmarks/baselines/serve.json")
     ap.add_argument("--ratchet", action="store_true",
@@ -103,12 +125,20 @@ def cli() -> int:
                     help="also write the trend table to this file")
     args = ap.parse_args()
 
-    points = load_points(args.points)
+    skipped: List[str] = []
+    points = load_points(args.points, skipped=skipped)
     table = trend_table(points)
     print(table)
+    for note in skipped:
+        print(f"skipped: {note}")
     if args.markdown:
         with open(args.markdown, "w") as f:
             f.write(table + "\n")
+    if not points:
+        # an empty history is a normal state (first push, failed bench run):
+        # report it and succeed — the gate lives in bench_serve, not here
+        print("\n0 points; nothing to aggregate, baseline floor untouched")
+        return 0
     latest = points[-1]["tokens_per_sec"]
     suggestion = suggest_floor(points)
     print(f"\n{len(points)} points; latest {latest:.1f} tok/s; "

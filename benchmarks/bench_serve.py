@@ -45,17 +45,23 @@ def _build_engine():
 
 
 def _workload(cfg, n: int, seed: int = 0) -> List:
-    """Mixed prompt lengths (3..20) and output lengths (4..14)."""
+    """Mixed prompt lengths (3..20) and output lengths (4..14).  Every third
+    request opens with a common 9-token prefix (a shared system prompt in
+    miniature) so the tiered KVStore's prefix sharing / copy-on-write path is
+    exercised by the measured run, not just by unit tests."""
     import numpy as np
 
     from repro.serve.engine import Request, SamplingParams
 
     rng = np.random.default_rng(seed)
+    shared_prefix = rng.integers(1, cfg.vocab, size=9).tolist()
     reqs = []
     for i in range(n):
         plen = int(rng.integers(3, 21))
         max_new = int(rng.integers(4, 15))
         prompt = rng.integers(1, cfg.vocab, size=plen).tolist()
+        if i % 3 == 0:
+            prompt = (shared_prefix + prompt)[:20]
         sp = SamplingParams() if i % 3 else \
             SamplingParams(temperature=0.8, top_k=40, seed=i)
         reqs.append(Request(rid=i, prompt=prompt, max_new=max_new, sampling=sp))
@@ -69,10 +75,12 @@ def run_workload(quick: bool = False) -> Tuple[object, dict]:
     cfg, eng = _build_engine()
     n = WORKLOAD_REQUESTS if quick else 3 * WORKLOAD_REQUESTS
 
-    # warm the prefill/decode jit caches outside the measured window
+    # warm the prefill/decode jit caches outside the measured window (and
+    # drop any prefixes it retained — the measured run starts cache-cold)
     for r in _workload(cfg, 2, seed=99):
         eng.submit(r)
     eng.run_until_done()
+    eng.release_prefix_cache()
     eng.reset_metrics()
 
     reqs = _workload(cfg, n)
@@ -106,6 +114,12 @@ def main(quick: bool = False):
     yield ("serve_paged_pool", f"{m.peak_pool_utilization:.3f}",
            f"peak {m.peak_blocks_used}/{m.pool_blocks} blocks "
            f"(dense equiv {m.dense_equiv_blocks})")
+    yield ("serve_prefix_reuse", f"{m.re_prefill_avoided}",
+           f"prompt tokens not re-prefilled; {m.shared_blocks} shared / "
+           f"{m.cow_copies} CoW blocks")
+    yield ("serve_swap_traffic", f"{m.swap_out_blocks + m.swap_in_blocks}",
+           f"host-tier blocks: {m.swap_out_blocks} out / "
+           f"{m.swap_in_blocks} in ({m.preemptions} preemptions)")
 
 
 def _check(m, desc) -> List[str]:
@@ -122,6 +136,9 @@ def _check(m, desc) -> List[str]:
     if not m.peak_blocks_used < m.dense_equiv_blocks:
         errs.append(f"peak blocks {m.peak_blocks_used} not below dense "
                     f"footprint {m.dense_equiv_blocks}")
+    if not m.re_prefill_avoided > 0:
+        errs.append("prefix sharing saved no prefill tokens on a workload "
+                    "with shared prompt prefixes")
     return errs
 
 
@@ -147,6 +164,11 @@ def cli() -> int:
         "peak_blocks_used": m.peak_blocks_used,
         "dense_equiv_blocks": m.dense_equiv_blocks,
         "preemptions": m.preemptions,
+        "shared_blocks": m.shared_blocks,
+        "cow_copies": m.cow_copies,
+        "swap_out_blocks": m.swap_out_blocks,
+        "swap_in_blocks": m.swap_in_blocks,
+        "re_prefill_avoided": m.re_prefill_avoided,
         "metrics": m.to_dict(),
     }
     with open(args.out, "w") as f:

@@ -35,6 +35,12 @@ def main():
                          "(0 = one block)")
     ap.add_argument("--admission", choices=["conservative", "optimistic"],
                     default="conservative")
+    ap.add_argument("--host-blocks", type=int, default=-1,
+                    help="host swap-tier size in blocks (-1 = pool-sized, "
+                         "0 = no swap tier; see REPRO_KV_SWAP)")
+    ap.add_argument("--prefix-cache-blocks", type=int, default=-1,
+                    help="blocks retained for prompt-prefix sharing "
+                         "(-1 = pool/4, 0 = sharing off)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)
@@ -50,7 +56,10 @@ def main():
                       max_len=args.max_len, block_size=args.block_size,
                       num_blocks=args.num_blocks or None,
                       prefill_chunk_tokens=args.prefill_chunk or None,
-                      admission=args.admission)
+                      admission=args.admission,
+                      host_blocks=None if args.host_blocks < 0 else args.host_blocks,
+                      prefix_cache_blocks=None if args.prefix_cache_blocks < 0
+                      else args.prefix_cache_blocks)
     rng = np.random.default_rng(args.seed)
     for i in range(args.requests):
         prompt = rng.integers(1, cfg.vocab, size=int(rng.integers(4, 12))).tolist()

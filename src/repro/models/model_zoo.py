@@ -28,6 +28,12 @@ class ModelFns:
     make_paged_cache: Optional[Callable] = None  # (num_blocks, block_size) -> cache
     decode_paged: Optional[Callable] = None      # (params, cache, batch) -> (cache, logits)
     prefill_chunk: Optional[Callable] = None     # (params, cache, batch, m_used=) -> (cache, logits)
+    # Tiered-KVStore data plane (repro.serve.kv_store): per-block device copy
+    # (copy-on-write) and device<->host movement (swap tiers).  Layout-aware,
+    # so each family owns its own implementation.
+    paged_block_copy: Optional[Callable] = None   # (cache, src, dst) -> cache
+    paged_block_read: Optional[Callable] = None   # (cache, idx) -> host pytree
+    paged_block_write: Optional[Callable] = None  # (cache, idx, data) -> cache
 
 
 def _sds(shape, dtype):
@@ -72,6 +78,9 @@ def build_model(cfg: ModelConfig) -> ModelFns:
             decode_paged=lambda p, c, b: transformer.lm_decode_step_paged(cfg, p, c, b),
             prefill_chunk=lambda p, c, b, m_used=None: transformer.lm_prefill_chunk(
                 cfg, p, c, b, m_used=m_used),
+            paged_block_copy=transformer.paged_block_copy,
+            paged_block_read=transformer.paged_block_read,
+            paged_block_write=transformer.paged_block_write,
         )
 
     if fam == "ssm":

@@ -244,6 +244,39 @@ def _slot_major_merge(new_k, new_v, every: int) -> Dict:
 # ---------------------------------------------------------------------------
 
 
+# Block indices are TRACED scalars: baking them in as constants would
+# recompile the scatter for every distinct (src, dst) pair — one jit per
+# cache shape instead, shared across all blocks and all engines.
+_paged_copy_jit = jax.jit(
+    lambda c, src, dst: {k: v.at[:, dst].set(v[:, src]) for k, v in c.items()})
+_paged_read_jit = jax.jit(lambda c, idx: {k: v[:, idx] for k, v in c.items()})
+_paged_write_jit = jax.jit(
+    lambda c, idx, data: {k: v.at[:, idx].set(data[k].astype(v.dtype))
+                          for k, v in c.items()})
+
+
+def paged_block_copy(cache: Dict, src, dst) -> Dict:
+    """Device-side copy of one KV block (all layers): the copy-on-write data
+    plane for ``repro.serve.kv_store`` — a shared block is duplicated on
+    device before a holder writes into it, so sharers never see each other's
+    tokens."""
+    return _paged_copy_jit(cache, jnp.int32(src), jnp.int32(dst))
+
+
+def paged_block_read(cache: Dict, idx) -> Dict:
+    """Block ``idx`` -> host numpy {(k|v): (L, bs, KV, hd)} — the device->host
+    half of a swap_out (bf16 round-trips bit-exactly through ml_dtypes)."""
+    import numpy as np
+    return {k: np.asarray(v)
+            for k, v in _paged_read_jit(cache, jnp.int32(idx)).items()}
+
+
+def paged_block_write(cache: Dict, idx, data: Dict) -> Dict:
+    """Host numpy block -> device block ``idx`` (the swap_in half)."""
+    return _paged_write_jit(cache, jnp.int32(idx),
+                            {k: jnp.asarray(v) for k, v in data.items()})
+
+
 def lm_decode_step_paged(cfg: ModelConfig, params, cache: Dict, batch: Dict):
     """One decode step over a paged cache.
 
@@ -284,9 +317,11 @@ def lm_prefill_chunk(cfg: ModelConfig, params, cache: Dict, batch: Dict,
 
     batch: {"tokens" (1,C) int32 (null-padded past the prompt),
     "block_table" (1,M) int32, "start" () int32 — absolute position of the
-    chunk's first token, "prompt_len" () int32}.  Returns (cache,
-    logits (1,C,V)) — the engine reads the logit row of the prompt's last
-    token from the final chunk.
+    chunk's first token, "prompt_len" () int32 — the chunk's write limit:
+    positions >= it are padding whose KV goes to the null block (the engine
+    passes the chunk's end, which on the final chunk is the true prompt
+    length)}.  Returns (cache, logits (1,C,V)) — the engine reads the logit
+    row of the prompt's last token from the final chunk.
 
     ``m_used`` (static int) restricts attention to the table's first blocks
     — the engine passes ceil((start+C)/block_size), so early chunks don't

@@ -31,6 +31,12 @@ Knobs (defaults = the paper-faithful baseline):
           GSPMD to ALL-GATHER the (small) FSDP weight shards instead of
           partial-summing + all-reducing the (huge) activations — the fix
           for the dominant collective in the qwen2-vl train cell (§Perf)
+  REPRO_KV_SWAP        1 | 0
+      1 — serve-engine preemption parks a request's KV blocks on the host
+          tier (repro.serve.kv_store.HostTier) and restores them on
+          re-admission, resuming mid-generation
+      0 — legacy behavior: preempted requests drop their KV and restart
+          from the prompt
   REPRO_PAGED_ATTN     auto | kernel | gather
       auto   — paged decode/prefill attention uses the block-streaming
                Pallas kernel on TPU and the dense-gather jnp path on CPU
@@ -56,6 +62,7 @@ class PerfConfig:
     opt_state: str = "f32"
     weight_ag: bool = False
     paged_attn: str = "auto"
+    kv_swap: bool = True
 
 
 def perf() -> PerfConfig:
@@ -69,6 +76,7 @@ def perf() -> PerfConfig:
         opt_state=os.environ.get("REPRO_OPT_STATE", "f32"),
         weight_ag=os.environ.get("REPRO_WEIGHT_AG", "0") == "1",
         paged_attn=os.environ.get("REPRO_PAGED_ATTN", "auto"),
+        kv_swap=os.environ.get("REPRO_KV_SWAP", "1") == "1",
     )
 
 

@@ -1,25 +1,38 @@
-"""Paged-KV continuous-batching serve engine.
+"""Paged-KV continuous-batching serve engine over a tiered KVStore.
 
-KV memory is a shared **block pool** (``repro.serve.paged_cache``): each
-request holds an ordered block table, blocks are allocated as its sequence
-grows and freed the step it retires, so live KV scales with tokens actually
-resident instead of the dense slot cache's ``max_batch x max_len``
-preallocation (the MNN-LLM block-wise layout, arXiv 2506.10443).
+KV memory is owned by ``repro.serve.kv_store``: refcounted block handles in
+named storage tiers — the device block pool (``repro.serve.paged_cache``) and
+a host swap tier.  Each request holds an ordered table of handles, blocks are
+allocated as its sequence grows and released the step it retires, so live KV
+scales with tokens actually resident instead of the dense slot cache's
+``max_batch x max_len`` preallocation (MNN-LLM block-wise layout, arXiv
+2506.10443).  On top of the handles the engine gets two storage-architecture
+capabilities the flat pool couldn't express:
+
+  * **Prefix sharing (copy-on-write)** — completed prompts register their
+    blocks in the store's budgeted prefix registry; a later request whose
+    prompt shares a prefix ``fork()``s the same physical blocks instead of
+    re-prefilling them (``ServeMetrics.re_prefill_avoided``), and any write
+    into a still-shared block is privatized by a device-side copy first.
+  * **Preemption-by-swap** — optimistic admission's evictions park the
+    victim's KV on the host tier (``REPRO_KV_SWAP=1``, the default) and
+    restore it on re-admission, resuming mid-generation; with the knob off,
+    preemption falls back to the legacy drop-and-restart-from-prompt.
 
 Scheduling is continuous batching with **chunked prefill**: every engine step
 runs (a) at most one prompt chunk for one admitting request and (b) one
 batched decode step for every live request — a long prompt therefore never
 stalls tokens streaming out of the decode batch.  Admission is worst-case by
-default: a request enters a slot only when the pool can hold
-``ceil((prompt + max_new) / block_size)`` blocks for it, so an admitted
-request can never die to pool exhaustion.  ``admission="optimistic"`` reserves
-only the prompt footprint and preempts the youngest request when the pool runs
-dry (preempted requests restart from their prompt; counted in metrics).
+default: the exact bound is ``prompt + max_new - 1`` written KV positions
+(the last sampled token's KV never lands), plus one spare block when the
+prefix registry may force a copy-on-write of the prompt's partial tail block.
+``admission="optimistic"`` reserves only the prompt footprint and preempts
+the youngest request when the pool runs dry.
 
 Per-request sampling: greedy, temperature, top-k — Gumbel-max draws keyed on
 (request seed, token index), stateless and host-side, so runs are exactly
-reproducible (including across preemption restarts) with no per-token device
-dispatch in the decode loop.
+reproducible (including across preemptions, swapped or restarted) with no
+per-token device dispatch in the decode loop.
 
 Kernel planning goes through the unified ``repro.pipeline`` entry point: the
 engine compiles its *paged* attention shapes — a 1-token decode query and a
@@ -45,10 +58,13 @@ from repro.core.codegen import paged_pages_per_fetch
 from repro.core.tensor_ir import inp, matmul, unary
 from repro.models import build_model
 from repro.models import attention as attn_lib
+from repro.perf import perf
 from repro.pipeline import CompileOptions, Compiler, default_compiler
-from repro.serve.paged_cache import (BlockPool, BlockTable, PoolExhausted,
-                                     ServeMetrics, blocks_for_tokens,
-                                     dense_equiv_blocks, worst_case_blocks)
+from repro.serve.kv_store import (DEVICE, HOST, Block, BlockTable, DeviceTier,
+                                  HostTier, KVStore)
+from repro.serve.paged_cache import (BlockPool, PoolExhausted, ServeMetrics,
+                                     blocks_for_tokens, dense_equiv_blocks,
+                                     worst_case_blocks)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -94,6 +110,17 @@ class _Active:
         return self.next_prefill >= len(self.req.prompt)
 
 
+@dataclasses.dataclass
+class _Parked:
+    """A preempted request's KV, waiting on the host tier for re-admission.
+    ``blocks`` mixes tiers: exclusive blocks were swapped to host; blocks
+    shared with the prefix registry stay device-resident (other holders pin
+    them anyway), and we just keep our reference."""
+    blocks: List[Block]
+    next_prefill: int
+    pos: int
+
+
 # ---------------------------------------------------------------------------
 # Pipeline terms: the attention shapes serving actually executes
 # ---------------------------------------------------------------------------
@@ -134,6 +161,8 @@ class ServeEngine:
                  num_blocks: Optional[int] = None,
                  prefill_chunk_tokens: Optional[int] = None,
                  admission: str = "conservative",
+                 host_blocks: Optional[int] = None,
+                 prefix_cache_blocks: Optional[int] = None,
                  compiler: Optional[Compiler] = None,
                  plan_kernels: bool = True):
         # vlm is excluded deliberately: the paged prefill/decode path embeds
@@ -160,12 +189,29 @@ class ServeEngine:
         self.fns = build_model(cfg)
         assert self.fns.decode_paged is not None, \
             f"family {cfg.family!r} has no paged decode path"
-        self.cache = self.fns.make_paged_cache(num_blocks, block_size)
+        assert self.fns.paged_block_copy is not None, \
+            f"family {cfg.family!r} has no paged block data plane"
+
+        # tiered KV store: device slab + host swap tier + prefix registry
+        self.swap_enabled = perf().kv_swap and (host_blocks is None
+                                                or host_blocks > 0)
+        n_host = (host_blocks if host_blocks is not None else num_blocks) \
+            if self.swap_enabled else 0
+        prefix_budget = prefix_cache_blocks if prefix_cache_blocks \
+            is not None else self.pool.usable_blocks // 4
+        device = DeviceTier(self.fns.make_paged_cache(num_blocks, block_size),
+                            self.pool,
+                            copy_block=self.fns.paged_block_copy,
+                            read_block=self.fns.paged_block_read,
+                            write_block=self.fns.paged_block_write)
+        self.store = KVStore(device, HostTier(n_host),
+                             prefix_cache_blocks=prefix_budget)
 
         self.slots: List[Optional[_Active]] = [None] * max_batch
         self.queue: List[Request] = []
         self.finished: List[Request] = []
         self.rejected: List[Request] = []
+        self._parked: Dict[int, _Parked] = {}
         self.steps = 0
         self._admit_seq = 0
         self._t0: Optional[float] = None
@@ -174,6 +220,7 @@ class ServeEngine:
         self._prefill_tokens = 0
         self._decode_tokens = 0
         self._preemptions = 0
+        self._re_prefill_avoided = 0
 
         # unified pipeline: compile the paged attention shapes once (cached,
         # so a second engine on the same shapes skips the search passes)
@@ -216,6 +263,16 @@ class ServeEngine:
         # each strictly cheaper than the old full-table trace
         self._prefill_fn = jax.jit(_prefill, static_argnames=("m_used",))
 
+    # the jitted fns thread the device slab functionally; the store's device
+    # tier holds the current reference between dispatches
+    @property
+    def cache(self):
+        return self.store.device.cache
+
+    @cache.setter
+    def cache(self, value):
+        self.store.device.cache = value
+
     # -- request lifecycle -----------------------------------------------
     def submit(self, req: Request) -> None:
         req.t_submit = time.monotonic()
@@ -227,6 +284,34 @@ class ServeEngine:
         req.done = True
         req.reject_reason = reason
         self.rejected.append(req)
+
+    def _admission_need(self, req: Request, parked: Optional[_Parked]) -> int:
+        """Blocks to reserve at admission.
+
+        Conservative: the exact lifetime bound (prompt + max_new - 1 written
+        positions), plus one spare when the prefix registry may retain the
+        prompt's partial tail block and force a copy-on-write allocation at
+        the first decode write — the spare is what keeps the admitted-never-
+        dies guarantee with sharing enabled.  Optimistic: just the prompt.
+        A restored request already holds its written blocks; it reserves the
+        remaining growth plus one slot per host block to swap back in.
+        """
+        plen, bs = len(req.prompt), self.block_size
+        worst = worst_case_blocks(plen, req.max_new, bs)
+        if parked is not None:
+            swap_ins = sum(1 for b in parked.blocks if b.tier == HOST)
+            if self.admission == "optimistic":
+                return swap_ins
+            cow_spare = 1 if (self.store.prefix_cache_blocks > 0 and plen % bs
+                              and req.max_new >= 2 and parked.pos == 0) else 0
+            return worst - len(parked.blocks) + swap_ins + cow_spare
+        if self.admission == "optimistic":
+            return blocks_for_tokens(plen, bs)
+        cow_spare = 1 if (self.store.prefix_cache_blocks > 0 and plen % bs
+                          and req.max_new >= 2) else 0
+        # clamp: the spare must not make a barely-fitting request unadmittable
+        # (the CoW fallback path evicts/preempts if the spare was clamped off)
+        return min(worst + cow_spare, self.pool.usable_blocks)
 
     def _admit(self) -> int:
         """Move queued requests into free slots, FIFO, under admission
@@ -258,31 +343,65 @@ class ServeEngine:
             slot = next((i for i, s in enumerate(self.slots) if s is None), None)
             if slot is None:
                 break
-            need = worst if self.admission == "conservative" else \
-                blocks_for_tokens(len(req.prompt), self.block_size)
+            parked = self._parked.get(req.rid)
+            need = self._admission_need(req, parked)
             if not self.pool.reserve(need):
-                break
-            self.slots[slot] = _Active(
-                req=req, table=BlockTable(self.block_size),
-                reserved_left=need, admit_seq=self._admit_seq)
+                # pressure-relief ladder, mirroring _alloc_device: the prefix
+                # registry is droppable cache, and OTHER parked requests'
+                # stranded device blocks (shared at preemption, exclusive
+                # since) can move to the host tier — without this, a drained
+                # engine with a strand-blocked queue head would halt with
+                # requests permanently queued
+                self.store.evict_prefixes(need - self.pool.available())
+                if not self.pool.reserve(need):
+                    self._swap_parked_out(need - self.pool.available(),
+                                          exclude_rid=req.rid)
+                    if not self.pool.reserve(need):
+                        break
+            a = _Active(req=req, table=BlockTable(self.block_size),
+                        reserved_left=need, admit_seq=self._admit_seq)
+            if parked is not None:
+                self._restore(a, parked)
+            self.slots[slot] = a
             self._admit_seq += 1
             self.queue.pop(0)
             admitted += 1
         return admitted
 
-    # -- block accounting --------------------------------------------------
-    def _grow(self, a: _Active, n_tokens: int) -> bool:
-        """Grow ``a``'s table to hold ``n_tokens`` positions; False if the
-        pool ran dry and preemption couldn't help (optimistic mode only —
-        conservative reservations make this infallible)."""
-        while a.table.capacity < n_tokens:
-            if a.reserved_left > 0:
-                a.table.blocks.append(self.pool.alloc(reserved=True))
+    def _restore(self, a: _Active, parked: _Parked) -> None:
+        """Re-admission of a preempted request: swap its parked blocks back
+        onto the device and resume exactly where it stopped — this replaces
+        the legacy restart-from-prompt."""
+        for b in parked.blocks:
+            if b.tier == DEVICE:
+                a.table.blocks.append(b)       # stayed resident (shared)
+            else:
+                dst = self.store.alloc(reserved=True)
                 a.reserved_left -= 1
-                continue
+                a.table.blocks.append(self.store.swap_in(b, dst))
+        a.next_prefill = parked.next_prefill
+        a.pos = parked.pos
+        # the legacy path would have re-prefilled everything written so far
+        self._re_prefill_avoided += parked.next_prefill
+        del self._parked[a.req.rid]
+
+    # -- block accounting --------------------------------------------------
+    def _alloc_device(self, a: _Active) -> Optional[Block]:
+        """One device block for ``a``: reservation first, then the open pool;
+        under pressure evict prefix-cache entries, swap parked stragglers
+        out, and finally preempt the youngest active request.  None means
+        ``a`` itself was the youngest and got preempted."""
+        while True:
+            if a.reserved_left > 0:
+                a.reserved_left -= 1
+                return self.store.alloc(reserved=True)
             try:
-                a.table.blocks.append(self.pool.alloc(reserved=False))
+                return self.store.alloc()
             except PoolExhausted:
+                if self.store.evict_prefixes(1) > 0:
+                    continue
+                if self._swap_parked_out(1) > 0:
+                    continue
                 # Evict the youngest active request — possibly ourselves.
                 # Age-ordered eviction means the oldest request always makes
                 # progress, so overcommit can't livelock into mutual
@@ -291,29 +410,93 @@ class ServeEngine:
                              key=lambda s: s.admit_seq)
                 self._requeue(victim)
                 if victim is a:
+                    return None
+
+    def _swap_parked_out(self, min_blocks: int,
+                         exclude_rid: Optional[int] = None) -> int:
+        """Parked requests can strand device blocks (blocks that were shared
+        at preemption time and have since gone exclusive); push them to the
+        host tier to relieve pool pressure.  ``exclude_rid`` protects the
+        request currently being admitted — swapping its own resident blocks
+        out would invalidate the admission need just computed for it."""
+        freed = 0
+        for rid, parked in self._parked.items():
+            if rid == exclude_rid:
+                continue
+            for j, b in enumerate(parked.blocks):
+                if (b.tier == DEVICE and not b.shared
+                        and self.store.host.num_free > 0):
+                    parked.blocks[j] = self.store.swap_out(b)
+                    freed += 1
+                    if freed >= min_blocks:
+                        return freed
+        return freed
+
+    def _grow(self, a: _Active, n_tokens: int) -> bool:
+        """Grow ``a``'s table to hold ``n_tokens`` positions; False if the
+        pool ran dry and preemption evicted ``a`` itself (optimistic mode —
+        conservative reservations make this infallible)."""
+        while a.table.capacity < n_tokens:
+            blk = self._alloc_device(a)
+            if blk is None:
+                return False
+            a.table.blocks.append(blk)
+        return True
+
+    def _make_writable(self, a: _Active, start: int, end: int) -> bool:
+        """Privatize every shared block overlapping write positions
+        [start, end) — copy-on-write: sharers (prefix registry, forked
+        siblings) keep the original, ``a`` gets a device-side copy.  False if
+        allocating a copy preempted ``a`` itself."""
+        bs = self.block_size
+        for i in range(start // bs, min((end - 1) // bs + 1,
+                                        len(a.table.blocks))):
+            while a.table.blocks[i].shared:
+                dst = self._alloc_device(a)
+                if dst is None:
                     return False
+                if not a.table.blocks[i].shared:
+                    # eviction inside _alloc_device dropped the other holder;
+                    # the block went exclusive under us — write in place
+                    self.store.decref(dst)
+                    break
+                a.table.blocks[i] = self.store.cow_into(a.table.blocks[i], dst)
         return True
 
     def _requeue(self, victim: _Active) -> None:
-        """Preempt: free the victim's blocks and restart it from its prompt
-        at the queue head.  KV is dropped (preemption-by-swap is a roadmap
-        item), so its generated tokens are discarded."""
-        victim.table.release_to(self.pool)
+        """Preempt ``victim`` back to the queue head.  With the host tier
+        enabled (REPRO_KV_SWAP=1) its KV is parked there and restored on
+        re-admission — generated tokens survive.  Otherwise (or when the host
+        tier is full) fall back to the legacy drop: KV and generated tokens
+        are discarded and the request restarts from its prompt."""
         self.pool.release(victim.reserved_left)
         victim.reserved_left = 0
-        # counters report *delivered* work: back out the discarded tokens so
-        # preemption churn can't inflate the CI-gated tokens/sec
-        self._prefill_tokens -= victim.next_prefill
-        self._decode_tokens -= max(len(victim.req.out) - 1, 0)
-        victim.req.out.clear()
-        self.queue.insert(0, victim.req)
+        req = victim.req
+        # only park victims that actually hold KV: parking an empty table
+        # would re-admit with a zero reservation (no backpressure) and
+        # ping-pong straight back into preemption under pool pressure
+        if self.swap_enabled and victim.table.blocks \
+                and self.store.can_swap_out(victim.table.blocks):
+            parked = [self.store.swap_out(b) for b in victim.table.blocks]
+            victim.table.blocks = []
+            self._parked[req.rid] = _Parked(
+                blocks=parked, next_prefill=victim.next_prefill,
+                pos=victim.pos)
+        else:
+            victim.table.release_to(self.store)
+            # counters report *delivered* work: back out the discarded tokens
+            # so preemption churn can't inflate the CI-gated tokens/sec
+            self._prefill_tokens -= victim.next_prefill
+            self._decode_tokens -= max(len(req.out) - 1, 0)
+            req.out.clear()
+        self.queue.insert(0, req)
         self.slots[self.slots.index(victim)] = None
         self._preemptions += 1
 
     def _retire(self, a: _Active, now: Optional[float] = None) -> None:
         a.req.done = True
         a.req.t_done = time.monotonic() if now is None else now
-        a.table.release_to(self.pool)
+        a.table.release_to(self.store)
         self.pool.release(a.reserved_left)
         a.reserved_left = 0
         self.finished.append(a.req)
@@ -336,6 +519,28 @@ class ServeEngine:
         return int(np.argmax(x + rng.gumbel(size=x.size)))
 
     # -- prefill -----------------------------------------------------------
+    def _adopt_prefix(self, a: _Active) -> None:
+        """First prefill chunk of a fresh request: fork the longest
+        registered prompt prefix instead of recomputing it.  Capped at
+        ``plen - 1`` — the last prompt position must run through the model to
+        produce the first sampled token's logits."""
+        req = a.req
+        plen, bs = len(req.prompt), self.block_size
+        n, blocks = self.store.match_prefix(req.prompt)
+        n = min(n, plen - 1)
+        if n <= 0:
+            return
+        a.table.blocks = self.store.fork(blocks[:blocks_for_tokens(n, bs)])
+        # fully-shared blocks are mappings, not allocations: hand their
+        # reservation slots back (the shared partial tail, if any, keeps its
+        # slot — the copy-on-write before our first write consumes it)
+        release = min(n // bs, a.reserved_left)
+        if release:
+            self.pool.release(release)
+            a.reserved_left -= release
+        a.next_prefill = n
+        self._re_prefill_avoided += n
+
     def _prefill_step(self) -> bool:
         """Run ONE prompt chunk for the oldest admitting request.  Bounding
         prefill work per engine step is what keeps decode latency flat while
@@ -346,20 +551,30 @@ class ServeEngine:
         a = min(pending, key=lambda s: s.admit_seq)
         req, c = a.req, self.prefill_chunk_tokens
         plen = len(req.prompt)
+        if a.next_prefill == 0 and not a.table.blocks:
+            self._adopt_prefix(a)
         start = a.next_prefill
-        end = min(start + c, plen)
+        # realign to the canonical chunk grid: an adopted (or restored)
+        # prefix can leave ``start`` mid-chunk, and letting every offset
+        # produce its own attended-span value would retrace the jitted
+        # prefill per offset — the first chunk is shortened to the next grid
+        # point instead, so m_used stays in the same small set every request
+        # visits (the write limit masks the chunk's unused tail positions)
+        end = min(plen, start + c, (start // c + 1) * c)
         if not self._grow(a, end):
             return True  # preempted ourselves; the step still did work
+        if not self._make_writable(a, start, end):
+            return True
         chunk = req.prompt[start:end] + [0] * (c - (end - start))
         batch = {
             "tokens": jnp.asarray([chunk], jnp.int32),
             "block_table": jnp.asarray(
                 [a.table.padded(self.max_blocks_per_seq)], jnp.int32),
             "start": jnp.int32(start),
-            "prompt_len": jnp.int32(plen),
+            "prompt_len": jnp.int32(end),
         }
         # attend only over blocks written so far, not the full table capacity
-        m_used = min(blocks_for_tokens(start + c, self.block_size),
+        m_used = min(blocks_for_tokens(end, self.block_size),
                      self.max_blocks_per_seq)
         self.cache, logits = self._prefill_fn(self.params, self.cache, batch,
                                               m_used=m_used)
@@ -367,6 +582,11 @@ class ServeEngine:
         self._prefill_tokens += end - start
         if a.prefill_done:
             a.pos = plen
+            # retain the finished prompt for future sharers (the registry
+            # holds its own refs; budget-bounded, LRU-evicted under pressure)
+            self.store.register_prefix(
+                req.prompt,
+                a.table.blocks[:blocks_for_tokens(plen, self.block_size)])
             row = np.asarray(logits[0, plen - 1 - start])
             first = self._sample(row, req.sampling, 0)
             req.out.append(first)
@@ -379,12 +599,13 @@ class ServeEngine:
     def _decode_step(self) -> bool:
         """One batched decode step for every live (prefill-complete) slot."""
         live = [s for s in self.slots if s is not None and s.prefill_done]
-        # make sure every live row can write its next KV entry; under
-        # optimistic admission this can preempt (an earlier row's growth may
-        # evict a later row — or the row itself, when it is the youngest)
+        # make sure every live row can write its next KV entry — growing the
+        # table AND privatizing a shared write target; under optimistic
+        # admission either can preempt (an earlier row's growth may evict a
+        # later row — or the row itself, when it is the youngest)
         for a in live:
-            if a in self.slots:
-                self._grow(a, a.pos + 1)
+            if a in self.slots and self._grow(a, a.pos + 1):
+                self._make_writable(a, a.pos, a.pos + 1)
         live = [a for a in live if a in self.slots]
         if not live:
             return False
@@ -439,6 +660,11 @@ class ServeEngine:
                 break
         return list(self.finished)
 
+    def release_prefix_cache(self) -> int:
+        """Drop every retained prompt prefix, returning blocks freed —
+        benchmarks and tests call this to drain the pool to zero."""
+        return self.store.drop_prefixes()
+
     def reset_metrics(self) -> None:
         """Zero the run counters (benchmarks warm the jit caches with a
         throwaway workload first, then measure a clean window).  Requests
@@ -453,6 +679,8 @@ class ServeEngine:
         self._prefill_tokens = 0
         self._decode_tokens = 0
         self._preemptions = 0
+        self._re_prefill_avoided = 0
+        self.store.reset_counters()
         self.finished = []
         self.rejected = []
         self.pool.peak_used = self.pool.num_used
@@ -483,4 +711,9 @@ class ServeEngine:
             dense_equiv_blocks=dense_equiv_blocks(self.max_batch, self.max_len,
                                                   self.block_size),
             preemptions=self._preemptions,
+            shared_blocks=self.store.shared_blocks,
+            cow_copies=self.store.cow_copies,
+            swap_out_blocks=self.store.swapped_out,
+            swap_in_blocks=self.store.swapped_in,
+            re_prefill_avoided=self._re_prefill_avoided,
         )

@@ -11,12 +11,17 @@ target for padded batch rows and padded block-table entries.  Garbage written
 there is never read unmasked (attention masks by per-request sequence length),
 so collisions on the null block are harmless by construction.
 
-Admission control works on *worst-case footprints*: a request needs at most
-``ceil((len(prompt) + max_new) / block_size)`` blocks over its lifetime.  The
-conservative policy reserves that up front so a request, once admitted, can
-never fail a mid-flight allocation; the optimistic policy reserves only the
-prompt's blocks and relies on preemption when the pool runs dry (MNN-LLM-style
-block-wise management, arXiv 2506.10443).
+Admission control works on *worst-case footprints*: a request writes at most
+``len(prompt) + max_new - 1`` KV positions over its lifetime (the last sampled
+token's KV never lands), i.e. ``worst_case_blocks`` blocks.  The conservative
+policy reserves that up front so a request, once admitted, can never fail a
+mid-flight allocation; the optimistic policy reserves only the prompt's blocks
+and relies on preemption when the pool runs dry (MNN-LLM-style block-wise
+management, arXiv 2506.10443).
+
+This module owns the *physical* allocator and metrics only.  Refcounted block
+handles, tier movement (host swap), copy-on-write sharing, and the per-request
+``BlockTable`` live one level up in ``repro.serve.kv_store``.
 """
 from __future__ import annotations
 
@@ -32,14 +37,14 @@ def blocks_for_tokens(n_tokens: int, block_size: int) -> int:
 
 
 def worst_case_blocks(prompt_len: int, max_new: int, block_size: int) -> int:
-    """Upper bound on blocks a request can ever hold.
+    """Exact upper bound on blocks a request's KV can ever occupy.
 
-    The last sampled token's KV is never written (generation stops first), so
-    the bound is prompt + max_new - 1 written positions; we keep the simpler
-    prompt + max_new bound — one spare block at most, and it keeps the
-    admission math obviously safe.
+    The last sampled token's KV is never written (generation stops before its
+    decode step), so a request writes exactly ``prompt + max_new - 1``
+    positions.  Admission reserves this bound — the old ``prompt + max_new``
+    bound over-reserved one block whenever the total crossed a block edge.
     """
-    return blocks_for_tokens(prompt_len + max_new, block_size)
+    return blocks_for_tokens(prompt_len + max(max_new - 1, 0), block_size)
 
 
 class PoolExhausted(Exception):
@@ -163,6 +168,13 @@ class ServeMetrics:
     peak_pool_utilization: float = 0.0
     dense_equiv_blocks: int = 0          # max_batch * ceil(max_len/block_size)
     preemptions: int = 0
+    # tiered-KVStore traffic (prefix sharing, copy-on-write, host swap)
+    shared_blocks: int = 0               # block adoptions via fork()
+    cow_copies: int = 0                  # shared blocks privatized before a write
+    swap_out_blocks: int = 0             # device -> host (preemption parking)
+    swap_in_blocks: int = 0              # host -> device (restore on readmission)
+    re_prefill_avoided: int = 0          # prompt tokens NOT re-prefilled (shared
+    #                                      prefixes + restored preemptions)
 
     def to_dict(self) -> Dict[str, float]:
         return dataclasses.asdict(self)
@@ -174,34 +186,10 @@ class ServeMetrics:
                 f"| itl {self.itl_mean_s*1e3:.1f}ms | pool peak "
                 f"{self.peak_blocks_used}/{self.pool_blocks} blocks "
                 f"({self.peak_pool_utilization:.0%}) | "
-                f"{self.preemptions} preemptions, {self.requests_rejected} rejected")
-
-
-@dataclasses.dataclass
-class BlockTable:
-    """A request's ordered block list: token position p lives at
-    ``blocks[p // block_size]`` offset ``p % block_size``."""
-    block_size: int
-    blocks: List[int] = dataclasses.field(default_factory=list)
-
-    @property
-    def capacity(self) -> int:
-        return len(self.blocks) * self.block_size
-
-    def ensure(self, n_tokens: int, pool: BlockPool, reserved: bool) -> None:
-        """Grow the table until it can hold ``n_tokens`` positions."""
-        while self.capacity < n_tokens:
-            self.blocks.append(pool.alloc(reserved=reserved))
-
-    def padded(self, max_blocks: int) -> List[int]:
-        """Fixed-width view for device-side batching (null-block padded)."""
-        if len(self.blocks) > max_blocks:
-            raise ValueError(f"table {len(self.blocks)} blocks > max {max_blocks}")
-        return self.blocks + [NULL_BLOCK] * (max_blocks - len(self.blocks))
-
-    def release_to(self, pool: BlockPool) -> None:
-        pool.free(self.blocks)
-        self.blocks = []
+                f"{self.preemptions} preemptions, {self.requests_rejected} rejected"
+                f" | {self.shared_blocks} shared / {self.cow_copies} CoW blocks, "
+                f"swap {self.swap_out_blocks} out / {self.swap_in_blocks} in, "
+                f"{self.re_prefill_avoided} prefill tokens avoided")
 
 
 def dense_equiv_blocks(max_batch: int, max_len: int, block_size: int) -> int:

@@ -28,6 +28,50 @@ def test_load_sorts_by_time_and_rejects_foreign_json(tmp_path):
         load_points([str(bad)])
 
 
+def test_load_tolerates_missing_and_empty_history(tmp_path):
+    """A failed CI run leaves a missing or empty BENCH_serve.json; the
+    aggregator must skip it with a note, not traceback."""
+    good = _point(tmp_path / "good.json", 10.0, 150.0)
+    empty = tmp_path / "empty.json"
+    empty.write_text("")
+    skipped = []
+    pts = load_points([str(tmp_path / "nope.json"), str(empty), good],
+                      skipped=skipped)
+    assert [p["tokens_per_sec"] for p in pts] == [150.0]
+    assert len(skipped) == 2
+    assert any("missing" in s for s in skipped)
+    assert any("unparseable" in s for s in skipped)
+
+
+def test_empty_history_renders_explanatory_row():
+    table = trend_table([])
+    assert len(table.splitlines()) == 3  # header + separator + explainer
+    assert "no trajectory points yet" in table
+
+
+def test_cli_with_no_usable_points_exits_clean(tmp_path, capsys):
+    """End to end: every input missing/empty -> explanatory row, baseline
+    untouched, exit 0 (an empty history is a normal first-push state)."""
+    from benchmarks.aggregate_serve import cli
+    import sys
+    base = tmp_path / "serve.json"
+    base.write_text(json.dumps({"bench": "serve", "tokens_per_sec": 140.0,
+                                "_comment": "floor"}))
+    empty = tmp_path / "empty.json"
+    empty.write_text("")
+    argv, sys.argv = sys.argv, ["aggregate_serve", str(tmp_path / "gone.json"),
+                                str(empty), "--baseline", str(base),
+                                "--ratchet"]
+    try:
+        assert cli() == 0
+    finally:
+        sys.argv = argv
+    out = capsys.readouterr().out
+    assert "no trajectory points yet" in out
+    assert "nothing to aggregate" in out
+    assert json.loads(base.read_text())["tokens_per_sec"] == 140.0
+
+
 def test_trend_table_one_row_per_point(tmp_path):
     paths = [_point(tmp_path / f"{i}.json", float(i), 100.0 + i)
              for i in range(3)]

@@ -71,6 +71,7 @@ def test_ndsbp_to_pspec():
     assert ndsbp_to_pspec((B, B, B), pl3, 2) == PartitionSpec(None, None)
 
 
+@pytest.mark.slow  # WPMaxSAT + branch-and-bound cross-check takes ~1 min
 def test_sat_and_bb_agree_small():
     term, _ = _mlp(t=64, d=64, f=64)
     sat_plan = auto_distribute(term, PL, use_sat=True)

@@ -1,0 +1,220 @@
+"""Tiered KVStore bookkeeping: refcounts, copy-on-write, host swap, and the
+prefix registry — pure Python against stub data planes, no jax import."""
+import pytest
+
+from repro.serve.kv_store import (DEVICE, HOST, BlockTable, DeviceTier,
+                                  HostTier, KVStore)
+from repro.serve.paged_cache import BlockPool, PoolExhausted
+
+
+def make_store(num_blocks=9, block_size=4, host_blocks=8,
+               prefix_cache_blocks=0):
+    """A KVStore over a stub device tier: the 'cache' is a plain
+    {idx: payload} dict threaded functionally, standing in for the jax slab."""
+    def _copy(cache, src, dst):
+        c = dict(cache)
+        c[dst] = c.get(src)
+        return c
+
+    def _read(cache, idx):
+        return cache.get(idx)
+
+    def _write(cache, idx, data):
+        c = dict(cache)
+        c[idx] = data
+        return c
+
+    device = DeviceTier({}, BlockPool(num_blocks, block_size),
+                        copy_block=_copy, read_block=_read, write_block=_write)
+    return KVStore(device, HostTier(host_blocks),
+                   prefix_cache_blocks=prefix_cache_blocks)
+
+
+def put(store, block, payload):
+    store.device.cache = {**store.device.cache, block.idx: payload}
+
+
+def get(store, block):
+    return store.device.cache.get(block.idx)
+
+
+def test_refcount_lifecycle():
+    store = make_store()
+    b = store.alloc()
+    assert b.tier == DEVICE and b.refcount == 1 and not b.shared
+    used0 = store.device.pool.num_used
+    (b2,) = store.fork([b])
+    assert b2 is b and b.refcount == 2 and b.shared
+    assert store.shared_blocks == 1
+    store.decref(b)
+    assert b.refcount == 1
+    assert store.device.pool.num_used == used0, "shared decref must not free"
+    store.decref(b)
+    assert store.device.pool.num_used == used0 - 1, "last ref frees the block"
+    with pytest.raises(ValueError):
+        store.decref(b)
+    with pytest.raises(ValueError):
+        store.incref(b)
+
+
+def test_cow_privatizes_shared_block():
+    store = make_store()
+    b = store.alloc()
+    put(store, b, "prefix-kv")
+    store.fork([b])                       # a second holder appears
+    with pytest.raises(ValueError):
+        # exclusive blocks are written in place, never CoW'd
+        store.cow_into(store.alloc(), store.alloc())
+    dst = store.alloc()
+    mine = store.cow_into(b, dst)
+    assert mine is dst and mine.refcount == 1
+    assert b.refcount == 1, "CoW drops the writer's ref on the original"
+    assert get(store, mine) == "prefix-kv", "copy carries the data"
+    assert store.cow_copies == 1
+    put(store, mine, "diverged")
+    assert get(store, b) == "prefix-kv", "sharers never see the write"
+
+
+def test_swap_round_trip_preserves_data():
+    store = make_store()
+    b = store.alloc()
+    put(store, b, "cold-kv")
+    used0, host0 = store.device.pool.num_used, store.host.num_used
+    h = store.swap_out(b)
+    assert h.tier == HOST
+    assert store.device.pool.num_used == used0 - 1, "device slot came free"
+    assert store.host.num_used == host0 + 1
+    assert store.swapped_out == 1
+    dst = store.alloc()
+    back = store.swap_in(h, dst)
+    assert back is dst and back.tier == DEVICE
+    assert get(store, back) == "cold-kv", "swap round-trips the payload"
+    assert store.host.num_used == host0, "host slot released on restore"
+    assert store.swapped_in == 1
+
+
+def test_swap_out_keeps_shared_blocks_resident():
+    store = make_store()
+    b = store.alloc()
+    store.fork([b])                       # e.g. the prefix registry holds it
+    same = store.swap_out(b)
+    assert same is b and same.tier == DEVICE, \
+        "a shared block is pinned on-device by its other holder"
+    assert store.swapped_out == 0
+    assert store.can_swap_out([b]), "shared blocks don't consume host space"
+
+
+def test_host_tier_exhaustion_and_double_free():
+    store = make_store(host_blocks=1)
+    a, b = store.alloc(), store.alloc()
+    store.swap_out(a)
+    with pytest.raises(PoolExhausted):
+        store.swap_out(b)
+    assert not store.can_swap_out([b])
+    with pytest.raises(ValueError):
+        store.host.free(99)
+
+
+def test_prefix_registry_match_and_budget():
+    store = make_store(num_blocks=17, block_size=4, prefix_cache_blocks=3)
+    blocks = [store.alloc() for _ in range(3)]
+    tokens = list(range(100, 110))        # 10 tokens over 3 blocks (bs=4)
+    assert store.register_prefix(tokens, blocks)
+    assert not store.register_prefix(tokens, blocks), \
+        "an already-covered prefix is not re-registered"
+    # full match
+    n, got = store.match_prefix(tokens)
+    assert n == 10 and [g.idx for g in got] == [b.idx for b in blocks]
+    # partial match stops at the first diverging token
+    n, got = store.match_prefix(tokens[:6] + [999, 999])
+    assert n == 6 and len(got) == 2
+    # no match
+    assert store.match_prefix([1, 2, 3]) == (0, [])
+    # the registry holds its own refs: callers fork, registry survives decref
+    mine = store.fork(got)
+    for b in mine:
+        store.decref(b)
+    assert store.match_prefix(tokens)[0] == 10
+
+
+def test_prefix_registry_truncates_to_budget_and_evicts_lru():
+    store = make_store(num_blocks=33, block_size=4, prefix_cache_blocks=4)
+    a_blocks = [store.alloc() for _ in range(3)]
+    store.register_prefix(list(range(12)), a_blocks)
+    # a 6-block prompt is truncated to the 4-block budget (evicting A first)
+    b_blocks = [store.alloc() for _ in range(6)]
+    store.register_prefix(list(range(50, 74)), b_blocks)
+    assert store.num_prefixes == 1
+    n, got = store.match_prefix(list(range(50, 74)))
+    assert n == 16, "truncated entry still shares its first budget*bs tokens"
+    assert len(got) == 4
+    # entry A's blocks were released back to exclusivity
+    assert all(b.refcount == 1 for b in a_blocks)
+
+
+def test_evict_prefixes_frees_only_unheld_blocks():
+    store = make_store(num_blocks=9, block_size=4, prefix_cache_blocks=8)
+    held = store.alloc()                  # also lives in a request's table
+    loose = store.alloc()
+    store.register_prefix([1, 2, 3, 4, 5], [held, loose])
+    store.decref(loose)                   # its request retired; registry remains
+    used0 = store.device.pool.num_used
+    freed = store.evict_prefixes(2)
+    assert freed == 1, "the table-held block stays allocated"
+    assert store.device.pool.num_used == used0 - 1
+    assert held.refcount == 1
+    assert store.num_prefixes == 0
+    assert store.evict_prefixes(1) == 0, "empty registry can't help"
+
+
+def test_drop_prefixes_drains_everything():
+    store = make_store(num_blocks=17, block_size=4, prefix_cache_blocks=8)
+    for base in (0, 100):
+        blocks = [store.alloc(), store.alloc()]
+        store.register_prefix([base + i for i in range(8)], blocks)
+        for b in blocks:                  # the registering request retires
+            store.decref(b)
+    assert store.num_prefixes == 2
+    store.drop_prefixes()
+    assert store.num_prefixes == 0 and store.device.pool.num_used == 0
+
+
+def test_block_table_padded_and_release():
+    store = make_store()
+    t = BlockTable(block_size=4)
+    t.blocks = [store.alloc() for _ in range(2)]
+    assert t.capacity == 8
+    ids = t.block_ids()
+    assert t.padded(4) == ids + [0, 0]
+    with pytest.raises(ValueError):
+        t.padded(1)
+    # a host-tier handle must never reach device-side batching
+    t.blocks.append(store.swap_out(store.alloc()))
+    with pytest.raises(AssertionError):
+        t.padded(4)
+    t.blocks.pop()
+    t.release_to(store)
+    assert t.blocks == [] and store.device.pool.num_used == 0
+
+
+def test_tables_stay_disjoint_and_fork_aliases():
+    """Two requests growing interleaved never collide physically; a forked
+    table aliases the same physical blocks until CoW diverges them."""
+    store = make_store(num_blocks=17, block_size=4)
+    ta, tb = BlockTable(4), BlockTable(4)
+    for n in range(1, 12):
+        while ta.capacity < n:
+            ta.blocks.append(store.alloc())
+        while tb.capacity < max(n - 3, 0):
+            tb.blocks.append(store.alloc())
+    assert not set(ta.block_ids()) & set(tb.block_ids())
+    shared = BlockTable(4, blocks=store.fork(ta.blocks[:2]))
+    assert shared.block_ids() == ta.block_ids()[:2], "fork aliases physically"
+    dst = store.alloc()
+    shared.blocks[1] = store.cow_into(shared.blocks[1], dst)
+    assert shared.block_ids()[1] != ta.block_ids()[1], "CoW diverges"
+    assert all(b.refcount == 2 for b in ta.blocks[:1])
+    shared.release_to(store)
+    ta.release_to(store)
+    tb.release_to(store)
+    assert store.device.pool.num_used == 0

@@ -1,11 +1,19 @@
 """Multi-device behaviours that need >1 device: run in a subprocess with
 XLA_FLAGS=--xla_force_host_platform_device_count so the main test process
-keeps its single-device view (the dry-run rule from the assignment)."""
+keeps its single-device view (the dry-run rule from the assignment).
+
+Each subprocess pays a cold jax import + 8-device compile (~8 min apiece on
+the CI runner), so the whole module is marked slow — the full `test` job
+still runs it; the fast lane (-m "not slow") skips it."""
 import json
 import subprocess
 import sys
 import textwrap
 from pathlib import Path
+
+import pytest
+
+pytestmark = pytest.mark.slow
 
 ROOT = Path(__file__).resolve().parents[1]
 

@@ -1,22 +1,34 @@
-"""Paged KV allocator: pure-Python tests, no jax import, millisecond-fast.
+"""Paged KV physical allocator: pure-Python tests, no jax import.
 
-Covers the satellite checklist: alloc/free round-trips, exhaustion surfacing
-as a controlled failure (admission rejection at the engine layer), and block
-tables staying consistent across interleaved prefill/decode/retire."""
+Covers block math (including the exact prompt + max_new - 1 admission
+bound), alloc/free round-trips, the reservation ledger, and exhaustion
+surfacing as a controlled failure.  Refcounted handles, tables, CoW, and
+tier movement are covered one level up in test_kv_store.py."""
 import pytest
 
-from repro.serve.paged_cache import (NULL_BLOCK, BlockPool, BlockTable,
-                                     PoolExhausted, blocks_for_tokens,
-                                     dense_equiv_blocks, worst_case_blocks)
+from repro.serve.paged_cache import (NULL_BLOCK, BlockPool, PoolExhausted,
+                                     blocks_for_tokens, dense_equiv_blocks,
+                                     worst_case_blocks)
 
 
 def test_block_math():
     assert blocks_for_tokens(1, 8) == 1
     assert blocks_for_tokens(8, 8) == 1
     assert blocks_for_tokens(9, 8) == 2
-    assert worst_case_blocks(prompt_len=7, max_new=9, block_size=8) == 2
-    assert worst_case_blocks(prompt_len=8, max_new=9, block_size=8) == 3
     assert dense_equiv_blocks(max_batch=4, max_len=60, block_size=8) == 4 * 8
+
+
+def test_worst_case_is_exact_prompt_plus_max_new_minus_one():
+    """The last sampled token's KV is never written, so the bound is
+    prompt + max_new - 1 positions — crossing a block edge with the old
+    prompt + max_new bound used to over-reserve one block."""
+    assert worst_case_blocks(prompt_len=7, max_new=9, block_size=8) == 2
+    # 8 + 9 = 17 tokens would need 3 blocks, but only 16 are ever written
+    assert worst_case_blocks(prompt_len=8, max_new=9, block_size=8) == 2
+    assert worst_case_blocks(prompt_len=8, max_new=10, block_size=8) == 3
+    # degenerate max_new values never go below the prompt's own footprint
+    assert worst_case_blocks(prompt_len=8, max_new=1, block_size=8) == 1
+    assert worst_case_blocks(prompt_len=8, max_new=0, block_size=8) == 1
 
 
 def test_alloc_free_roundtrip():
@@ -71,51 +83,16 @@ def test_reservations_gate_allocation():
         pool.release(1)  # nothing reserved anymore
 
 
-def test_block_tables_stay_consistent_interleaved():
-    """Two requests interleaving prefill growth, decode growth, and retire:
-    tables never share a block, capacity covers every written position, and
-    retiring returns exactly the held blocks."""
-    pool = BlockPool(num_blocks=9, block_size=4)
-    ta, tb = BlockTable(4), BlockTable(4)
-    ta.ensure(6, pool, reserved=False)       # request A prefills 6 tokens
-    tb.ensure(3, pool, reserved=False)       # B prefills 3 (interleaved)
-    assert ta.capacity >= 6 and tb.capacity >= 3
-    assert not set(ta.blocks) & set(tb.blocks), "tables must be disjoint"
-    for step in range(7, 12):                # A decodes to 11 tokens
-        ta.ensure(step, pool, reserved=False)
-        tb.ensure(step - 3, pool, reserved=False)
-    assert not set(ta.blocks) & set(tb.blocks)
-    assert len(ta.blocks) == blocks_for_tokens(11, 4)
-    held = len(ta.blocks) + len(tb.blocks)
-    assert pool.num_used == held
-    # padded device view: fixed width, null-padded, own blocks first
-    padded = ta.padded(8)
-    assert len(padded) == 8
-    assert padded[:len(ta.blocks)] == ta.blocks
-    assert all(p == NULL_BLOCK for p in padded[len(ta.blocks):])
-    with pytest.raises(ValueError):
-        ta.padded(1)  # table wider than the padded view is a bug
-    a_blocks = list(ta.blocks)
-    ta.release_to(pool)                      # A retires
-    assert ta.blocks == [] and pool.num_used == len(tb.blocks)
-    # B can immediately grow into A's returned blocks
-    tb.ensure(30, pool, reserved=False)
-    assert set(a_blocks) & set(tb.blocks), "freed blocks are reusable"
-    tb.release_to(pool)
-    assert pool.num_used == 0
-
-
 def test_exhaustion_is_controlled_not_a_crash():
-    """Growing past the pool raises PoolExhausted (which the engine converts
-    into admission rejection / preemption) rather than corrupting state."""
+    """Draining the pool raises PoolExhausted (which the engine converts
+    into eviction / preemption) rather than corrupting state."""
     pool = BlockPool(num_blocks=3, block_size=4)
-    t = BlockTable(4)
-    t.ensure(8, pool, reserved=False)        # takes both usable blocks
+    got = [pool.alloc(), pool.alloc()]
     with pytest.raises(PoolExhausted):
-        t.ensure(9, pool, reserved=False)
-    # state is intact: the table still holds its 2 blocks, pool is just full
-    assert len(t.blocks) == 2 and pool.num_free == 0
-    t.release_to(pool)
+        pool.alloc()
+    # state is intact: both blocks still allocated, pool is just full
+    assert pool.num_used == 2 and pool.num_free == 0
+    pool.free(got)
     assert pool.num_free == 2
 
 

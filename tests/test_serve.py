@@ -1,5 +1,6 @@
-"""Paged serving engine: continuous batching, chunked prefill, per-request
-sampling, admission control, and the run_until_done regression."""
+"""Paged serving engine over the tiered KVStore: continuous batching,
+chunked prefill, per-request sampling, admission control, prefix sharing
+(copy-on-write), preemption-by-swap, and the run_until_done regression."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -17,6 +18,17 @@ def setup():
     fns = build_model(cfg)
     params = fns.init(jax.random.PRNGKey(0))
     return cfg, fns, params
+
+
+def _solo_oracle(cfg, params, prompt, max_new):
+    """One request alone in a fresh engine with sharing disabled: the
+    unshared / never-preempted reference output."""
+    eng = ServeEngine(cfg, params, max_batch=1, max_len=32, block_size=4,
+                      plan_kernels=False, prefix_cache_blocks=0)
+    r = Request(rid=0, prompt=list(prompt), max_new=max_new)
+    eng.submit(r)
+    eng.run_until_done()
+    return r.out
 
 
 def test_run_until_done_returns_finished(setup):
@@ -96,7 +108,10 @@ def test_acceptance_12_requests_mixed(setup):
     assert m.dense_equiv_blocks == dense
     assert m.peak_blocks_used < dense, \
         "paged cache must beat the dense slot cache's KV footprint"
-    # blocks all returned once the workload drains
+    # blocks all returned once the workload drains and the budgeted prefix
+    # registry (the only legitimate post-drain holder) is dropped
+    assert eng.pool.num_used <= eng.store.prefix_cache_blocks
+    eng.release_prefix_cache()
     assert eng.pool.num_used == 0
 
 
@@ -176,6 +191,12 @@ def test_optimistic_admission_preempts_and_recovers(setup):
     assert all(len(r.out) == 16 for r in reqs)
     m = eng.metrics()
     assert m.preemptions >= 1, "this workload must overcommit and preempt"
+    # preemption parked KV on the host tier and restored it (REPRO_KV_SWAP
+    # defaults on): the victim's generated tokens survived, so no decode
+    # work was re-delivered
+    assert m.swap_out_blocks > 0 and m.swap_in_blocks == m.swap_out_blocks
+    assert m.re_prefill_avoided > 0
+    eng.release_prefix_cache()
     assert eng.pool.num_used == 0
     # conservative admission on the same workload serializes instead
     eng2 = ServeEngine(cfg, params, max_batch=2, max_len=32, block_size=4,
@@ -185,6 +206,106 @@ def test_optimistic_admission_preempts_and_recovers(setup):
         eng2.submit(Request(rid=i, prompt=[3, 5, 7, 11 + i], max_new=16))
     assert len(eng2.run_until_done()) == 2
     assert eng2.metrics().preemptions == 0
+
+
+def test_prefix_sharing_prefills_shared_prefix_once(setup):
+    """The PR's acceptance workload: N requests opening with the same prompt
+    prefix prefill it exactly once — later requests fork the registered
+    blocks (refcounted, copy-on-write) and skip straight to their suffix."""
+    cfg, fns, params = setup
+    prefix = [3, 5, 7, 11, 13, 17]                    # 6 tokens, bs=4
+    eng = ServeEngine(cfg, params, max_batch=4, max_len=32, block_size=4,
+                      plan_kernels=False)
+    reqs = [Request(rid=i, prompt=prefix + [19 + i], max_new=4)
+            for i in range(4)]
+    for r in reqs:
+        eng.submit(r)
+    finished = eng.run_until_done()
+    assert len(finished) == 4
+    m = eng.metrics()
+    # request 0 prefills all 7 tokens; requests 1..3 prefill only their
+    # 1-token suffix: the 6-token prefix ran through the model exactly once
+    assert m.prefill_tokens == 7 + 3 * 1
+    assert m.re_prefill_avoided == 3 * 6
+    assert m.shared_blocks == 3 * 2, "each sharer forks the prefix's 2 blocks"
+    assert m.cow_copies >= 3, \
+        "writing into the shared partial tail block must copy-on-write"
+    # shared outputs match each request's unshared solo oracle
+    for r in reqs:
+        assert r.out == _solo_oracle(cfg, params, r.prompt, r.max_new), \
+            f"rid {r.rid}: prefix sharing changed the output"
+
+
+def test_preempted_request_restored_from_host_tier_matches_oracle(setup):
+    """Preemption-by-swap equivalence: a request that was preempted, parked
+    on the host tier, and restored must produce token-for-token the output
+    of an uninterrupted run (greedy sampling)."""
+    cfg, fns, params = setup
+    eng = ServeEngine(cfg, params, max_batch=2, max_len=32, block_size=4,
+                      num_blocks=7, admission="optimistic", plan_kernels=False)
+    reqs = [Request(rid=i, prompt=[3, 5, 7, 11 + i], max_new=16)
+            for i in range(2)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_done()
+    m = eng.metrics()
+    assert m.preemptions >= 1 and m.swap_in_blocks > 0, \
+        "this workload must preempt and restore through the host tier"
+    for r in reqs:
+        assert r.out == _solo_oracle(cfg, params, r.prompt, r.max_new), \
+            f"rid {r.rid}: swap round-trip changed the output"
+
+
+def test_kv_swap_knob_off_restores_legacy_restart(setup, monkeypatch):
+    """REPRO_KV_SWAP=0: preempted requests drop their KV and restart from
+    the prompt — everything still completes, nothing touches the host tier,
+    and outputs still match the oracle (stateless seeded sampling replays)."""
+    monkeypatch.setenv("REPRO_KV_SWAP", "0")
+    cfg, fns, params = setup
+    eng = ServeEngine(cfg, params, max_batch=2, max_len=32, block_size=4,
+                      num_blocks=7, admission="optimistic", plan_kernels=False)
+    reqs = [Request(rid=i, prompt=[3, 5, 7, 11 + i], max_new=16)
+            for i in range(2)]
+    for r in reqs:
+        eng.submit(r)
+    finished = eng.run_until_done()
+    assert {r.rid for r in finished} == {0, 1}
+    assert all(len(r.out) == 16 for r in reqs)
+    m = eng.metrics()
+    assert m.preemptions >= 1
+    assert m.swap_out_blocks == 0 and m.swap_in_blocks == 0
+    monkeypatch.delenv("REPRO_KV_SWAP")
+    for r in reqs:
+        assert r.out == _solo_oracle(cfg, params, r.prompt, r.max_new)
+
+
+def test_admission_relieves_pressure_by_swapping_stranded_parked_blocks(setup):
+    """A parked request's device-resident blocks can strand the whole pool
+    (they were shared at preemption, exclusive since).  Admission's relief
+    ladder must push them to the host tier rather than halting with the
+    queue head permanently blocked."""
+    from repro.serve.engine import _Parked
+    cfg, fns, params = setup
+    # 4 usable blocks x 4 tokens; prefix sharing off so nothing else holds KV
+    eng = ServeEngine(cfg, params, max_batch=2, max_len=32, block_size=4,
+                      num_blocks=5, admission="optimistic", plan_kernels=False,
+                      prefix_cache_blocks=0)
+    # a parked request whose 4 device-resident blocks fill the pool
+    stranded = Request(rid=99, prompt=list(range(1, 14)), max_new=4, out=[7])
+    eng._parked[99] = _Parked(blocks=[eng.store.alloc() for _ in range(4)],
+                              next_prefill=13, pos=13)
+    eng._submitted += 1
+    fresh = Request(rid=0, prompt=[5, 6, 7], max_new=4)
+    eng.submit(fresh)
+    eng.queue.append(stranded)            # behind the fresh head
+    finished = eng.run_until_done()
+    assert {r.rid for r in finished} == {0, 99}, \
+        "strand-blocked admission must not halt the engine"
+    m = eng.metrics()
+    # relief swaps only as much strand as admission actually needs
+    assert m.swap_out_blocks >= 1, "relief must have parked strand on host"
+    assert m.swap_in_blocks == m.swap_out_blocks, "and restored all of it"
+    assert eng.pool.num_used == 0
 
 
 def test_engine_plans_paged_kernels_through_pipeline(setup):
