@@ -15,6 +15,14 @@ regression margin the CI gate already tolerates.  ``--ratchet`` rewrites the
 baseline file in place when (and only when) the suggestion is *above* the
 committed floor — the floor only ever moves up, so a noisy slow run can
 never loosen the gate.
+
+Points carry a ``mesh_devices`` label (1 = single device; absent in
+pre-mesh history, treated as 1).  The trend table shows every point with
+its mesh width, but the **ratchet series is single-device only**: sharded
+runs measure a different engine configuration (GSPMD partitioning, widened
+kv heads on the smoke arch), so mixing them into one trailing median would
+let a fast sharded run tighten — or a slow one loosen the pressure on —
+the single-device floor.
 """
 from __future__ import annotations
 
@@ -60,22 +68,48 @@ def load_points(paths: List[str],
     return points
 
 
-EMPTY_ROW = ("| – | – | – | – | – | – | no trajectory points yet — "
+EMPTY_ROW = ("| – | – | – | – | – | – | – | no trajectory points yet — "
              "run benchmarks.bench_serve or download CI artifacts |")
 
 
+def point_mesh(p: Dict) -> int:
+    """A point's serve-mesh width (devices the pool was sharded over).
+    Pre-mesh history has no label and is single-device by construction."""
+    return int(p.get("mesh_devices")
+               or p.get("workload", {}).get("mesh_devices") or 1)
+
+
+def point_sharded(p: Dict) -> bool:
+    """Whether the point ran the shard_map engine at all — a 1-device mesh
+    still measures the sharded configuration (bench_serve sets the flag)."""
+    return bool(p.get("sharded")
+                or p.get("workload", {}).get("sharded")
+                or point_mesh(p) > 1)
+
+
+def single_device_points(points: List[Dict]) -> List[Dict]:
+    """The ratchet series: only points comparable to the committed
+    single-device baseline floor (no shard_map engine of any width)."""
+    return [p for p in points if not point_sharded(p)]
+
+
 def trend_table(points: List[Dict]) -> str:
-    """Markdown trend table, one row per trajectory point, time-ordered.
-    An empty history renders one explanatory row rather than nothing."""
+    """Markdown trend table, one row per trajectory point, time-ordered,
+    labelled single-device vs mesh-sharded.  An empty history renders one
+    explanatory row rather than nothing."""
     lines = [
-        "| # | unix_time | tok/s | ttft_mean_ms | pool_peak | preempt | point |",
-        "|---|-----------|-------|--------------|-----------|---------|-------|",
+        "| # | unix_time | mesh | tok/s | ttft_mean_ms | pool_peak "
+        "| preempt | point |",
+        "|---|-----------|------|-------|--------------|-----------"
+        "|---------|-------|",
     ]
     if not points:
         return "\n".join(lines + [EMPTY_ROW])
     for i, p in enumerate(points):
+        label = f"sharded x{point_mesh(p)}" if point_sharded(p) else "single"
         lines.append(
             f"| {i} | {p.get('unix_time', 0):.0f} "
+            f"| {label} "
             f"| {p['tokens_per_sec']:.1f} "
             f"| {p.get('ttft_mean_s', 0) * 1e3:.1f} "
             f"| {p.get('peak_pool_utilization', 0):.3f} "
@@ -85,7 +119,8 @@ def trend_table(points: List[Dict]) -> str:
 
 
 def suggest_floor(points: List[Dict]) -> float:
-    """Trailing-median throughput discounted by the gate margin."""
+    """Trailing-median throughput discounted by the gate margin.  Callers
+    pass the single-device series only (see ``single_device_points``)."""
     tail = [p["tokens_per_sec"] for p in points[-TRAILING:]]
     return DISCOUNT * statistics.median(tail)
 
@@ -139,15 +174,24 @@ def cli() -> int:
         # report it and succeed — the gate lives in bench_serve, not here
         print("\n0 points; nothing to aggregate, baseline floor untouched")
         return 0
-    latest = points[-1]["tokens_per_sec"]
-    suggestion = suggest_floor(points)
-    print(f"\n{len(points)} points; latest {latest:.1f} tok/s; "
-          f"trailing-median floor suggestion {suggestion:.1f}")
-    apply = args.ratchet and len(points) >= MIN_RATCHET_POINTS
+    singles = single_device_points(points)
+    n_sharded = len(points) - len(singles)
+    if n_sharded:
+        print(f"\n{n_sharded} mesh-sharded point(s) labelled in the table "
+              "but excluded from the single-device ratchet series")
+    if not singles:
+        print("no single-device points; baseline floor untouched "
+              "(the ratchet series is single-device only)")
+        return 0
+    latest = singles[-1]["tokens_per_sec"]
+    suggestion = suggest_floor(singles)
+    print(f"\n{len(singles)} single-device points; latest {latest:.1f} "
+          f"tok/s; trailing-median floor suggestion {suggestion:.1f}")
+    apply = args.ratchet and len(singles) >= MIN_RATCHET_POINTS
     veto = ""
     if args.ratchet and not apply:
-        veto = (f"need >= {MIN_RATCHET_POINTS} points, got {len(points)} — "
-                "one lucky run must not tighten the gate")
+        veto = (f"need >= {MIN_RATCHET_POINTS} single-device points, got "
+                f"{len(singles)} — one lucky run must not tighten the gate")
         print(f"--ratchet ignored: {veto}")
     print(ratchet(args.baseline, suggestion, apply=apply, veto_reason=veto))
     return 0

@@ -14,14 +14,22 @@ The workload is the acceptance scenario from the paged-engine PR: 12 requests
 with mixed prompt/output lengths through ``max_batch=4``, which must all
 finish, keep pool utilization under 100%, and peak strictly below the dense
 ``max_batch x max_len`` footprint.
+
+``--mesh N`` measures the mesh-sharded pool instead (fake N-device CPU pod
+when real devices are missing): the KV slab is sharded on the kv-heads axis
+and the run is verified **token-identical** against an unsharded engine on
+the same workload before the point is written.  Sharded points carry
+``mesh_devices`` and are a separate trajectory series — the single-device
+baseline gate does not apply to them (see benchmarks.aggregate_serve).
 """
 from __future__ import annotations
 
 import argparse
 import json
+import math
 import sys
 import time
-from typing import List, Tuple
+from typing import List, Optional, Tuple
 
 WORKLOAD_REQUESTS = 12
 MAX_BATCH = 4
@@ -29,19 +37,58 @@ MAX_LEN = 64
 BLOCK_SIZE = 8
 
 
-def _build_engine():
-    import jax
+def _knob_mesh_devices() -> int:
+    """Effective REPRO_SERVE_MESH width (0 = off).  The bench resolves the
+    knob itself so knob-sharded runs get the same kv-head widening and the
+    same forced-single-device reference engine as --mesh runs."""
+    import os
+    knob = os.environ.get("REPRO_SERVE_MESH", "0")
+    if knob in ("", "0", "off"):
+        return 0
+    if knob == "auto":
+        import jax
+        return len(jax.devices())
+    return int(knob)
+
+
+def _smoke_cfg(mesh_devices: int = 0):
+    """The bench arch.  A sharded run needs kv-heads divisible by the mesh:
+    the qwen3 smoke config's GQA kv=2 is widened to the lcm (an explicitly
+    different arch — which is why sharded points are a separate series)."""
+    import dataclasses
 
     from repro.configs.base import get_config, reduced_config
+
+    cfg = reduced_config(get_config("qwen3-0.6b"))
+    if mesh_devices and cfg.n_kv_heads % mesh_devices:
+        kv = math.lcm(cfg.n_kv_heads, mesh_devices)
+        assert cfg.n_heads % kv == 0, \
+            f"can't widen kv heads to {kv} under {cfg.n_heads} q heads"
+        cfg = dataclasses.replace(cfg, n_kv_heads=kv)
+    return cfg
+
+
+def _build_engine(mesh_devices: int = 0, params=None, sharded: bool = True):
+    import jax
+
     from repro.models import build_model
     from repro.serve.engine import ServeEngine
 
-    cfg = reduced_config(get_config("qwen3-0.6b"))
+    # the reference engine passes mesh=False so the token-identity oracle
+    # can never be silently sharded by ambient env; run_workload resolves
+    # REPRO_SERVE_MESH into an explicit mesh_devices before calling here,
+    # so mesh=None (knob passthrough) only remains for direct callers
+    mesh = False if not sharded else None
+    if mesh_devices and sharded:
+        from repro.launch.mesh import make_serve_mesh
+        mesh = make_serve_mesh(mesh_devices)
+    cfg = _smoke_cfg(mesh_devices)
     fns = build_model(cfg)
-    params = fns.init(jax.random.PRNGKey(0))
+    if params is None:
+        params = fns.init(jax.random.PRNGKey(0))
     eng = ServeEngine(cfg, params, max_batch=MAX_BATCH, max_len=MAX_LEN,
-                      block_size=BLOCK_SIZE)
-    return cfg, eng
+                      block_size=BLOCK_SIZE, mesh=mesh)
+    return cfg, eng, params
 
 
 def _workload(cfg, n: int, seed: int = 0) -> List:
@@ -68,11 +115,21 @@ def _workload(cfg, n: int, seed: int = 0) -> List:
     return reqs
 
 
-def run_workload(quick: bool = False) -> Tuple[object, dict]:
+def run_workload(quick: bool = False, mesh_devices: int = 0,
+                 verify_identical: Optional[bool] = None
+                 ) -> Tuple[object, dict]:
     """Returns (ServeMetrics, workload descriptor).  ``quick`` is the CI
     smoke size; the full run pushes 3x the requests through the same pool so
-    queueing/admission actually bites."""
-    cfg, eng = _build_engine()
+    queueing/admission actually bites.  ``mesh_devices`` > 1 shards the KV
+    pool; ``verify_identical`` replays the workload on a forced-unsharded
+    engine (same params) and records whether outputs matched token-for-token
+    — its default (None) means "whenever the engine's *effective* mesh is
+    sharded", which also covers runs sharded by REPRO_SERVE_MESH rather
+    than the --mesh flag."""
+    # resolve the knob into an explicit width up front, so knob-sharded runs
+    # get the widened smoke arch AND a matching-arch reference engine
+    mesh_devices = mesh_devices or _knob_mesh_devices()
+    cfg, eng, params = _build_engine(mesh_devices)
     n = WORKLOAD_REQUESTS if quick else 3 * WORKLOAD_REQUESTS
 
     # warm the prefill/decode jit caches outside the measured window (and
@@ -96,7 +153,23 @@ def run_workload(quick: bool = False) -> Tuple[object, dict]:
         "block_size": BLOCK_SIZE,
         "arch": cfg.name,
         "quick": quick,
+        "mesh_devices": m.mesh_devices,
+        # a 1-device mesh still runs the shard_map configuration (CPU
+        # dispatch overhead and all): it must skip the single-device gate
+        # even though its width puts it in the single-device table series
+        "sharded": eng.mesh is not None,
     }
+    if verify_identical is None:
+        verify_identical = m.mesh_devices > 1
+    if verify_identical:
+        _, ref_eng, _ = _build_engine(mesh_devices, params=params,
+                                      sharded=False)
+        ref = _workload(cfg, n)
+        for r in ref:
+            ref_eng.submit(r)
+        ref_eng.run_until_done()
+        desc["token_identical"] = all(
+            a.out == b.out for a, b in zip(reqs, ref))
     return m, desc
 
 
@@ -127,6 +200,8 @@ def _check(m, desc) -> List[str]:
     errs = []
     if desc["finished"] != desc["requests"]:
         errs.append(f"only {desc['finished']}/{desc['requests']} finished")
+    if desc.get("token_identical") is False:
+        errs.append("sharded run NOT token-identical to single-device run")
     if not m.tokens_per_sec > 0:
         errs.append("tokens_per_sec not positive")
     if not m.ttft_mean_s > 0:
@@ -150,13 +225,23 @@ def cli() -> int:
     ap.add_argument("--max-regress", type=float, default=0.2,
                     help="fail if tokens/sec drops more than this fraction "
                          "below the committed baseline")
+    ap.add_argument("--mesh", type=int, default=0,
+                    help="shard the KV pool over this many devices (forces "
+                         "a CPU fake pod when needed); the run is verified "
+                         "token-identical against an unsharded engine")
     args = ap.parse_args()
 
-    m, desc = run_workload(quick=args.quick)
+    # must land before the jax backend initializes (the first jax import is
+    # inside _build_engine, so this is early enough)
+    from repro.launch.mesh import ensure_fake_pod
+    ensure_fake_pod(args.mesh)
+
+    m, desc = run_workload(quick=args.quick, mesh_devices=args.mesh)
     point = {
         "bench": "serve",
         "unix_time": time.time(),
         "workload": desc,
+        "mesh_devices": desc["mesh_devices"],
         "tokens_per_sec": m.tokens_per_sec,
         "ttft_mean_s": m.ttft_mean_s,
         "itl_mean_s": m.itl_mean_s,
@@ -176,8 +261,17 @@ def cli() -> int:
     print(m.summary())
     print(f"trajectory point written to {args.out}")
 
+    if desc.get("token_identical") is not None:
+        print(f"sharded-vs-single token identity: "
+              f"{'OK' if desc['token_identical'] else 'MISMATCH'}")
     errs = _check(m, desc)
-    if args.baseline:
+    # classify by the engine's EFFECTIVE mesh (the --mesh flag and the
+    # REPRO_SERVE_MESH knob both count): a sharded point must never be
+    # gated against — nor ratcheted into — the single-device series
+    if args.baseline and desc.get("sharded"):
+        print("baseline gate skipped: sharded points are a separate series "
+              "(single-device floor does not apply)")
+    elif args.baseline:
         with open(args.baseline) as f:
             base = json.load(f)
         floor = base["tokens_per_sec"] * (1.0 - args.max_regress)

@@ -268,6 +268,31 @@ def cache_specs(cfg: ModelConfig, cache_abstract, mesh: Mesh):
     return jax.tree_util.tree_map_with_path(rule, cache_abstract)
 
 
+def paged_cache_specs(cfg: ModelConfig, cache_abstract, mesh: Mesh):
+    """PartitionSpecs for the serve engine's paged KV block slab.
+
+    The paged layout ``(n_layers, num_blocks, block_size, KV, hd)`` lines up
+    with the dense cache rule's trailing ``(B, S, KV, hd)`` dims, so
+    ``cache_specs`` already lands "model" on the kv-heads axis when it
+    divides.  This wrapper then drops every OTHER entry: the block axis is
+    indexed host-side by the allocator / swap / copy-on-write data plane and
+    the block_size axis is the token offset within a block — neither may be
+    partitioned (the GQA seq-parallel fallback in ``cache_specs`` would
+    otherwise split block_size when KV doesn't divide the model axis).  The
+    result shards exactly one thing: each device owns ``KV / n_model`` heads
+    of every block in the pool."""
+    base = cache_specs(cfg, cache_abstract, mesh)
+
+    def rule(spec, leaf):
+        n = len(leaf.shape)
+        entries = list(spec) + [None] * (n - len(spec))
+        return P(*[e if (i == n - 2 and e == "model") else None
+                   for i, e in enumerate(entries)])
+
+    return jax.tree.map(rule, base, cache_abstract,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
 # ---------------------------------------------------------------------------
 # Optimizer state
 # ---------------------------------------------------------------------------

@@ -30,6 +30,14 @@ TPU tiling note: the per-page tile is ``(bs, KV, hd)`` with ``hd`` typically
 64–128; Mosaic pads sub-(8,128) tiles, which wastes some VMEM at small block
 sizes but keeps the pool layout untouched (no transpose of the whole pool
 per step — that would reintroduce the O(pool) traffic this kernel removes).
+
+Mesh-sharded serving note: when the serve engine shards the KV pool on the
+kv-heads axis (``repro.models.attention.set_serve_mesh``), this kernel is
+invoked *inside* shard_map with the per-shard page slab ``(N, bs, KV/n,
+hd)`` and the query heads grouped under those KV heads.  Nothing here
+changes: the grid is already per KV head, so each shard simply runs a
+narrower grid over its own heads — the head axis partitions the kernel
+cleanly, which is exactly why the pool shards on it.
 """
 from __future__ import annotations
 

@@ -3,8 +3,11 @@
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
         --requests 8 --max-new 16 --block-size 8 --temperature 0.8 --top-k 40
 
-Prints per-run ServeMetrics; ``--metrics-out`` dumps them as JSON (the same
-shape bench_serve emits into BENCH_serve.json).
+``--mesh N`` shards the KV block pool over N devices on the kv-heads axis
+(on a chipless host it forces an N-device CPU fake pod first); outputs are
+token-identical to the single-device run.  Prints per-run ServeMetrics;
+``--metrics-out`` dumps them as JSON (the same shape bench_serve emits into
+BENCH_serve.json).
 """
 from __future__ import annotations
 
@@ -15,6 +18,7 @@ import jax
 import numpy as np
 
 from repro.configs.base import get_config, reduced_config
+from repro.launch.mesh import ensure_fake_pod
 from repro.models import build_model
 from repro.serve.engine import Request, SamplingParams, ServeEngine
 
@@ -41,12 +45,22 @@ def main():
     ap.add_argument("--prefix-cache-blocks", type=int, default=-1,
                     help="blocks retained for prompt-prefix sharing "
                          "(-1 = pool/4, 0 = sharing off)")
+    ap.add_argument("--mesh", type=int, default=0,
+                    help="shard the KV pool over this many devices on the "
+                         "kv-heads axis (1 = explicit 1-device mesh; 0 = "
+                         "defer to REPRO_SERVE_MESH; forces a CPU fake pod "
+                         "when not enough devices exist)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--metrics-out", default="")
     args = ap.parse_args()
 
+    ensure_fake_pod(args.mesh)
+    mesh = None          # 0: defer to the REPRO_SERVE_MESH knob
+    if args.mesh >= 1:   # an explicit CLI width always beats the env knob
+        from repro.launch.mesh import make_serve_mesh
+        mesh = make_serve_mesh(args.mesh)
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = reduced_config(cfg)
@@ -59,7 +73,8 @@ def main():
                       admission=args.admission,
                       host_blocks=None if args.host_blocks < 0 else args.host_blocks,
                       prefix_cache_blocks=None if args.prefix_cache_blocks < 0
-                      else args.prefix_cache_blocks)
+                      else args.prefix_cache_blocks,
+                      mesh=mesh)
     rng = np.random.default_rng(args.seed)
     for i in range(args.requests):
         prompt = rng.integers(1, cfg.vocab, size=int(rng.integers(4, 12))).tolist()

@@ -48,6 +48,40 @@ def paged_plan() -> dict:
     return dict(_PAGED_PLAN)
 
 
+# Serve mesh for the paged-attention paths, set by the engine at trace time
+# (same pattern as set_paged_plan): when a Mesh with a "model" axis is
+# active, the paged scatter + attend runs under shard_map with pages and
+# query heads split on that axis — each shard owns KV/n kv heads of every
+# block and the H/n query heads grouped under them, so no cross-shard
+# arithmetic happens and outputs are BITWISE identical to the single-device
+# path (the per-shard outputs are all-gathered, never partial-summed).
+_SERVE_MESH = {"mesh": None}
+
+
+def set_serve_mesh(mesh) -> None:
+    """Engine hook: the mesh whose "model" axis shards the KV block pool
+    (None = single-device).  Read at trace time by the paged attention
+    paths; each engine's jit wrappers set it before tracing, so concurrent
+    sharded and unsharded engines bake in their own setting."""
+    _SERVE_MESH["mesh"] = mesh
+
+
+def serve_mesh():
+    return _SERVE_MESH["mesh"]
+
+
+def _serve_shard_mesh(kv_heads: int, q_heads: int):
+    """The active serve mesh iff its "model" axis cleanly partitions both
+    head counts (GQA groups stay intact per shard); None otherwise."""
+    mesh = _SERVE_MESH["mesh"]
+    if mesh is None or "model" not in mesh.shape:
+        return None
+    n = mesh.shape["model"]
+    if kv_heads % n or q_heads % n:
+        return None
+    return mesh
+
+
 def _paged_impl() -> str:
     """Resolve the paged-attention path: the REPRO_PAGED_ATTN knob, with
     "auto" meaning kernel on TPU and dense gather on CPU (where interpret-
@@ -195,6 +229,21 @@ def paged_scatter_token(pages: jax.Array, tables: jax.Array,
     return pages.at[blk, positions % bs].set(values.astype(pages.dtype))
 
 
+def _paged_decode_attend(q, k_pages, v_pages, block_tables, seq_lens):
+    """Dispatch one decode token's attention over (possibly per-shard)
+    pages: the Pallas streaming kernel or the dense-gather fallback.  Under
+    shard_map both see only the local KV-head slice; the kernel's grid is
+    per KV head, so it partitions over the head axis without changes."""
+    if _paged_impl() == "kernel":
+        from repro.kernels import ops as kops
+        return kops.paged_attention(
+            q, k_pages, v_pages, block_tables, seq_lens + 1,
+            pages_per_fetch=_PAGED_PLAN["pages_per_fetch"])
+    kg = paged_gather(k_pages, block_tables)
+    vg = paged_gather(v_pages, block_tables)
+    return decode_attention(q, kg, vg, seq_lens + 1)
+
+
 def attention_decode_block_paged(cfg: ModelConfig, p, x: jax.Array,
                                  k_pages: jax.Array, v_pages: jax.Array,
                                  block_tables: jax.Array, seq_lens: jax.Array):
@@ -203,20 +252,38 @@ def attention_decode_block_paged(cfg: ModelConfig, p, x: jax.Array,
     x (B,1,d); pages (N,bs,KV,hd); block_tables (B,M); seq_lens (B,) — the
     number of KV entries already written for each row (the new token's KV is
     written at position seq_lens[b]).  Returns (out, k_pages, v_pages).
+
+    When a serve mesh is active (``set_serve_mesh``), the scatter + attend
+    runs under shard_map with pages, new-token KV, and query heads all split
+    on the "model" axis: each shard writes and attends its own KV heads
+    (q heads grouped under them, so GQA never crosses a shard), and the
+    per-shard outputs are all-gathered — bitwise identical to single-device
+    because no reduction ever spans shards.
     """
     positions = seq_lens[:, None].astype(jnp.int32)
     q, k, v = qkv_project(cfg, p, x, positions)
-    k_pages = paged_scatter_token(k_pages, block_tables, seq_lens, k[:, 0])
-    v_pages = paged_scatter_token(v_pages, block_tables, seq_lens, v[:, 0])
-    if _paged_impl() == "kernel":
-        from repro.kernels import ops as kops
-        o = kops.paged_attention(
-            q, k_pages, v_pages, block_tables, seq_lens + 1,
-            pages_per_fetch=_PAGED_PLAN["pages_per_fetch"])
+    mesh = _serve_shard_mesh(k_pages.shape[2], q.shape[2])
+    if mesh is None:
+        k_pages = paged_scatter_token(k_pages, block_tables, seq_lens, k[:, 0])
+        v_pages = paged_scatter_token(v_pages, block_tables, seq_lens, v[:, 0])
+        o = _paged_decode_attend(q, k_pages, v_pages, block_tables, seq_lens)
     else:
-        kg = paged_gather(k_pages, block_tables)
-        vg = paged_gather(v_pages, block_tables)
-        o = decode_attention(q, kg, vg, seq_lens + 1)
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+        hs = P(None, None, "model", None)    # heads/kv axis of q, k, v, pages
+
+        def body(q_l, k_l, v_l, kp_l, vp_l, tables, lens):
+            kp_l = paged_scatter_token(kp_l, tables, lens, k_l[:, 0])
+            vp_l = paged_scatter_token(vp_l, tables, lens, v_l[:, 0])
+            o_l = _paged_decode_attend(q_l, kp_l, vp_l, tables, lens)
+            return jax.lax.all_gather(o_l, "model", axis=2, tiled=True), \
+                kp_l, vp_l
+
+        o, k_pages, v_pages = shard_map(
+            body, mesh=mesh,
+            in_specs=(hs, hs, hs, hs, hs, P(None, None), P(None)),
+            out_specs=(P(None, None, None, None), hs, hs),
+            check_rep=False)(q, k, v, k_pages, v_pages, block_tables, seq_lens)
     b = x.shape[0]
     from repro.distributed.sharding import weight_use
     out = jnp.einsum("bse,ed->bsd", o.reshape(b, 1, cfg.q_dim),
@@ -253,31 +320,64 @@ def attention_prefill_chunk_block(cfg: ModelConfig, p, x: jax.Array,
     idx = jnp.clip(chunk_pos // bs, 0, m - 1)
     blk = jnp.where(valid, block_table[0, idx], 0)
     off = chunk_pos % bs
-    k_pages = k_pages.at[blk, off].set(k[0].astype(k_pages.dtype))
-    v_pages = v_pages.at[blk, off].set(v[0].astype(v_pages.dtype))
     c = x.shape[1]
-    if _paged_impl() == "kernel":
-        from repro.kernels import ops as kops
-        kv_lens = (chunk_pos[-1] + 1)[None]            # span written so far
-        o = kops.paged_attention_chunk(
-            q, k_pages, v_pages, block_table, chunk_pos, kv_lens,
-            pages_per_fetch=_PAGED_PLAN["pages_per_fetch"])
+    mesh = _serve_shard_mesh(k_pages.shape[2], q.shape[2])
+    if mesh is None:
+        k_pages = k_pages.at[blk, off].set(k[0].astype(k_pages.dtype))
+        v_pages = v_pages.at[blk, off].set(v[0].astype(v_pages.dtype))
+        o = _paged_prefill_attend(cfg, q, k_pages, v_pages, block_table,
+                                  chunk_pos)
     else:
-        kg = paged_gather(k_pages, block_table)     # (1, m_used*bs, KV, hd)
-        vg = paged_gather(v_pages, block_table)
-        h_q = q.shape[2]
-        kv = kg.shape[2]
-        scale = 1.0 / math.sqrt(cfg.resolved_head_dim)
-        kh = _repeat_kv(kg, h_q // kv).transpose(0, 2, 1, 3)  # (1,H,m*bs,hd)
-        vh = _repeat_kv(vg, h_q // kv).transpose(0, 2, 1, 3)
-        qh = q.transpose(0, 2, 1, 3)                          # (1,H,C,hd)
-        kpos = jnp.arange(m * bs)
-        mask_add = _causal_mask_add(chunk_pos, kpos)[None, None]
-        o = _attend_block(qh, kh, vh, mask_add, scale).transpose(0, 2, 1, 3)
+        # shard_map over the kv-heads axis, mirroring the decode path: each
+        # shard scatters and attends its own KV-head slice of the chunk,
+        # then the head-split outputs are all-gathered (no cross-shard sums)
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+        hs = P(None, None, "model", None)
+
+        def body(q_l, k_l, v_l, kp_l, vp_l, table, blk_, off_, cpos):
+            kp_l = kp_l.at[blk_, off_].set(k_l[0].astype(kp_l.dtype))
+            vp_l = vp_l.at[blk_, off_].set(v_l[0].astype(vp_l.dtype))
+            o_l = _paged_prefill_attend(cfg, q_l, kp_l, vp_l, table, cpos)
+            return jax.lax.all_gather(o_l, "model", axis=2, tiled=True), \
+                kp_l, vp_l
+
+        o, k_pages, v_pages = shard_map(
+            body, mesh=mesh,
+            in_specs=(hs, hs, hs, hs, hs, P(None, None), P(None), P(None),
+                      P(None)),
+            out_specs=(P(None, None, None, None), hs, hs),
+            check_rep=False)(q, k, v, k_pages, v_pages, block_table, blk,
+                             off, chunk_pos)
     from repro.distributed.sharding import weight_use
     out = jnp.einsum("bse,ed->bsd", o.reshape(1, c, cfg.q_dim),
                      weight_use(p["wo"], "heads", None))
     return out, k_pages, v_pages
+
+
+def _paged_prefill_attend(cfg: ModelConfig, q, k_pages, v_pages, block_table,
+                          chunk_pos):
+    """One prefill chunk's attention over (possibly per-shard) pages —
+    kernel or gather dispatch, shared by the single-device and shard_map
+    paths of ``attention_prefill_chunk_block``."""
+    if _paged_impl() == "kernel":
+        from repro.kernels import ops as kops
+        kv_lens = (chunk_pos[-1] + 1)[None]            # span written so far
+        return kops.paged_attention_chunk(
+            q, k_pages, v_pages, block_table, chunk_pos, kv_lens,
+            pages_per_fetch=_PAGED_PLAN["pages_per_fetch"])
+    m, bs = block_table.shape[1], k_pages.shape[1]
+    kg = paged_gather(k_pages, block_table)         # (1, m_used*bs, KV, hd)
+    vg = paged_gather(v_pages, block_table)
+    h_q = q.shape[2]
+    kv = kg.shape[2]
+    scale = 1.0 / math.sqrt(cfg.resolved_head_dim)
+    kh = _repeat_kv(kg, h_q // kv).transpose(0, 2, 1, 3)      # (1,H,m*bs,hd)
+    vh = _repeat_kv(vg, h_q // kv).transpose(0, 2, 1, 3)
+    qh = q.transpose(0, 2, 1, 3)                              # (1,H,C,hd)
+    kpos = jnp.arange(m * bs)
+    mask_add = _causal_mask_add(chunk_pos, kpos)[None, None]
+    return _attend_block(qh, kh, vh, mask_add, scale).transpose(0, 2, 1, 3)
 
 
 # ---------------------------------------------------------------------------

@@ -30,7 +30,9 @@ class ModelFns:
     prefill_chunk: Optional[Callable] = None     # (params, cache, batch, m_used=) -> (cache, logits)
     # Tiered-KVStore data plane (repro.serve.kv_store): per-block device copy
     # (copy-on-write) and device<->host movement (swap tiers).  Layout-aware,
-    # so each family owns its own implementation.
+    # so each family owns its own implementation.  Works unchanged on a
+    # mesh-sharded slab: jit + GSPMD partition the copy per shard, and
+    # read/write gather / re-split the per-shard slices of one block.
     paged_block_copy: Optional[Callable] = None   # (cache, src, dst) -> cache
     paged_block_read: Optional[Callable] = None   # (cache, idx) -> host pytree
     paged_block_write: Optional[Callable] = None  # (cache, idx, data) -> cache

@@ -246,7 +246,11 @@ def _slot_major_merge(new_k, new_v, every: int) -> Dict:
 
 # Block indices are TRACED scalars: baking them in as constants would
 # recompile the scatter for every distinct (src, dst) pair — one jit per
-# cache shape instead, shared across all blocks and all engines.
+# cache shape instead, shared across all blocks and all engines.  On a
+# mesh-sharded slab the same jits compile a second, partitioned executable
+# (jit caches per input sharding): the copy runs shard-local, the read
+# gathers one block's head-slices to host, the write re-splits them —
+# DeviceTier._pin re-asserts the slab sharding after each update.
 _paged_copy_jit = jax.jit(
     lambda c, src, dst: {k: v.at[:, dst].set(v[:, src]) for k, v in c.items()})
 _paged_read_jit = jax.jit(lambda c, idx: {k: v[:, idx] for k, v in c.items()})

@@ -44,6 +44,14 @@ Knobs (defaults = the paper-faithful baseline):
       kernel — force the Pallas paged-attention kernel (interpret on CPU;
                what the parity suite runs)
       gather — force the dense pages[tables] gather fallback
+  REPRO_SERVE_MESH     0 | auto | N
+      0    — single-device serve KV pool (the default)
+      auto — shard the serve engine's block pool over ALL visible devices
+             on the kv-heads axis (repro.serve.kv_store.DeviceTier gets a
+             NamedSharding slab; attention runs under shard_map per KV head)
+      N    — shard over the first N devices.  N must divide the arch's
+             n_kv_heads and n_heads; the engine raises otherwise.  An
+             explicit ``ServeEngine(mesh=...)`` argument overrides the knob.
 """
 from __future__ import annotations
 
@@ -63,6 +71,7 @@ class PerfConfig:
     weight_ag: bool = False
     paged_attn: str = "auto"
     kv_swap: bool = True
+    serve_mesh: str = "0"
 
 
 def perf() -> PerfConfig:
@@ -77,6 +86,7 @@ def perf() -> PerfConfig:
         weight_ag=os.environ.get("REPRO_WEIGHT_AG", "0") == "1",
         paged_attn=os.environ.get("REPRO_PAGED_ATTN", "auto"),
         kv_swap=os.environ.get("REPRO_KV_SWAP", "1") == "1",
+        serve_mesh=os.environ.get("REPRO_SERVE_MESH", "0"),
     )
 
 

@@ -42,6 +42,17 @@ flash-attention kernel's pages-per-fetch (``repro.kernels.paged_attention``;
 dispatch via the REPRO_PAGED_ATTN knob — kernel on TPU, dense-gather
 fallback on CPU).  The pipeline's compile cache makes repeated engine
 construction skip saturation and search entirely.
+
+**Multi-device serving** (``mesh=`` or the REPRO_SERVE_MESH knob): the
+device tier's block slab is sharded over the mesh's "model" axis on the
+kv-heads dim (``repro.distributed.sharding.paged_cache_specs``), params are
+replicated, and the paged attention paths run under shard_map grouped by KV
+head — outputs are token-identical to a single-device run because no
+floating-point reduction ever crosses a shard (per-shard head outputs are
+all-gathered, never partial-summed).  Scheduling, admission, CoW, prefix
+sharing, and preemption-by-swap are untouched: block ids stay global, and
+``swap_out``/``swap_in`` gather/scatter each block's per-shard slices so the
+host tier keeps holding whole blocks (replicated-on-host).
 """
 from __future__ import annotations
 
@@ -77,6 +88,16 @@ class SamplingParams:
 
 
 GREEDY = SamplingParams()
+
+
+def _mesh_from_knob():
+    """Resolve REPRO_SERVE_MESH: "0"/"" = single-device (None), "auto" =
+    shard over every visible device, an int = shard over the first N."""
+    knob = perf().serve_mesh
+    if knob in ("", "0", "off"):
+        return None
+    from repro.launch.mesh import make_serve_mesh
+    return make_serve_mesh(None if knob == "auto" else int(knob))
 
 
 @dataclasses.dataclass
@@ -164,7 +185,10 @@ class ServeEngine:
                  host_blocks: Optional[int] = None,
                  prefix_cache_blocks: Optional[int] = None,
                  compiler: Optional[Compiler] = None,
-                 plan_kernels: bool = True):
+                 plan_kernels: bool = True,
+                 mesh=None):
+        # mesh: a jax Mesh with a "model" axis to shard the KV pool over,
+        # None to consult REPRO_SERVE_MESH, or False to force single-device
         # vlm is excluded deliberately: the paged prefill/decode path embeds
         # raw token ids with 2-D positions, which would silently degrade
         # M-RoPE + vision-embeds frontends; wiring the embeds interface
@@ -199,11 +223,39 @@ class ServeEngine:
             if self.swap_enabled else 0
         prefix_budget = prefix_cache_blocks if prefix_cache_blocks \
             is not None else self.pool.usable_blocks // 4
-        device = DeviceTier(self.fns.make_paged_cache(num_blocks, block_size),
-                            self.pool,
+
+        # multi-device serving: shard the block slab over the mesh's "model"
+        # axis on the kv-heads dim, replicate params, and leave every piece
+        # of bookkeeping (global block ids, refcounts, tables) untouched.
+        # mesh=None (default) consults REPRO_SERVE_MESH; mesh=False forces
+        # single-device regardless of the knob (oracle/reference engines
+        # must not be silently sharded by ambient env)
+        if mesh is False:
+            self.mesh = None
+        else:
+            self.mesh = mesh if mesh is not None else _mesh_from_knob()
+        cache0 = self.fns.make_paged_cache(num_blocks, block_size)
+        shardings = None
+        if self.mesh is not None:
+            n_tp = int(self.mesh.shape.get("model", 1))
+            if cfg.n_kv_heads % n_tp or cfg.n_heads % n_tp:
+                raise ValueError(
+                    f"serve mesh model axis {n_tp} must divide n_kv_heads "
+                    f"{cfg.n_kv_heads} and n_heads {cfg.n_heads} — the pool "
+                    "is sharded per KV head (GQA groups stay intact)")
+            from jax.sharding import NamedSharding, PartitionSpec
+            from repro.distributed.sharding import paged_cache_specs, to_named
+            abstract = jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), cache0)
+            shardings = to_named(paged_cache_specs(cfg, abstract, self.mesh),
+                                 self.mesh)
+            self.params = jax.device_put(
+                self.params, NamedSharding(self.mesh, PartitionSpec()))
+        device = DeviceTier(cache0, self.pool,
                             copy_block=self.fns.paged_block_copy,
                             read_block=self.fns.paged_block_read,
-                            write_block=self.fns.paged_block_write)
+                            write_block=self.fns.paged_block_write,
+                            shardings=shardings)
         self.store = KVStore(device, HostTier(n_host),
                              prefix_cache_blocks=prefix_budget)
 
@@ -250,13 +302,24 @@ class ServeEngine:
             self.pages_per_fetch = paged_pages_per_fetch(
                 self.kernel_plan, block_size, self.max_blocks_per_seq)
 
+        # set_serve_mesh is restored after tracing (the finally runs at
+        # trace time, right after the model graph is built) so the module
+        # state never leaks into unrelated traces in the same process
         def _decode(p, c, b):
             attn_lib.set_paged_plan(self.pages_per_fetch)
-            return self.fns.decode_paged(p, c, b)
+            attn_lib.set_serve_mesh(self.mesh)
+            try:
+                return self.fns.decode_paged(p, c, b)
+            finally:
+                attn_lib.set_serve_mesh(None)
 
         def _prefill(p, c, b, m_used):
             attn_lib.set_paged_plan(self.pages_per_fetch)
-            return self.fns.prefill_chunk(p, c, b, m_used=m_used)
+            attn_lib.set_serve_mesh(self.mesh)
+            try:
+                return self.fns.prefill_chunk(p, c, b, m_used=m_used)
+            finally:
+                attn_lib.set_serve_mesh(None)
 
         self._decode_fn = jax.jit(_decode)
         # one retrace per distinct m_used (bounded by max_blocks_per_seq),
@@ -271,10 +334,18 @@ class ServeEngine:
 
     @cache.setter
     def cache(self, value):
-        self.store.device.cache = value
+        # _pin re-asserts the slab's mesh sharding (no-op when unsharded or
+        # when GSPMD preserved it, which the shard_map out_specs guarantee)
+        self.store.device.cache = self.store.device._pin(value)
 
     # -- request lifecycle -----------------------------------------------
     def submit(self, req: Request) -> None:
+        """Enqueue ``req`` (FIFO).  Admission control runs inside ``step``:
+        the request may later be rejected (impossible footprint — see
+        ``Request.reject_reason``) or queued until blocks free up.  The
+        engine mutates ``req`` in place: ``out`` grows as tokens are
+        sampled, ``done``/``rejected`` flip on completion, and the
+        ``t_submit``/``t_first``/``t_done`` stamps feed ``ServeMetrics``."""
         req.t_submit = time.monotonic()
         self._submitted += 1
         self.queue.append(req)
@@ -652,9 +723,11 @@ class ServeEngine:
         return worked
 
     def run_until_done(self, max_steps: int = 100_000) -> List[Request]:
-        """Drive the engine until queue and slots drain; returns the finished
-        requests in completion order (rejected requests are in
-        ``self.rejected``, not here)."""
+        """Drive ``step`` until queue and slots drain (or ``max_steps``
+        engine iterations pass); returns the finished requests in completion
+        order.  Rejected requests are in ``self.rejected``, not here; a
+        request preempted mid-run is restored (or restarted, see
+        REPRO_KV_SWAP) and still finishes before this returns."""
         for _ in range(max_steps):
             if not self.step():
                 break
@@ -716,4 +789,6 @@ class ServeEngine:
             swap_out_blocks=self.store.swapped_out,
             swap_in_blocks=self.store.swapped_in,
             re_prefill_avoided=self._re_prefill_avoided,
+            mesh_devices=int(self.mesh.shape.get("model", 1))
+            if self.mesh is not None else 1,
         )

@@ -22,6 +22,12 @@ Only the *data plane* touches jax: tier read/copy/write callbacks come from
 the model family (``ModelFns.paged_block_*``), so the store itself stays
 family-agnostic and the bookkeeping is plain Python — unit-testable in
 milliseconds with stub tiers.
+
+The device tier may be **mesh-sharded** (multi-device serving): pass
+``DeviceTier(shardings=...)`` and the slab is distributed on the kv-heads
+axis while every handle, refcount, and table keeps speaking global block
+ids — sharding is invisible to the store's bookkeeping.  See
+``docs/architecture.md`` for the full storage-tier picture.
 """
 from __future__ import annotations
 
@@ -63,40 +69,71 @@ class DeviceTier:
     back, so the tier holds the *current* reference between dispatches.
     Data-plane ops (copy/read/write of one block) are injected by the model
     family so the tier never assumes a leaf layout.
+
+    ``shardings`` (optional, a pytree of ``jax.sharding.NamedSharding``
+    mirroring ``cache``) makes the slab **mesh-sharded**: each device owns a
+    slice of the kv-heads axis of every block (see
+    ``repro.distributed.sharding.paged_cache_specs``).  Block *identity* is
+    unchanged — the allocator, block tables, refcounts, and copy-on-write
+    all still speak global block ids; only the bytes of each block are
+    distributed.  ``read``/``write`` therefore move whole logical blocks:
+    a ``read`` gathers the per-shard slices into one host array (the host
+    tier stays replicated-on-host), a ``write`` scatters the host block
+    back across the shards.  ``_pin`` re-asserts the slab's sharding after
+    data-plane updates in case the compiler drifted it.
     """
 
     name = DEVICE
 
     def __init__(self, cache, pool: BlockPool,
                  copy_block: Callable, read_block: Callable,
-                 write_block: Callable):
-        self.cache = cache
+                 write_block: Callable, shardings=None):
+        self.shardings = shardings
+        self.cache = self._pin(cache)
         self.pool = pool
         self._copy = copy_block
         self._read = read_block
         self._write = write_block
+
+    def _pin(self, cache):
+        """Re-apply the slab's NamedSharding to any leaf that lost it (a
+        no-op — pointer-equality fast path — when nothing drifted)."""
+        if self.shardings is None:
+            return cache
+        import jax
+        return jax.tree.map(
+            lambda x, s: x if getattr(x, "sharding", None) == s
+            else jax.device_put(x, s), cache, self.shardings)
 
     @property
     def block_size(self) -> int:
         return self.pool.block_size
 
     def alloc(self, reserved: bool = False) -> int:
+        """Pop one free physical block id (``reserved=True`` draws it out of
+        an admission reservation).  Raises ``PoolExhausted`` under pressure."""
         return self.pool.alloc(reserved=reserved)
 
     def free(self, idx: int) -> None:
+        """Return physical block ``idx`` to the pool's free list."""
         self.pool.free([idx])
 
     def copy(self, src: int, dst: int) -> None:
-        """Device-side block copy (the CoW data plane)."""
-        self.cache = self._copy(self.cache, src, dst)
+        """Device-side block copy (the CoW data plane).  On a sharded slab
+        each device copies its own kv-head slice — no cross-device traffic."""
+        self.cache = self._pin(self._copy(self.cache, src, dst))
 
     def read(self, idx: int):
-        """Block ``idx`` -> host numpy pytree (device -> host swap traffic)."""
+        """Block ``idx`` -> host numpy pytree (device -> host swap traffic).
+        On a sharded slab this gathers the per-shard slices into one full
+        block, so the host tier holds whole blocks regardless of the mesh."""
         return self._read(self.cache, idx)
 
     def write(self, idx: int, data) -> None:
-        """Host numpy pytree -> block ``idx`` (host -> device swap traffic)."""
-        self.cache = self._write(self.cache, idx, data)
+        """Host numpy pytree -> block ``idx`` (host -> device swap traffic).
+        On a sharded slab the block is re-split: each device receives its
+        kv-head slice of the restored data."""
+        self.cache = self._pin(self._write(self.cache, idx, data))
 
 
 class HostTier:

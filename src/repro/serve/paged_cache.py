@@ -150,22 +150,30 @@ class BlockPool:
 
 @dataclasses.dataclass
 class ServeMetrics:
-    """One serving run's scorecard (emitted into BENCH_serve.json)."""
-    wall_s: float = 0.0
+    """One serving run's scorecard (emitted into BENCH_serve.json).
+
+    Counters report *delivered* work: tokens discarded by a legacy
+    (non-swap) preemption are backed out, so throughput can't be inflated
+    by churn.  Field groups: wall/request/token tallies, latency
+    (``ttft_*`` submit->first-token, ``itl_mean_s`` between tokens), pool
+    footprint vs the dense slot cache, tiered-KVStore traffic, and the
+    serve-mesh width.
+    """
+    wall_s: float = 0.0                  # first step -> last productive step
     requests_submitted: int = 0
     requests_finished: int = 0
-    requests_rejected: int = 0
-    prefill_tokens: int = 0
-    decode_tokens: int = 0
+    requests_rejected: int = 0           # failed admission validation
+    prefill_tokens: int = 0              # prompt tokens actually run
+    decode_tokens: int = 0               # sampled tokens actually delivered
     engine_steps: int = 0
     tokens_per_sec: float = 0.0          # decode tokens / wall
     ttft_mean_s: float = 0.0             # submit -> first token
     ttft_max_s: float = 0.0
     itl_mean_s: float = 0.0              # mean inter-token latency
-    peak_blocks_used: int = 0
+    peak_blocks_used: int = 0            # high-water mark of live KV blocks
     pool_blocks: int = 0                 # usable blocks in the pool
     block_size: int = 0
-    peak_pool_utilization: float = 0.0
+    peak_pool_utilization: float = 0.0   # peak_blocks_used / pool_blocks
     dense_equiv_blocks: int = 0          # max_batch * ceil(max_len/block_size)
     preemptions: int = 0
     # tiered-KVStore traffic (prefix sharing, copy-on-write, host swap)
@@ -175,6 +183,8 @@ class ServeMetrics:
     swap_in_blocks: int = 0              # host -> device (restore on readmission)
     re_prefill_avoided: int = 0          # prompt tokens NOT re-prefilled (shared
     #                                      prefixes + restored preemptions)
+    mesh_devices: int = 1                # "model"-axis width the pool is
+    #                                      sharded over (1 = single device)
 
     def to_dict(self) -> Dict[str, float]:
         return dataclasses.asdict(self)
@@ -189,7 +199,9 @@ class ServeMetrics:
                 f"{self.preemptions} preemptions, {self.requests_rejected} rejected"
                 f" | {self.shared_blocks} shared / {self.cow_copies} CoW blocks, "
                 f"swap {self.swap_out_blocks} out / {self.swap_in_blocks} in, "
-                f"{self.re_prefill_avoided} prefill tokens avoided")
+                f"{self.re_prefill_avoided} prefill tokens avoided"
+                + (f" | pool sharded over {self.mesh_devices} devices"
+                   if self.mesh_devices > 1 else ""))
 
 
 def dense_equiv_blocks(max_batch: int, max_len: int, block_size: int) -> int:

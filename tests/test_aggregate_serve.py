@@ -13,6 +13,8 @@ def _point(path, t, tps, **kw):
          "ttft_mean_s": kw.get("ttft", 0.04),
          "peak_pool_utilization": kw.get("pool", 0.4),
          "preemptions": kw.get("preempt", 0)}
+    if "mesh_devices" in kw:
+        p["mesh_devices"] = kw["mesh_devices"]
     path.write_text(json.dumps(p))
     return str(path)
 
@@ -102,6 +104,42 @@ def test_cli_refuses_to_ratchet_from_too_few_points(tmp_path, capsys):
         sys.argv = argv
     assert json.loads(base.read_text())["tokens_per_sec"] == 140.0
     assert "--ratchet ignored" in capsys.readouterr().out
+
+
+def test_sharded_points_labelled_and_excluded_from_ratchet(tmp_path):
+    """Mesh-sharded points appear in the trend table with their mesh width
+    but never enter the single-device ratchet series — a fast sharded run
+    must not tighten the single-device floor (nor a slow one hold it down)."""
+    from benchmarks.aggregate_serve import point_mesh, single_device_points
+    singles = [_point(tmp_path / f"s{i}.json", float(i), 500.0)
+               for i in range(3)]
+    sharded = _point(tmp_path / "m.json", 10.0, 9000.0, mesh_devices=4)
+    legacy = _point(tmp_path / "old.json", 0.5, 500.0)  # pre-mesh history
+    pts = load_points(singles + [sharded, legacy])
+    assert [point_mesh(p) for p in pts] == [1, 1, 1, 1, 4]
+    table = trend_table(pts)
+    assert "sharded x4" in table and table.count("single") == 4
+    series = single_device_points(pts)
+    assert len(series) == 4
+    assert suggest_floor(series) == pytest.approx(0.8 * 500.0)
+
+
+def test_cli_with_only_sharded_points_leaves_floor_untouched(tmp_path, capsys):
+    from benchmarks.aggregate_serve import cli
+    import sys
+    base = tmp_path / "serve.json"
+    base.write_text(json.dumps({"bench": "serve", "tokens_per_sec": 140.0,
+                                "_comment": "floor"}))
+    pts = [_point(tmp_path / f"m{i}.json", float(i), 5000.0, mesh_devices=4)
+           for i in range(4)]
+    argv, sys.argv = sys.argv, ["aggregate_serve", *pts,
+                                "--baseline", str(base), "--ratchet"]
+    try:
+        assert cli() == 0
+    finally:
+        sys.argv = argv
+    assert json.loads(base.read_text())["tokens_per_sec"] == 140.0
+    assert "single-device only" in capsys.readouterr().out
 
 
 def test_ratchet_only_moves_up(tmp_path):

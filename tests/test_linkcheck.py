@@ -1,0 +1,69 @@
+"""tools.linkcheck: the stdlib markdown link walker CI runs over the docs."""
+from pathlib import Path
+
+from tools.linkcheck import anchors_of, check_file, main, slugify
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def test_slugify_matches_github_style():
+    assert slugify("The Serve Stack") == "the-serve-stack"
+    assert slugify("`REPRO_*` env knobs") == "repro_-env-knobs"
+    assert slugify("Tier-1 tests & CI") == "tier-1-tests--ci"
+
+
+def test_detects_broken_and_valid_links(tmp_path):
+    (tmp_path / "sub").mkdir()
+    (tmp_path / "sub" / "real.md").write_text("# A Heading\nbody\n")
+    doc = tmp_path / "doc.md"
+    doc.write_text(
+        "[ok](sub/real.md) [ok-anchor](sub/real.md#a-heading)\n"
+        "[self](#local) \n## Local\n"
+        "[gone](missing.md) [bad-anchor](sub/real.md#nope)\n"
+        "[web](https://example.com/x) badge\n"
+        "```\n[inside a fence](also_missing.md)\n```\n")
+    errs = check_file(doc.resolve(), tmp_path.resolve())
+    assert len(errs) == 2  # missing.md + the #nope anchor; the rest resolve
+    joined = "\n".join(errs)
+    assert "missing.md" in joined and "nope" in joined
+
+
+def test_self_anchor_and_fence_handling(tmp_path):
+    doc = tmp_path / "d.md"
+    doc.write_text("## Real Section\n[jump](#real-section)\n"
+                   "```\n[fenced](#not-a-heading)\n```\n")
+    assert check_file(doc.resolve(), tmp_path.resolve()) == []
+
+
+def test_outside_root_links_skipped(tmp_path):
+    """GitHub-web-relative targets (badge routes) resolve above the repo
+    root and must not be flagged."""
+    doc = tmp_path / "d.md"
+    doc.write_text("[badge](../../actions/workflows/ci.yml)\n")
+    assert check_file(doc.resolve(), tmp_path.resolve()) == []
+
+
+def test_repo_docs_are_clean():
+    """The committed docs pass their own CI gate."""
+    for name in ("README.md", "docs/architecture.md"):
+        p = ROOT / name
+        assert p.exists(), f"{name} missing"
+        assert check_file(p, ROOT) == [], f"{name} has broken links"
+
+
+def test_main_exit_codes(tmp_path, monkeypatch, capsys):
+    good = tmp_path / "good.md"
+    good.write_text("# T\n[x](#t)\n")
+    monkeypatch.chdir(tmp_path)
+    assert main([str(good)]) == 0
+    bad = tmp_path / "bad.md"
+    bad.write_text("[x](gone.md)\n")
+    assert main([str(bad)]) == 1
+    assert main([]) == 2
+    assert main([str(tmp_path / "absent.md")]) == 1
+
+
+def test_anchors_of_collects_heading_slugs(tmp_path):
+    p = tmp_path / "a.md"
+    p.write_text("# One\n## Two Words\n```\n# fenced out\n```\n")
+    assert anchors_of(p) == {"one", "two-words"}

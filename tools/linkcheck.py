@@ -1,0 +1,95 @@
+"""Markdown link walker: verify relative links and intra-doc anchors.
+
+    python -m tools.linkcheck README.md docs/architecture.md
+
+Stdlib-only (the CI container installs nothing for it).  For every
+``[text](target)`` in the given files it checks that
+
+  * relative file targets exist on disk (resolved against the linking
+    file's directory);
+  * ``#fragment`` targets resolve to a github-slugged heading in the
+    target markdown file (or the linking file itself for bare ``#...``).
+
+Skipped, deliberately: absolute URLs (no network in CI gates), mailto:,
+and targets that resolve outside the repository root — GitHub-web-relative
+links like a badge's ``../../actions/...`` are routes on github.com, not
+files in the checkout.  Exit status is the number of broken links (0 = ok).
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+from typing import List
+
+# [text](target) — target up to the first ')' or whitespace; images too.
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+FENCE_RE = re.compile(r"```.*?```", re.DOTALL)
+
+
+def slugify(heading: str) -> str:
+    """GitHub's anchor slug: lowercase, punctuation stripped, spaces to
+    hyphens.  Backticks and asterisks go; underscores stay (GitHub's
+    slugger keeps word characters, and ``_`` is one)."""
+    h = re.sub(r"[`*]", "", heading.strip()).lower()
+    h = re.sub(r"[^\w\- ]", "", h)
+    return h.replace(" ", "-")
+
+
+def anchors_of(path: Path) -> set:
+    text = FENCE_RE.sub("", path.read_text(encoding="utf-8"))
+    return {slugify(m) for m in HEADING_RE.findall(text)}
+
+
+def check_file(path: Path, root: Path) -> List[str]:
+    """Broken-link descriptions for one markdown file (empty = clean)."""
+    errors = []
+    text = FENCE_RE.sub("", path.read_text(encoding="utf-8"))
+    for target in LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            if target.startswith("#") and \
+                    target[1:] not in anchors_of(path):
+                errors.append(f"{path}: broken anchor {target!r}")
+            continue
+        base, _, frag = target.partition("#")
+        dest = (path.parent / base).resolve()
+        try:
+            dest.relative_to(root)
+        except ValueError:
+            continue  # GitHub-web-relative (badge routes etc.), not a file
+        if not dest.exists():
+            errors.append(f"{path}: broken link {target!r} "
+                          f"(no such file {dest})")
+            continue
+        if frag and dest.suffix == ".md" and frag not in anchors_of(dest):
+            errors.append(f"{path}: broken anchor {target!r} "
+                          f"(no heading slugs to {frag!r} in {dest.name})")
+    return errors
+
+
+def main(argv: List[str]) -> int:
+    if not argv:
+        print("usage: python -m tools.linkcheck FILE.md [FILE.md ...]",
+              file=sys.stderr)
+        return 2
+    root = Path.cwd().resolve()
+    errors = []
+    for name in argv:
+        p = Path(name)
+        if not p.exists():
+            errors.append(f"{name}: file to check does not exist")
+            continue
+        errors.extend(check_file(p.resolve(), root))
+    for e in errors:
+        print(f"linkcheck: FAIL: {e}", file=sys.stderr)
+    n = len(LINK_RE.findall("".join(
+        Path(a).read_text(encoding="utf-8") for a in argv
+        if Path(a).exists())))
+    print(f"linkcheck: {len(argv)} files, {n} links, "
+          f"{len(errors)} broken")
+    return min(len(errors), 125)
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
