@@ -23,6 +23,15 @@ runs measure a different engine configuration (GSPMD partitioning, widened
 kv heads on the smoke arch), so mixing them into one trailing median would
 let a fast sharded run tighten — or a slow one loosen the pressure on —
 the single-device floor.
+
+``BENCH_latency.json`` points from the open-loop gateway lane
+(``bench_serve --open-loop``) mix into the same table: they carry
+``open_loop: true`` plus p50/p99 TTFT and inter-token latency, rendered in
+their own columns.  History predating those fields gets blank latency cells
+(closed-loop points show ``~mean`` from ``ttft_mean_s`` when present) — old
+artifacts never crash the aggregator.  Open-loop points are **excluded from
+the throughput ratchet** like sharded ones: delivered tok/s under a Poisson
+arrival schedule measures the client-visible stream, not engine capacity.
 """
 from __future__ import annotations
 
@@ -59,17 +68,17 @@ def load_points(paths: List[str],
             if skipped is not None:
                 skipped.append(f"{path}: empty or unparseable JSON")
             continue
-        if "tokens_per_sec" not in p:
-            raise ValueError(f"{path}: not a BENCH_serve.json point "
-                             "(no tokens_per_sec)")
+        if "tokens_per_sec" not in p and "ttft_p50_ms" not in p:
+            raise ValueError(f"{path}: not a serve/latency trajectory point "
+                             "(no tokens_per_sec or ttft_p50_ms)")
         p["_path"] = path
         points.append(p)
     points.sort(key=lambda p: p.get("unix_time", 0.0))
     return points
 
 
-EMPTY_ROW = ("| – | – | – | – | – | – | – | no trajectory points yet — "
-             "run benchmarks.bench_serve or download CI artifacts |")
+EMPTY_ROW = ("| – | – | – | – | – | – | – | – | – | no trajectory points "
+             "yet — run benchmarks.bench_serve or download CI artifacts |")
 
 
 def point_mesh(p: Dict) -> int:
@@ -77,6 +86,12 @@ def point_mesh(p: Dict) -> int:
     Pre-mesh history has no label and is single-device by construction."""
     return int(p.get("mesh_devices")
                or p.get("workload", {}).get("mesh_devices") or 1)
+
+
+def point_open_loop(p: Dict) -> bool:
+    """Whether the point came from the open-loop gateway latency lane
+    (``bench_serve --open-loop`` -> BENCH_latency.json)."""
+    return bool(p.get("open_loop") or p.get("bench") == "serve_latency")
 
 
 def point_sharded(p: Dict) -> bool:
@@ -88,32 +103,52 @@ def point_sharded(p: Dict) -> bool:
 
 
 def single_device_points(points: List[Dict]) -> List[Dict]:
-    """The ratchet series: only points comparable to the committed
-    single-device baseline floor (no shard_map engine of any width)."""
-    return [p for p in points if not point_sharded(p)]
+    """The ratchet series: only closed-loop points comparable to the
+    committed single-device baseline floor (no shard_map engine of any
+    width, no open-loop latency runs)."""
+    return [p for p in points
+            if not point_sharded(p) and not point_open_loop(p)]
+
+
+def _lat_cell(p: Dict, p50_key: str, p99_key: str, mean_key: str) -> str:
+    """One 'p50/p99 ms' table cell.  Points predating the percentile fields
+    fall back to '~mean' when the mean exists, else a blank dash — old
+    artifacts render, they never crash."""
+    if p50_key in p:
+        return f"{p[p50_key]:.1f}/{p.get(p99_key, 0):.1f}"
+    if p.get(mean_key):
+        return f"~{p[mean_key] * 1e3:.1f}"
+    return "–"
 
 
 def trend_table(points: List[Dict]) -> str:
     """Markdown trend table, one row per trajectory point, time-ordered,
-    labelled single-device vs mesh-sharded.  An empty history renders one
-    explanatory row rather than nothing."""
+    labelled closed vs open loop and single-device vs mesh-sharded.  An
+    empty history renders one explanatory row rather than nothing."""
     lines = [
-        "| # | unix_time | mesh | tok/s | ttft_mean_ms | pool_peak "
-        "| preempt | point |",
-        "|---|-----------|------|-------|--------------|-----------"
-        "|---------|-------|",
+        "| # | unix_time | mode | mesh | tok/s | ttft p50/p99 ms "
+        "| itl p50/p99 ms | pool_peak | preempt | point |",
+        "|---|-----------|------|------|-------|-----------------"
+        "|----------------|-----------|---------|-------|",
     ]
     if not points:
         return "\n".join(lines + [EMPTY_ROW])
     for i, p in enumerate(points):
         label = f"sharded x{point_mesh(p)}" if point_sharded(p) else "single"
+        mode = f"open @{p.get('qps', 0):g}qps" if point_open_loop(p) \
+            else "closed"
+        pool = f"{p['peak_pool_utilization']:.3f}" \
+            if "peak_pool_utilization" in p else "–"
+        preempt = str(p["preemptions"]) if "preemptions" in p else "–"
         lines.append(
             f"| {i} | {p.get('unix_time', 0):.0f} "
+            f"| {mode} "
             f"| {label} "
-            f"| {p['tokens_per_sec']:.1f} "
-            f"| {p.get('ttft_mean_s', 0) * 1e3:.1f} "
-            f"| {p.get('peak_pool_utilization', 0):.3f} "
-            f"| {p.get('preemptions', 0)} "
+            f"| {p.get('tokens_per_sec', 0):.1f} "
+            f"| {_lat_cell(p, 'ttft_p50_ms', 'ttft_p99_ms', 'ttft_mean_s')} "
+            f"| {_lat_cell(p, 'itl_p50_ms', 'itl_p99_ms', 'itl_mean_s')} "
+            f"| {pool} "
+            f"| {preempt} "
             f"| {p['_path']} |")
     return "\n".join(lines)
 
@@ -175,13 +210,20 @@ def cli() -> int:
         print("\n0 points; nothing to aggregate, baseline floor untouched")
         return 0
     singles = single_device_points(points)
-    n_sharded = len(points) - len(singles)
+    n_open = sum(1 for p in points if point_open_loop(p))
+    n_sharded = len(points) - len(singles) - n_open
     if n_sharded:
         print(f"\n{n_sharded} mesh-sharded point(s) labelled in the table "
               "but excluded from the single-device ratchet series")
+    if n_open:
+        prefix = "" if n_sharded else "\n"
+        print(f"{prefix}{n_open} open-loop latency point(s) labelled in "
+              "the table but excluded from the throughput ratchet "
+              "(Poisson-paced delivery is not engine capacity)")
     if not singles:
-        print("no single-device points; baseline floor untouched "
-              "(the ratchet series is single-device only)")
+        print("no closed-loop single-device points; baseline floor "
+              "untouched (the ratchet series is closed-loop "
+              "single-device only)")
         return 0
     latest = singles[-1]["tokens_per_sec"]
     suggestion = suggest_floor(singles)

@@ -1,0 +1,20 @@
+"""Open-loop gateway latency lane for ``benchmarks.run``.
+
+Thin registration shim: the implementation lives in
+``benchmarks.bench_serve`` (``run_open_loop`` / ``latency_main``) because it
+reuses the serve bench's engine builder and workload generator.  Kept as its
+own module so ``benchmarks.run`` lists it as a separate lane and a failure
+here is attributed to the latency SLO, not closed-loop throughput.
+
+    PYTHONPATH=src python -m benchmarks.bench_serve --open-loop --quick \
+        --baseline benchmarks/baselines/latency.json
+
+is the CLI equivalent (there is deliberately no separate bench_latency CLI).
+"""
+from __future__ import annotations
+
+from benchmarks.bench_serve import latency_main
+
+
+def main(quick: bool = False):
+    yield from latency_main(quick=quick)

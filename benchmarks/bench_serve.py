@@ -21,6 +21,16 @@ and the run is verified **token-identical** against an unsharded engine on
 the same workload before the point is written.  Sharded points carry
 ``mesh_devices`` and are a separate trajectory series — the single-device
 baseline gate does not apply to them (see benchmarks.aggregate_serve).
+
+``--open-loop`` measures **latency under load** instead of closed-loop
+throughput: an in-process OpenAI gateway (``repro.serve.gateway``) is booted
+on an ephemeral port and a Poisson client fires the same workload at it at
+``--qps`` arrivals/sec over real HTTP + SSE, recording per-request TTFT
+(first streamed token) and per-token inter-token latency.  The point goes to
+``BENCH_latency.json`` (p50/p99 TTFT and ITL, delivered tokens/sec) and the
+``--baseline`` gate becomes an SLO ceiling check against
+``benchmarks/baselines/latency.json`` — open-loop points are a separate
+trajectory series; they never touch the throughput ratchet.
 """
 from __future__ import annotations
 
@@ -173,6 +183,194 @@ def run_workload(quick: bool = False, mesh_devices: int = 0,
     return m, desc
 
 
+# ---------------------------------------------------------------------------
+# Open-loop latency: Poisson arrivals over HTTP/SSE against a live gateway
+# ---------------------------------------------------------------------------
+
+OPEN_LOOP_QPS = 8.0
+OPEN_LOOP_REQUESTS = 16      # --quick; the full run triples it
+
+
+async def _sse_request(host: str, port: int, payload: dict):
+    """One streamed /v1/completions over a raw socket.  Returns
+    (ttft_s, itl_samples_s, n_tokens, finish_reason) — timing is measured
+    from the moment the request bytes are flushed, so TTFT includes the
+    gateway's queueing + admission + prefill, exactly what a caller sees."""
+    import asyncio
+    import json as _json
+
+    body = _json.dumps(payload).encode("utf-8")
+    reader, writer = await asyncio.open_connection(host, port)
+    try:
+        writer.write(
+            b"POST /v1/completions HTTP/1.1\r\nHost: bench\r\n"
+            b"Content-Type: application/json\r\n"
+            + f"Content-Length: {len(body)}\r\n\r\n".encode() + body)
+        await writer.drain()
+        t0 = time.monotonic()
+        await reader.readuntil(b"\r\n\r\n")          # response headers
+        ttft = None
+        stamps = []
+        n_tokens = 0
+        finish = ""
+        while True:
+            line = await reader.readline()
+            if not line:
+                break
+            if not line.startswith(b"data: "):
+                continue
+            data = line[len(b"data: "):].strip()
+            if data == b"[DONE]":
+                break
+            chunk = _json.loads(data)
+            if "error" in chunk:
+                finish = f"error: {chunk['error']['message']}"
+                break
+            choice = chunk["choices"][0]
+            ids = choice.get("token_ids") or []
+            if ids:
+                now = time.monotonic()
+                if ttft is None:
+                    ttft = now - t0
+                stamps.extend([now] * len(ids))
+                n_tokens += len(ids)
+            if choice.get("finish_reason"):
+                finish = choice["finish_reason"]
+        itls = [b - a for a, b in zip(stamps, stamps[1:])]
+        return ttft, itls, n_tokens, finish
+    finally:
+        writer.close()
+        try:
+            await writer.wait_closed()
+        except (ConnectionError, RuntimeError):
+            pass
+
+
+def run_open_loop(quick: bool = False, qps: float = OPEN_LOOP_QPS,
+                  n_requests: int = 0, seed: int = 0) -> dict:
+    """Boot the gateway in-process, replay the serve workload as Poisson
+    arrivals at ``qps``, and return a BENCH_latency.json point."""
+    import asyncio
+
+    import numpy as np
+
+    from repro.serve.async_engine import AsyncServeEngine
+    from repro.serve.gateway import (ByteTokenizer, Gateway, GatewayModel,
+                                     Router)
+
+    n = n_requests or (OPEN_LOOP_REQUESTS if quick else 3 * OPEN_LOOP_REQUESTS)
+    cfg, eng, params = _build_engine(0)
+    model = GatewayModel(model_id=cfg.name,
+                         async_engine=AsyncServeEngine(eng, model_id=cfg.name),
+                         tokenizer=ByteTokenizer(cfg.vocab))
+
+    reqs = _workload(cfg, n, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    arrivals = np.cumsum(rng.exponential(1.0 / qps, size=n))
+
+    async def drive():
+        async with Gateway(Router([model]), port=0) as gw:
+            # warm the jit caches through the same HTTP path, then drop the
+            # retained prefixes so the measured window starts cache-cold
+            for r in _workload(cfg, 2, seed=99):
+                await _sse_request(gw.host, gw.port, {
+                    "model": cfg.name, "prompt": r.prompt,
+                    "max_tokens": r.max_new, "stream": True})
+            eng.release_prefix_cache()
+
+            t_start = time.monotonic()
+
+            async def one(i):
+                await asyncio.sleep(float(arrivals[i]))
+                r = reqs[i]
+                sp = r.sampling
+                return await _sse_request(gw.host, gw.port, {
+                    "model": cfg.name, "prompt": r.prompt,
+                    "max_tokens": r.max_new, "stream": True,
+                    "temperature": sp.temperature, "top_k": sp.top_k,
+                    "seed": sp.seed})
+
+            results = await asyncio.gather(*[one(i) for i in range(n)])
+            wall = time.monotonic() - t_start
+            return results, wall
+
+    results, wall = asyncio.run(drive())
+    ttfts = [r[0] for r in results if r[0] is not None]
+    itls = [x for r in results for x in r[1]]
+    total_tokens = sum(r[2] for r in results)
+    completed = sum(1 for r in results if r[3] in ("stop", "length"))
+
+    def pct(xs, q):
+        return float(np.percentile(xs, q)) if xs else 0.0
+
+    return {
+        "bench": "serve_latency",
+        "open_loop": True,
+        "unix_time": time.time(),
+        "qps": qps,
+        "requests": n,
+        "completed": completed,
+        "mesh_devices": 1,
+        "workload": {"requests": n, "max_batch": MAX_BATCH,
+                     "max_len": MAX_LEN, "block_size": BLOCK_SIZE,
+                     "arch": cfg.name, "quick": quick, "qps": qps},
+        "wall_s": wall,
+        "tokens_per_sec": total_tokens / wall if wall > 0 else 0.0,
+        "ttft_mean_s": float(np.mean(ttfts)) if ttfts else 0.0,
+        "ttft_p50_ms": pct(ttfts, 50) * 1e3,
+        "ttft_p99_ms": pct(ttfts, 99) * 1e3,
+        "itl_mean_s": float(np.mean(itls)) if itls else 0.0,
+        "itl_p50_ms": pct(itls, 50) * 1e3,
+        "itl_p99_ms": pct(itls, 99) * 1e3,
+    }
+
+
+def check_latency(point: dict, baseline: Optional[dict] = None) -> List[str]:
+    """Open-loop acceptance: everything finished, latency was recorded, and
+    the committed SLO ceilings (when given) held."""
+    errs = []
+    if point["completed"] != point["requests"]:
+        errs.append(f"only {point['completed']}/{point['requests']} "
+                    "open-loop requests completed")
+    if not point["ttft_p50_ms"] > 0:
+        errs.append("no TTFT samples recorded")
+    if point["requests"] > 1 and not point["itl_p50_ms"] > 0:
+        errs.append("no inter-token latency samples recorded")
+    if baseline:
+        for key in ("ttft_p99_ms", "itl_p99_ms"):
+            ceil = baseline.get(key)
+            if ceil is not None and point[key] > ceil:
+                errs.append(f"SLO violation: {key} {point[key]:.1f}ms "
+                            f"above ceiling {ceil:.1f}ms")
+    return errs
+
+
+def latency_main(quick: bool = False):
+    """benchmarks.run entry for the open-loop lane: one row per percentile,
+    gated on the committed SLO ceilings."""
+    import json as _json
+    import os
+    point = run_open_loop(quick=quick)
+    base_path = os.path.join(os.path.dirname(__file__), "baselines",
+                             "latency.json")
+    baseline = None
+    if os.path.exists(base_path):
+        with open(base_path) as f:
+            baseline = _json.load(f)
+    errs = check_latency(point, baseline)
+    if errs:
+        raise RuntimeError("; ".join(errs))
+    yield ("serve_ttft_p50", f"{point['ttft_p50_ms'] * 1e3:.0f}",
+           f"open-loop @ {point['qps']:g} qps; p99 "
+           f"{point['ttft_p99_ms']:.1f}ms")
+    yield ("serve_ttft_p99", f"{point['ttft_p99_ms'] * 1e3:.0f}",
+           f"time-to-first-token p99 over {point['requests']} reqs")
+    yield ("serve_itl_p50", f"{point['itl_p50_ms'] * 1e3:.0f}",
+           f"inter-token latency; p99 {point['itl_p99_ms']:.1f}ms")
+    yield ("serve_open_loop_tput", f"{1e6 / max(point['tokens_per_sec'], 1e-9):.1f}",
+           f"{point['tokens_per_sec']:.1f} delivered tok/s under open loop")
+
+
 def main(quick: bool = False):
     """benchmarks.run entry: one row per headline serving metric."""
     m, desc = run_workload(quick)
@@ -229,12 +427,50 @@ def cli() -> int:
                     help="shard the KV pool over this many devices (forces "
                          "a CPU fake pod when needed); the run is verified "
                          "token-identical against an unsharded engine")
+    ap.add_argument("--open-loop", action="store_true",
+                    help="measure latency under Poisson load through the "
+                         "HTTP gateway instead of closed-loop throughput; "
+                         "writes BENCH_latency.json and gates on the SLO "
+                         "ceilings in --baseline (see "
+                         "benchmarks/baselines/latency.json)")
+    ap.add_argument("--qps", type=float, default=OPEN_LOOP_QPS,
+                    help="open-loop Poisson arrival rate")
+    ap.add_argument("--requests", type=int, default=0,
+                    help="open-loop request count override (0 = workload "
+                         "default)")
     args = ap.parse_args()
 
     # must land before the jax backend initializes (the first jax import is
     # inside _build_engine, so this is early enough)
     from repro.launch.mesh import ensure_fake_pod
     ensure_fake_pod(args.mesh)
+
+    if args.open_loop:
+        if args.mesh:
+            print("bench_serve: FAIL: --open-loop does not take --mesh "
+                  "(the latency lane is single-device)", file=sys.stderr)
+            return 2
+        out = args.out if args.out != "BENCH_serve.json" \
+            else "BENCH_latency.json"
+        point = run_open_loop(quick=args.quick, qps=args.qps,
+                              n_requests=args.requests)
+        with open(out, "w") as f:
+            json.dump(point, f, indent=2)
+        print(f"open-loop @ {point['qps']:g} qps over {point['requests']} "
+              f"requests ({point['completed']} completed): "
+              f"TTFT p50/p99 {point['ttft_p50_ms']:.1f}/"
+              f"{point['ttft_p99_ms']:.1f}ms, ITL p50/p99 "
+              f"{point['itl_p50_ms']:.1f}/{point['itl_p99_ms']:.1f}ms, "
+              f"{point['tokens_per_sec']:.1f} delivered tok/s")
+        print(f"latency trajectory point written to {out}")
+        baseline = None
+        if args.baseline:
+            with open(args.baseline) as f:
+                baseline = json.load(f)
+        errs = check_latency(point, baseline)
+        for e in errs:
+            print(f"bench_serve: FAIL: {e}", file=sys.stderr)
+        return 1 if errs else 0
 
     m, desc = run_workload(quick=args.quick, mesh_devices=args.mesh)
     point = {

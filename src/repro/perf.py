@@ -52,6 +52,14 @@ Knobs (defaults = the paper-faithful baseline):
       N    — shard over the first N devices.  N must divide the arch's
              n_kv_heads and n_heads; the engine raises otherwise.  An
              explicit ``ServeEngine(mesh=...)`` argument overrides the knob.
+  REPRO_GATEWAY_IDLE_MS  int (2)
+      how long the gateway's background stepper thread sleeps between polls
+      when the engine has no work — lower = lower TTFT on an idle gateway,
+      higher = fewer wasted wakeups (repro.serve.async_engine)
+  REPRO_GATEWAY_MAX_NEW  int (128)
+      per-request cap the HTTP gateway clamps ``max_tokens`` to before
+      admission (requests never see the engine's rejection path for
+      oversized asks — they get a truncated generation instead)
 """
 from __future__ import annotations
 
@@ -72,6 +80,8 @@ class PerfConfig:
     paged_attn: str = "auto"
     kv_swap: bool = True
     serve_mesh: str = "0"
+    gateway_idle_ms: int = 2
+    gateway_max_new: int = 128
 
 
 def perf() -> PerfConfig:
@@ -87,6 +97,8 @@ def perf() -> PerfConfig:
         paged_attn=os.environ.get("REPRO_PAGED_ATTN", "auto"),
         kv_swap=os.environ.get("REPRO_KV_SWAP", "1") == "1",
         serve_mesh=os.environ.get("REPRO_SERVE_MESH", "0"),
+        gateway_idle_ms=int(os.environ.get("REPRO_GATEWAY_IDLE_MS", "2")),
+        gateway_max_new=int(os.environ.get("REPRO_GATEWAY_MAX_NEW", "128")),
     )
 
 

@@ -58,7 +58,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -109,11 +109,33 @@ class Request:
     out: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
     rejected: bool = False
+    cancelled: bool = False
     reject_reason: str = ""
     # timing (monotonic seconds; filled in by the engine)
     t_submit: float = 0.0
     t_first: float = 0.0
     t_done: float = 0.0
+    # streaming hooks (the async front-end wires these; both run inside the
+    # engine's step loop, so they must be cheap and must not raise).
+    # on_token(token_id, index): fired the moment a token is sampled.  Under
+    # legacy drop-and-restart preemption (REPRO_KV_SWAP=0) a request replays
+    # its deterministic sample stream, so indices can repeat — consumers
+    # dedupe on ``index``, not on call count.
+    on_token: Optional[Callable[[int, int], None]] = None
+    # on_finish(request): fired exactly once, after done/rejected/cancelled
+    # is set and the request's KV blocks are back in the pool.
+    on_finish: Optional[Callable[["Request"], None]] = None
+
+    @property
+    def finish_reason(self) -> str:
+        """OpenAI-style terminal state ("" while still running)."""
+        if self.cancelled:
+            return "cancelled"
+        if self.rejected:
+            return "rejected"
+        if self.done:
+            return "length"
+        return ""
 
 
 @dataclasses.dataclass
@@ -263,6 +285,7 @@ class ServeEngine:
         self.queue: List[Request] = []
         self.finished: List[Request] = []
         self.rejected: List[Request] = []
+        self.cancelled: List[Request] = []
         self._parked: Dict[int, _Parked] = {}
         self.steps = 0
         self._admit_seq = 0
@@ -355,6 +378,8 @@ class ServeEngine:
         req.done = True
         req.reject_reason = reason
         self.rejected.append(req)
+        if req.on_finish is not None:
+            req.on_finish(req)
 
     def _admission_need(self, req: Request, parked: Optional[_Parked]) -> int:
         """Blocks to reserve at admission.
@@ -572,6 +597,47 @@ class ServeEngine:
         a.reserved_left = 0
         self.finished.append(a.req)
         self.slots[self.slots.index(a)] = None
+        if a.req.on_finish is not None:
+            a.req.on_finish(a.req)
+
+    # -- cancellation ------------------------------------------------------
+    def _drop_parked(self, rid: int) -> None:
+        parked = self._parked.pop(rid, None)
+        if parked is not None:
+            for b in parked.blocks:
+                self.store.decref(b)
+
+    def _finish_cancel(self, req: Request) -> None:
+        req.cancelled = True
+        req.done = True
+        req.t_done = time.monotonic()
+        self.cancelled.append(req)
+        if req.on_finish is not None:
+            req.on_finish(req)
+
+    def cancel(self, rid: int) -> bool:
+        """Abort request ``rid`` wherever it currently lives — queued,
+        occupying a batch slot, or parked on the host tier after preemption —
+        and return every KV block it held to the pool the same call (a
+        mid-stream client disconnect must free memory immediately, not when
+        the generation would have finished).  Tokens already sampled stay in
+        ``req.out``.  Returns False if the id is unknown or already done."""
+        for i, req in enumerate(self.queue):
+            if req.rid == rid:
+                self.queue.pop(i)
+                # a preempted request sits in the queue AND holds parked KV
+                self._drop_parked(rid)
+                self._finish_cancel(req)
+                return True
+        for a in self.slots:
+            if a is not None and a.req.rid == rid:
+                a.table.release_to(self.store)
+                self.pool.release(a.reserved_left)
+                a.reserved_left = 0
+                self.slots[self.slots.index(a)] = None
+                self._finish_cancel(a.req)
+                return True
+        return False
 
     # -- sampling ----------------------------------------------------------
     @staticmethod
@@ -662,6 +728,8 @@ class ServeEngine:
             first = self._sample(row, req.sampling, 0)
             req.out.append(first)
             req.t_first = time.monotonic()
+            if req.on_token is not None:
+                req.on_token(first, 0)
             if req.max_new <= 1:
                 self._retire(a)
         return True
@@ -704,6 +772,8 @@ class ServeEngine:
             req.out.append(nxt)
             a.pos += 1
             self._decode_tokens += 1
+            if req.on_token is not None:
+                req.on_token(nxt, len(req.out) - 1)
             if len(req.out) >= req.max_new or a.pos >= self.max_len:
                 self._retire(a, now=now)
         return True
@@ -756,6 +826,7 @@ class ServeEngine:
         self.store.reset_counters()
         self.finished = []
         self.rejected = []
+        self.cancelled = []
         self.pool.peak_used = self.pool.num_used
 
     # -- metrics -----------------------------------------------------------

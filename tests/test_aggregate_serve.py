@@ -159,3 +159,68 @@ def test_ratchet_only_moves_up(tmp_path):
     new = json.loads(base.read_text())
     assert new["tokens_per_sec"] == 200.0
     assert "ratcheted" in new["_comment"]
+
+
+def _latency_point(path, t, **kw):
+    p = {"bench": "serve_latency", "open_loop": True, "unix_time": t,
+         "qps": kw.get("qps", 8.0), "requests": 16, "completed": 16,
+         "tokens_per_sec": kw.get("tps", 75.0),
+         "ttft_p50_ms": kw.get("ttft50", 4.5),
+         "ttft_p99_ms": kw.get("ttft99", 12.0),
+         "itl_p50_ms": kw.get("itl50", 1.4),
+         "itl_p99_ms": kw.get("itl99", 3.6)}
+    path.write_text(json.dumps(p))
+    return str(path)
+
+
+def test_latency_points_load_and_render_percentile_cells(tmp_path):
+    """BENCH_latency.json points mix into the table with their own mode
+    label and p50/p99 cells; closed-loop history predating the percentile
+    fields falls back to ~mean / blank instead of crashing."""
+    old = _point(tmp_path / "old.json", 1.0, 500.0)        # pre-latency point
+    lat = _latency_point(tmp_path / "lat.json", 2.0)
+    pts = load_points([old, lat])
+    table = trend_table(pts)
+    assert "open @8qps" in table and "closed" in table
+    assert "4.5/12.0" in table and "1.4/3.6" in table      # p50/p99 cells
+    assert "~40.0" in table                                # mean fallback ms
+    bare = tmp_path / "bare.json"                          # no latency at all
+    bare.write_text(json.dumps({"bench": "serve", "unix_time": 3.0,
+                                "tokens_per_sec": 100.0}))
+    table = trend_table(load_points([str(bare)]))
+    assert "| – | – |" in table                            # blank lat cells
+
+
+def test_open_loop_points_excluded_from_ratchet(tmp_path):
+    """Open-loop delivery rate is paced by the Poisson schedule, not engine
+    capacity: a slow open-loop run must not drag the throughput floor."""
+    from benchmarks.aggregate_serve import point_open_loop, single_device_points
+    singles = [_point(tmp_path / f"s{i}.json", float(i), 500.0)
+               for i in range(3)]
+    lat = _latency_point(tmp_path / "lat.json", 10.0, tps=75.0)
+    pts = load_points(singles + [lat])
+    assert [point_open_loop(p) for p in pts] == [False, False, False, True]
+    series = single_device_points(pts)
+    assert len(series) == 3
+    assert suggest_floor(series) == pytest.approx(0.8 * 500.0)
+
+
+def test_cli_with_only_open_loop_points_leaves_floor_untouched(tmp_path,
+                                                               capsys):
+    from benchmarks.aggregate_serve import cli
+    import sys
+    base = tmp_path / "serve.json"
+    base.write_text(json.dumps({"bench": "serve", "tokens_per_sec": 140.0,
+                                "_comment": "floor"}))
+    pts = [_latency_point(tmp_path / f"l{i}.json", float(i), tps=9000.0)
+           for i in range(4)]
+    argv, sys.argv = sys.argv, ["aggregate_serve", *pts,
+                                "--baseline", str(base), "--ratchet"]
+    try:
+        assert cli() == 0
+    finally:
+        sys.argv = argv
+    assert json.loads(base.read_text())["tokens_per_sec"] == 140.0
+    out = capsys.readouterr().out
+    assert "excluded from the throughput ratchet" in out
+    assert "closed-loop single-device only" in out

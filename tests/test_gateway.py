@@ -1,0 +1,330 @@
+"""Async gateway over the serve engine: stream/oracle identity, mid-stream
+cancellation (KV blocks freed), concurrent interleaving, HTTP/SSE wire
+checks, stop sequences, and the aggregator's latency columns."""
+import asyncio
+import json
+
+import jax
+import pytest
+
+from repro.configs.base import get_config, reduced_config
+from repro.models import build_model
+from repro.serve.async_engine import AsyncServeEngine
+from repro.serve.engine import Request, SamplingParams, ServeEngine
+from repro.serve.gateway import (ByteTokenizer, Gateway, GatewayModel,
+                                 Router, StopDetector)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced_config(get_config("qwen3-0.6b"))
+    fns = build_model(cfg)
+    params = fns.init(jax.random.PRNGKey(0))
+    return cfg, fns, params
+
+
+def _engine(cfg, params, **kw):
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("max_len", 32)
+    kw.setdefault("block_size", 4)
+    kw.setdefault("plan_kernels", False)
+    return ServeEngine(cfg, params, **kw)
+
+
+def _oracle(cfg, params, specs):
+    """run_until_done on a fresh engine: the batch reference output."""
+    eng = _engine(cfg, params)
+    reqs = [Request(rid=i, prompt=list(p), max_new=n, sampling=sp)
+            for i, (p, n, sp) in enumerate(specs)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_done(max_steps=500)
+    assert all(r.done for r in reqs)
+    return [list(r.out) for r in reqs]
+
+
+# ---------------------------------------------------------------------------
+# async engine
+# ---------------------------------------------------------------------------
+
+def test_stream_identical_to_batch_oracle(setup):
+    """Tokens streamed through the async engine are exactly what
+    ``run_until_done`` produces for the same requests — greedy and seeded
+    sampling alike (stateless (seed, index) sampling makes this hold
+    regardless of batch composition or arrival order)."""
+    cfg, fns, params = setup
+    specs = [
+        ([3, 5, 7, 11], 6, SamplingParams()),
+        ([4, 6, 8], 5, SamplingParams(temperature=0.8, top_k=40, seed=7)),
+        ([9, 2, 12, 13, 14], 4, SamplingParams(temperature=1.1, seed=3)),
+    ]
+    want = _oracle(cfg, params, specs)
+
+    async def go():
+        aeng = AsyncServeEngine(_engine(cfg, params))
+        await aeng.start()
+        try:
+            streams = [aeng.submit(p, max_new=n, sampling=sp)
+                       for p, n, sp in specs]
+            outs = await asyncio.gather(*[s.drain() for s in streams])
+            reasons = [s.finish_reason for s in streams]
+        finally:
+            await aeng.stop()
+        return outs, reasons
+
+    outs, reasons = asyncio.run(go())
+    assert outs == want
+    assert reasons == ["length"] * len(specs)
+
+
+def test_cancel_mid_stream_frees_kv_blocks(setup):
+    """Cancelling after the first token ends the stream with
+    ``finish_reason="cancelled"`` and returns every KV block to the pool
+    (prefix cache disabled so the accounting is exact)."""
+    cfg, fns, params = setup
+
+    async def go():
+        eng = _engine(cfg, params, prefix_cache_blocks=0)
+        aeng = AsyncServeEngine(eng)
+        await aeng.start()
+        try:
+            stream = aeng.submit([3, 5, 7, 11], max_new=24)
+            got = [await stream.__anext__()]   # wait for generation to start
+            aeng.cancel(stream.rid)
+            got += await stream.drain()
+            # the cancel lands inside the stepper; give it a beat to retire
+            for _ in range(200):
+                if eng.pool.num_used == 0 and \
+                        all(s is None for s in eng.slots):
+                    break
+                await asyncio.sleep(0.005)
+            return (stream.finish_reason, len(got), eng.pool.num_used,
+                    len(eng.queue))
+        finally:
+            await aeng.stop()
+
+    reason, n_got, used, queued = asyncio.run(go())
+    assert reason == "cancelled"
+    assert 1 <= n_got < 24
+    assert used == 0
+    assert queued == 0
+
+
+def test_cancel_queued_request(setup):
+    """A request cancelled while still waiting in the admission queue never
+    touches the pool and finishes as cancelled."""
+    cfg, fns, params = setup
+    eng = _engine(cfg, params, max_batch=1, prefix_cache_blocks=0)
+    a = Request(rid=0, prompt=[3, 5, 7], max_new=8)
+    b = Request(rid=1, prompt=[4, 6, 8], max_new=4)
+    eng.submit(a)
+    eng.submit(b)
+    eng.step()                      # admits a (max_batch=1); b stays queued
+    assert eng.cancel(1)
+    assert b.cancelled and b.done and b.finish_reason == "cancelled"
+    assert not eng.cancel(99)       # unknown rid is a no-op
+    eng.run_until_done(max_steps=200)
+    assert a.done and len(a.out) == 8
+    assert eng.pool.num_used == 0
+
+
+def test_concurrent_streams_interleave(setup):
+    """Five submissions through max_batch=2 all finish, and their token
+    events interleave (continuous batching, not one-request-at-a-time)."""
+    cfg, fns, params = setup
+    n_reqs, max_new = 5, 6
+
+    async def go():
+        aeng = AsyncServeEngine(_engine(cfg, params))
+        await aeng.start()
+        order = []
+
+        async def consume(i, stream):
+            async for _tok in stream:
+                order.append(i)
+
+        try:
+            streams = [aeng.submit([3 + i, 5, 7], max_new=max_new)
+                       for i in range(n_reqs)]
+            await asyncio.gather(*[consume(i, s)
+                                   for i, s in enumerate(streams)])
+        finally:
+            await aeng.stop()
+        return order
+
+    order = asyncio.run(go())
+    assert len(order) == n_reqs * max_new
+    switches = sum(1 for a, b in zip(order, order[1:]) if a != b)
+    # perfectly serial service would switch exactly n_reqs - 1 times
+    assert switches > n_reqs, f"no interleaving: {order}"
+
+
+# ---------------------------------------------------------------------------
+# HTTP layer
+# ---------------------------------------------------------------------------
+
+def _http_model(cfg, params, **kw):
+    eng = _engine(cfg, params, **kw)
+    return GatewayModel(model_id="m", async_engine=AsyncServeEngine(eng),
+                        tokenizer=ByteTokenizer(cfg.vocab))
+
+
+async def _raw(host, port, method, path, payload=None):
+    """One HTTP exchange on a raw socket; returns (status, headers, body)."""
+    body = b"" if payload is None else json.dumps(payload).encode()
+    reader, writer = await asyncio.open_connection(host, port)
+    try:
+        head = f"{method} {path} HTTP/1.1\r\nHost: t\r\n"
+        if body:
+            head += ("Content-Type: application/json\r\n"
+                     f"Content-Length: {len(body)}\r\n")
+        writer.write(head.encode() + b"\r\n" + body)
+        await writer.drain()
+        status = int((await reader.readline()).split()[1])
+        headers = {}
+        while True:
+            line = await reader.readline()
+            if line in (b"\r\n", b"\n", b""):
+                break
+            k, _, v = line.decode().partition(":")
+            headers[k.strip().lower()] = v.strip()
+        data = await reader.read()
+        return status, headers, data
+    finally:
+        writer.close()
+        try:
+            await writer.wait_closed()
+        except (ConnectionError, RuntimeError):
+            pass
+
+
+def _sse_chunks(data: bytes):
+    """Parse an SSE body strictly: only data-lines, exactly one terminal
+    [DONE]; returns the decoded JSON chunks."""
+    events = [ln for ln in data.split(b"\n") if ln.strip()]
+    assert all(e.startswith(b"data: ") for e in events), events
+    payloads = [e[len(b"data: "):] for e in events]
+    assert payloads[-1] == b"[DONE]" and payloads.count(b"[DONE]") == 1
+    return [json.loads(p) for p in payloads[:-1]]
+
+
+def test_http_stream_matches_oracle_and_sse_shape(setup):
+    cfg, fns, params = setup
+    prompt, max_new = [3, 5, 7, 11], 6
+    sp = SamplingParams(temperature=0.7, top_k=20, seed=5)
+    [want] = _oracle(cfg, params, [(prompt, max_new, sp)])
+
+    async def go():
+        async with Gateway(Router([_http_model(cfg, params)]), port=0) as gw:
+            status, headers, data = await _raw(
+                gw.host, gw.port, "POST", "/v1/completions",
+                {"model": "m", "prompt": prompt, "max_tokens": max_new,
+                 "stream": True, "temperature": sp.temperature,
+                 "top_k": sp.top_k, "seed": sp.seed})
+            st2, _, models = await _raw(gw.host, gw.port, "GET", "/v1/models")
+            st404, _, _ = await _raw(gw.host, gw.port, "GET", "/nope")
+            return status, headers, data, st2, models, st404
+
+    status, headers, data, st2, models, st404 = asyncio.run(go())
+    assert status == 200
+    assert headers["content-type"].startswith("text/event-stream")
+    assert "x-request-id" in headers
+    chunks = _sse_chunks(data)
+    assert all(c["object"] == "text_completion" for c in chunks)
+    ids = [t for c in chunks for t in c["choices"][0].get("token_ids") or []]
+    assert ids == want
+    final = chunks[-1]
+    assert final["choices"][0]["finish_reason"] == "length"
+    assert final["usage"]["completion_tokens"] == max_new
+    assert st2 == 200
+    cards = json.loads(models)
+    assert [m["id"] for m in cards["data"]] == ["m"]
+    assert st404 == 404
+
+
+def test_http_stop_sequence_truncates(setup):
+    """A stop string taken from the unconstrained output truncates the
+    stream before it and flips finish_reason to 'stop'."""
+    cfg, fns, params = setup
+    prompt, max_new = [3, 5, 7, 11], 8
+
+    async def go():
+        async with Gateway(Router([_http_model(cfg, params)]), port=0) as gw:
+            async def completion(extra):
+                _, _, data = await _raw(
+                    gw.host, gw.port, "POST", "/v1/completions",
+                    {"model": "m", "prompt": prompt, "max_tokens": max_new,
+                     **extra})
+                return json.loads(data)
+            free = await completion({})
+            text = free["choices"][0]["text"]
+            stop = text[2:4]
+            stopped = await completion({"stop": [stop]})
+            return text, stop, stopped
+
+    text, stop, stopped = asyncio.run(go())
+    choice = stopped["choices"][0]
+    assert choice["finish_reason"] == "stop"
+    assert stop not in choice["text"]
+    assert choice["text"] == text[:text.find(stop)]
+
+
+def test_http_chat_stream_has_role_delta(setup):
+    cfg, fns, params = setup
+
+    async def go():
+        async with Gateway(Router([_http_model(cfg, params)]), port=0) as gw:
+            _, _, data = await _raw(
+                gw.host, gw.port, "POST", "/v1/chat/completions",
+                {"model": "m", "stream": True, "max_tokens": 4,
+                 "messages": [{"role": "user", "content": "hi"}]})
+            return _sse_chunks(data)
+
+    chunks = asyncio.run(go())
+    assert chunks[0]["object"] == "chat.completion.chunk"
+    assert chunks[0]["choices"][0]["delta"]["role"] == "assistant"
+    assert chunks[-1]["choices"][0]["finish_reason"] == "length"
+
+
+def test_http_bad_requests(setup):
+    cfg, fns, params = setup
+
+    async def go():
+        async with Gateway(Router([_http_model(cfg, params)]), port=0) as gw:
+            bad_model = await _raw(gw.host, gw.port, "POST",
+                                   "/v1/completions",
+                                   {"model": "ghost", "prompt": "hi"})
+            bad_prompt = await _raw(gw.host, gw.port, "POST",
+                                    "/v1/completions",
+                                    {"model": "m", "prompt": [99999]})
+            return bad_model, bad_prompt
+
+    (st1, _, b1), (st2, _, b2) = asyncio.run(go())
+    assert st1 == 404 and b"ghost" in b1
+    assert st2 == 400 and b"vocab" in b2
+
+
+# ---------------------------------------------------------------------------
+# pure helpers
+# ---------------------------------------------------------------------------
+
+def test_stop_detector_split_across_tokens():
+    d = StopDetector(["END"])
+    out = d.feed("aE") + d.feed("N") + d.feed("Db")
+    assert out == "a"
+    assert d.stopped
+
+
+def test_stop_detector_no_match_flushes_all():
+    d = StopDetector(["xyz"])
+    out = d.feed("ab") + d.feed("cd") + d.flush()
+    assert out == "abcd"
+    assert not d.stopped
+
+
+def test_byte_tokenizer_roundtrip():
+    tok = ByteTokenizer(256 + 1)
+    assert tok.decode(tok.encode("héllo")) == "héllo"
+    small = ByteTokenizer(16)
+    ids = small.encode("hello")
+    assert all(0 < t < 16 for t in ids)      # clamped, never the pad id

@@ -1,0 +1,196 @@
+"""Live-gateway smoke client: strict SSE framing + batch-oracle identity.
+
+    # terminal 1
+    PYTHONPATH=src python -m repro.launch.gateway --smoke --no-plan-kernels \
+        --max-batch 2 --max-len 64 --block-size 8 --port 8011
+    # terminal 2
+    JAX_PLATFORMS=cpu PYTHONPATH=src python -m tools.gateway_smoke \
+        --url http://127.0.0.1:8011 --max-batch 2 --max-len 64 --block-size 8
+
+Drives a *running* gateway over real HTTP (stdlib only — http.client for
+JSON endpoints, a raw socket for the SSE stream so framing is checked on
+the wire, not through a parser that would paper over malformed events) and
+asserts:
+
+  * ``/health`` and ``/v1/models`` answer with well-formed JSON;
+  * a streamed ``/v1/completions`` emits only ``data: <json>`` events,
+    each a valid ``text_completion`` chunk, terminated by exactly one
+    ``data: [DONE]``, with ``finish_reason`` and a usage block on the
+    final chunk;
+  * the streamed ``token_ids`` are **identical** to what a fresh
+    ``ServeEngine.run_until_done()`` produces for the same request — the
+    engine's stateless (seed, index)-keyed sampling makes the stream
+    reproducible no matter what the live engine served before;
+  * a streamed ``/v1/chat/completions`` opens with a role delta and ends
+    with ``[DONE]``.
+
+The gateway-smoke CI job runs this between booting the gateway and
+SIGTERM-ing it.  Exit status is the number of failed checks (0 = ok).
+"""
+from __future__ import annotations
+
+import argparse
+import http.client
+import json
+import socket
+import sys
+from typing import List, Tuple
+from urllib.parse import urlparse
+
+# the request both sides generate: mixed sampling, long enough to cross a
+# block boundary at the smoke block_size
+PROMPT = [3, 5, 7, 11, 13, 17]
+MAX_TOKENS = 12
+SAMPLING = {"temperature": 0.7, "top_k": 20, "seed": 5}
+
+
+def _get_json(host: str, port: int, path: str) -> dict:
+    conn = http.client.HTTPConnection(host, port, timeout=30)
+    try:
+        conn.request("GET", path)
+        resp = conn.getresponse()
+        body = resp.read()
+        assert resp.status == 200, f"GET {path} -> {resp.status}: {body!r}"
+        return json.loads(body)
+    finally:
+        conn.close()
+
+
+def _stream(host: str, port: int, path: str,
+            payload: dict) -> Tuple[List[bytes], dict]:
+    """POST a streaming request; return (raw data-lines, response headers).
+    Raw socket so the SSE bytes are inspected exactly as sent."""
+    body = json.dumps(payload).encode()
+    with socket.create_connection((host, port), timeout=60) as sk:
+        sk.sendall(f"POST {path} HTTP/1.1\r\nHost: smoke\r\n"
+                   "Content-Type: application/json\r\n"
+                   f"Content-Length: {len(body)}\r\n\r\n".encode() + body)
+        f = sk.makefile("rb")
+        status = f.readline()
+        assert b" 200 " in status, f"POST {path} -> {status!r}"
+        headers = {}
+        while True:
+            line = f.readline()
+            if line in (b"\r\n", b"\n", b""):
+                break
+            k, _, v = line.decode().partition(":")
+            headers[k.strip().lower()] = v.strip()
+        assert headers.get("content-type", "").startswith(
+            "text/event-stream"), f"not SSE: {headers}"
+        lines = []
+        while True:
+            line = f.readline()
+            if not line:
+                break
+            line = line.rstrip(b"\r\n")
+            if not line:
+                continue
+            assert line.startswith(b"data: "), f"malformed SSE line {line!r}"
+            lines.append(line[len(b"data: "):])
+            if lines[-1] == b"[DONE]":
+                break
+        return lines, headers
+
+
+def check_completions(host: str, port: int, model_id: str,
+                      oracle: List[int]) -> List[str]:
+    errs = []
+    lines, headers = _stream(host, port, "/v1/completions", {
+        "model": model_id, "prompt": PROMPT, "max_tokens": MAX_TOKENS,
+        "stream": True, **SAMPLING})
+    if "x-request-id" not in headers:
+        errs.append("stream response missing x-request-id header")
+    if lines.count(b"[DONE]") != 1 or lines[-1] != b"[DONE]":
+        errs.append(f"stream not terminated by exactly one [DONE]: {lines}")
+        return errs
+    token_ids, finish, usage = [], "", None
+    for raw in lines[:-1]:
+        chunk = json.loads(raw)
+        if chunk.get("object") != "text_completion":
+            errs.append(f"bad chunk object: {chunk.get('object')!r}")
+        choice = chunk["choices"][0]
+        token_ids.extend(choice.get("token_ids") or [])
+        if choice.get("finish_reason"):
+            finish = choice["finish_reason"]
+            usage = chunk.get("usage")
+    if finish != "length":
+        errs.append(f"finish_reason {finish!r}, want 'length'")
+    if not usage or usage.get("completion_tokens") != len(oracle):
+        errs.append(f"bad usage block on final chunk: {usage}")
+    if token_ids != oracle:
+        errs.append(f"streamed tokens {token_ids} != batch oracle {oracle}")
+    else:
+        print(f"stream == oracle over {len(oracle)} tokens: {token_ids}")
+    return errs
+
+
+def check_chat(host: str, port: int, model_id: str) -> List[str]:
+    errs = []
+    lines, _ = _stream(host, port, "/v1/chat/completions", {
+        "model": model_id, "stream": True, "max_tokens": 4,
+        "messages": [{"role": "user", "content": "hi"}]})
+    if lines[-1] != b"[DONE]":
+        errs.append("chat stream not [DONE]-terminated")
+        return errs
+    first = json.loads(lines[0])
+    if first.get("object") != "chat.completion.chunk":
+        errs.append(f"bad chat chunk object: {first.get('object')!r}")
+    if first["choices"][0].get("delta", {}).get("role") != "assistant":
+        errs.append(f"first chat delta carries no role: {first}")
+    return errs
+
+
+def build_oracle(arch: str, max_batch: int, max_len: int,
+                 block_size: int) -> List[int]:
+    """What ``run_until_done`` emits for the smoke request — a fresh engine
+    built exactly the way ``repro.launch.gateway --smoke`` builds its own."""
+    import jax
+
+    from repro.configs.base import get_config, reduced_config
+    from repro.models import build_model
+    from repro.serve.engine import Request, SamplingParams, ServeEngine
+
+    cfg = reduced_config(get_config(arch))
+    fns = build_model(cfg)
+    params = fns.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, max_batch=max_batch, max_len=max_len,
+                      block_size=block_size, plan_kernels=False)
+    req = Request(rid=0, prompt=list(PROMPT), max_new=MAX_TOKENS,
+                  sampling=SamplingParams(**SAMPLING))
+    eng.submit(req)
+    eng.run_until_done()
+    return list(req.out)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--url", default="http://127.0.0.1:8011")
+    ap.add_argument("--arch", default="qwen3-0.6b",
+                    help="arch the gateway serves (reduced config)")
+    ap.add_argument("--max-batch", type=int, default=2)
+    ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--block-size", type=int, default=8)
+    args = ap.parse_args()
+    u = urlparse(args.url)
+    host, port = u.hostname, u.port or 80
+
+    health = _get_json(host, port, "/health")
+    print(f"health: {health}")
+    models = _get_json(host, port, "/v1/models")
+    assert models["object"] == "list" and models["data"], models
+    model_id = models["data"][0]["id"]
+    print(f"models: {[m['id'] for m in models['data']]}")
+
+    oracle = build_oracle(args.arch, args.max_batch, args.max_len,
+                          args.block_size)
+    errs = check_completions(host, port, model_id, oracle)
+    errs += check_chat(host, port, model_id)
+    for e in errs:
+        print(f"gateway_smoke: FAIL: {e}", file=sys.stderr)
+    if not errs:
+        print("gateway_smoke: all checks passed")
+    return len(errs)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
