@@ -17,12 +17,15 @@ committed floor — the floor only ever moves up, so a noisy slow run can
 never loosen the gate.
 
 Points carry a ``mesh_devices`` label (1 = single device; absent in
-pre-mesh history, treated as 1).  The trend table shows every point with
-its mesh width, but the **ratchet series is single-device only**: sharded
-runs measure a different engine configuration (GSPMD partitioning, widened
-kv heads on the smoke arch), so mixing them into one trailing median would
-let a fast sharded run tighten — or a slow one loosen the pressure on —
-the single-device floor.
+pre-mesh history, treated as 1) and, since the tensor-parallel PR, a
+``tp_devices`` label: ``kv xN`` points shard only the KV pool, ``tp xN``
+points also shard the weights (``bench_serve --tp N`` ->
+``BENCH_serve_tp.json``).  The trend table distinguishes the two, but the
+**ratchet series is single-device only**: sharded runs of either flavour
+measure a different engine configuration (GSPMD partitioning, widened kv
+heads on the smoke arch, weight gathers), so mixing them into one trailing
+median would let a fast sharded run tighten — or a slow one loosen the
+pressure on — the single-device floor.
 
 ``BENCH_latency.json`` points from the open-loop gateway lane
 (``bench_serve --open-loop``) mix into the same table: they carry
@@ -94,12 +97,21 @@ def point_open_loop(p: Dict) -> bool:
     return bool(p.get("open_loop") or p.get("bench") == "serve_latency")
 
 
+def point_tp(p: Dict) -> int:
+    """A point's tensor-parallel width (devices the *weights* were sharded
+    over; 1 = replicated).  Pre-TP history has no label."""
+    return int(p.get("tp_devices")
+               or p.get("workload", {}).get("tp_devices") or 1)
+
+
 def point_sharded(p: Dict) -> bool:
     """Whether the point ran the shard_map engine at all — a 1-device mesh
-    still measures the sharded configuration (bench_serve sets the flag)."""
+    still measures the sharded configuration (bench_serve sets the flag).
+    TP points are sharded by construction (weights need the mesh)."""
     return bool(p.get("sharded")
                 or p.get("workload", {}).get("sharded")
-                or point_mesh(p) > 1)
+                or point_mesh(p) > 1
+                or point_tp(p) > 1)
 
 
 def single_device_points(points: List[Dict]) -> List[Dict]:
@@ -134,7 +146,12 @@ def trend_table(points: List[Dict]) -> str:
     if not points:
         return "\n".join(lines + [EMPTY_ROW])
     for i, p in enumerate(points):
-        label = f"sharded x{point_mesh(p)}" if point_sharded(p) else "single"
+        if point_tp(p) > 1:
+            label = f"tp x{point_tp(p)}"        # weights + KV pool sharded
+        elif point_sharded(p):
+            label = f"kv x{point_mesh(p)}"      # KV pool only
+        else:
+            label = "single"
         mode = f"open @{p.get('qps', 0):g}qps" if point_open_loop(p) \
             else "closed"
         pool = f"{p['peak_pool_utilization']:.3f}" \

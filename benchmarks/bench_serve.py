@@ -22,6 +22,17 @@ the same workload before the point is written.  Sharded points carry
 ``mesh_devices`` and are a separate trajectory series — the single-device
 baseline gate does not apply to them (see benchmarks.aggregate_serve).
 
+``--tp N`` additionally shards the **weights** over the same mesh using the
+partition rules Auto Distribution emits (``repro.distributed.param_sharding``):
+the point records per-device vs replicated param bytes and the run is gated on
+per-device bytes landing at ~1/N of replicated (within a slop for the norms
+and router tables that stay replicated).  Decode stays token-identical to the
+single-device oracle because the default mode gathers weights at their use
+site; the ``REPRO_TP_REDUCE_SCATTER=1`` compute mode is fp32-close rather
+than bitwise and its closeness is asserted by tests/test_param_sharding.py,
+not by this bench.  TP points default to ``BENCH_serve_tp.json`` and are a
+separate trajectory series like ``--mesh`` points.
+
 ``--open-loop`` measures **latency under load** instead of closed-loop
 throughput: an in-process OpenAI gateway (``repro.serve.gateway``) is booted
 on an ephemeral port and a Poisson client fires the same workload at it at
@@ -78,7 +89,8 @@ def _smoke_cfg(mesh_devices: int = 0):
     return cfg
 
 
-def _build_engine(mesh_devices: int = 0, params=None, sharded: bool = True):
+def _build_engine(mesh_devices: int = 0, params=None, sharded: bool = True,
+                  tp: bool = False):
     import jax
 
     from repro.models import build_model
@@ -97,7 +109,8 @@ def _build_engine(mesh_devices: int = 0, params=None, sharded: bool = True):
     if params is None:
         params = fns.init(jax.random.PRNGKey(0))
     eng = ServeEngine(cfg, params, max_batch=MAX_BATCH, max_len=MAX_LEN,
-                      block_size=BLOCK_SIZE, mesh=mesh)
+                      block_size=BLOCK_SIZE, mesh=mesh,
+                      tp=True if (tp and sharded) else None)
     return cfg, eng, params
 
 
@@ -126,20 +139,24 @@ def _workload(cfg, n: int, seed: int = 0) -> List:
 
 
 def run_workload(quick: bool = False, mesh_devices: int = 0,
-                 verify_identical: Optional[bool] = None
-                 ) -> Tuple[object, dict]:
+                 verify_identical: Optional[bool] = None,
+                 tp: bool = False) -> Tuple[object, dict]:
     """Returns (ServeMetrics, workload descriptor).  ``quick`` is the CI
     smoke size; the full run pushes 3x the requests through the same pool so
     queueing/admission actually bites.  ``mesh_devices`` > 1 shards the KV
-    pool; ``verify_identical`` replays the workload on a forced-unsharded
-    engine (same params) and records whether outputs matched token-for-token
-    — its default (None) means "whenever the engine's *effective* mesh is
-    sharded", which also covers runs sharded by REPRO_SERVE_MESH rather
-    than the --mesh flag."""
+    pool; ``tp`` additionally shards the weights over the same mesh (rule-
+    driven, see repro.distributed.param_sharding); ``verify_identical``
+    replays the workload on a forced-unsharded engine (same params) and
+    records whether outputs matched token-for-token — its default (None)
+    means "whenever the engine's *effective* mesh is sharded", which also
+    covers runs sharded by REPRO_SERVE_MESH rather than the --mesh flag.
+    Exception: under REPRO_TP_REDUCE_SCATTER=1 compute follows the sharded
+    layout and is only fp32-close, so identity is not asserted by default
+    (tests/test_param_sharding.py owns the closeness check)."""
     # resolve the knob into an explicit width up front, so knob-sharded runs
     # get the widened smoke arch AND a matching-arch reference engine
     mesh_devices = mesh_devices or _knob_mesh_devices()
-    cfg, eng, params = _build_engine(mesh_devices)
+    cfg, eng, params = _build_engine(mesh_devices, tp=tp)
     n = WORKLOAD_REQUESTS if quick else 3 * WORKLOAD_REQUESTS
 
     # warm the prefill/decode jit caches outside the measured window (and
@@ -168,9 +185,14 @@ def run_workload(quick: bool = False, mesh_devices: int = 0,
         # dispatch overhead and all): it must skip the single-device gate
         # even though its width puts it in the single-device table series
         "sharded": eng.mesh is not None,
+        "tp_devices": m.tp_devices,
+        "param_bytes_per_device": m.param_bytes_per_device,
+        "param_bytes_replicated": m.param_bytes_replicated,
     }
     if verify_identical is None:
-        verify_identical = m.mesh_devices > 1
+        from repro.perf import perf
+        verify_identical = m.mesh_devices > 1 and \
+            not (eng.tp and perf().tp_reduce_scatter)
     if verify_identical:
         _, ref_eng, _ = _build_engine(mesh_devices, params=params,
                                       sharded=False)
@@ -412,6 +434,19 @@ def _check(m, desc) -> List[str]:
     if not m.re_prefill_avoided > 0:
         errs.append("prefix sharing saved no prefill tokens on a workload "
                     "with shared prompt prefixes")
+    tp_n = desc.get("tp_devices", 1)
+    if tp_n > 1:
+        # the PR's memory acceptance: sharding must actually shrink the
+        # per-device footprint to ~1/N (+5pt slop for the replicated norms,
+        # router tables and any fallback-replicated weights)
+        per_dev = desc.get("param_bytes_per_device", 0)
+        total = desc.get("param_bytes_replicated", 0)
+        ratio = per_dev / total if total else 1.0
+        ceiling = 1.0 / tp_n + 0.05
+        if not 0 < ratio <= ceiling:
+            errs.append(f"TP x{tp_n} per-device param bytes {per_dev} are "
+                        f"{ratio:.1%} of replicated {total} "
+                        f"(ceiling {ceiling:.1%})")
     return errs
 
 
@@ -427,6 +462,11 @@ def cli() -> int:
                     help="shard the KV pool over this many devices (forces "
                          "a CPU fake pod when needed); the run is verified "
                          "token-identical against an unsharded engine")
+    ap.add_argument("--tp", type=int, default=0,
+                    help="tensor-parallel: shard the weights AND the KV pool "
+                         "over this many devices (implies --mesh N); the "
+                         "point records per-device param bytes and defaults "
+                         "to BENCH_serve_tp.json")
     ap.add_argument("--open-loop", action="store_true",
                     help="measure latency under Poisson load through the "
                          "HTTP gateway instead of closed-loop throughput; "
@@ -440,14 +480,15 @@ def cli() -> int:
                          "default)")
     args = ap.parse_args()
 
+    mesh_n = max(args.mesh, args.tp)
     # must land before the jax backend initializes (the first jax import is
     # inside _build_engine, so this is early enough)
     from repro.launch.mesh import ensure_fake_pod
-    ensure_fake_pod(args.mesh)
+    ensure_fake_pod(mesh_n)
 
     if args.open_loop:
-        if args.mesh:
-            print("bench_serve: FAIL: --open-loop does not take --mesh "
+        if mesh_n:
+            print("bench_serve: FAIL: --open-loop does not take --mesh/--tp "
                   "(the latency lane is single-device)", file=sys.stderr)
             return 2
         out = args.out if args.out != "BENCH_serve.json" \
@@ -472,12 +513,19 @@ def cli() -> int:
             print(f"bench_serve: FAIL: {e}", file=sys.stderr)
         return 1 if errs else 0
 
-    m, desc = run_workload(quick=args.quick, mesh_devices=args.mesh)
+    m, desc = run_workload(quick=args.quick, mesh_devices=mesh_n,
+                           tp=args.tp >= 1)
+    out = args.out
+    if args.tp >= 1 and out == "BENCH_serve.json":
+        out = "BENCH_serve_tp.json"
     point = {
         "bench": "serve",
         "unix_time": time.time(),
         "workload": desc,
         "mesh_devices": desc["mesh_devices"],
+        "tp_devices": desc["tp_devices"],
+        "param_bytes_per_device": desc["param_bytes_per_device"],
+        "param_bytes_replicated": desc["param_bytes_replicated"],
         "tokens_per_sec": m.tokens_per_sec,
         "ttft_mean_s": m.ttft_mean_s,
         "itl_mean_s": m.itl_mean_s,
@@ -492,11 +540,17 @@ def cli() -> int:
         "re_prefill_avoided": m.re_prefill_avoided,
         "metrics": m.to_dict(),
     }
-    with open(args.out, "w") as f:
+    with open(out, "w") as f:
         json.dump(point, f, indent=2)
     print(m.summary())
-    print(f"trajectory point written to {args.out}")
+    print(f"trajectory point written to {out}")
 
+    if desc["tp_devices"] > 1:
+        ratio = desc["param_bytes_per_device"] / desc["param_bytes_replicated"]
+        print(f"tensor parallel x{desc['tp_devices']}: "
+              f"{desc['param_bytes_per_device'] / 1e6:.2f} MB/device of "
+              f"{desc['param_bytes_replicated'] / 1e6:.2f} MB params "
+              f"({ratio:.1%} of replicated)")
     if desc.get("token_identical") is not None:
         print(f"sharded-vs-single token identity: "
               f"{'OK' if desc['token_identical'] else 'MISMATCH'}")

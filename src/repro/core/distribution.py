@@ -80,6 +80,28 @@ class DistEGraph:
 
 def build_distributed_egraph(root_term: Term, pl: Placement,
                              max_sbps_per_tensor: int = 24) -> DistEGraph:
+    """BuildEGraph (Fig. 5): embed every feasible SBP strategy of ``root_term``
+    into one e-graph over placement ``pl``.
+
+    Node vocabulary of the result:
+      * ``input`` leaves — one per (graph input, feasible SBP) pair, each fed
+        through a free ``box comm="split"`` node (host -> device split).  The
+        split box *is* the input's placement choice, and its per-device
+        memory (``make_mem_fn``) is how weight storage enters the capacity
+        constraint: a replicated weight charges full bytes, a sharded one
+        bytes/n.
+      * compute nodes — one per (op, input-SBP combo) that an SBP signature
+        accepts; the chosen input SBPs are recorded in the ``in_sbps`` attr
+        (consumed by ``make_cost_fn(input_traffic=True)``) and nodes with the
+        same output SBP are unioned into one e-class (the paper's E-Cluster:
+        "same logic + same SBP => equivalent").
+      * ``box comm="reshard"`` nodes — explicit Resharding Boxing candidates
+        (all-gather / all-to-all / all-reduce / reduce-scatter) wherever
+        ``boxing_cost`` says the conversion exists.
+
+    The returned ``DistEGraph`` carries the topo-ordered ``terms`` list (term
+    index == the ``term_id`` attr on every node) and the per-term
+    ``eclusters`` dict mapping each ND-SBP to its e-class."""
     eg = EGraph()
     # collect unique terms in topo order
     topo: List[Term] = []
@@ -151,7 +173,8 @@ def build_distributed_egraph(root_term: Term, pl: Placement,
                     continue
                 node = ENode(t.op, tuple(cls for _, cls in combo),
                              t.attrs + tuple(sorted(
-                                 {"term_id": tid, "sbp": out_sbp}.items())))
+                                 {"term_id": tid, "sbp": out_sbp,
+                                  "in_sbps": in_sbps}.items())))
                 nid = eg.add(node)
                 if out_sbp in cluster:
                     cluster[out_sbp] = eg.union(cluster[out_sbp], nid)
@@ -183,11 +206,31 @@ def build_distributed_egraph(root_term: Term, pl: Placement,
 # Costs on shard shapes
 # ---------------------------------------------------------------------------
 
-def make_cost_fn(dg: DistEGraph, dtype_bytes: int = 2):
+def make_cost_fn(dg: DistEGraph, dtype_bytes: int = 2,
+                 input_traffic: bool = False):
+    """Per-ENode roofline cost on *local shard shapes* (seconds).
+
+    Boxing nodes cost their alpha-beta collective time (``boxing_cost``);
+    host-split boxing and raw input leaves are free.  Compute nodes cost
+    ``max(flops / PEAK_FLOPS, bytes / HBM_BW)`` over the *local* output
+    shard, so a sharded strategy is cheaper exactly when it shrinks the
+    per-device working set.
+
+    ``input_traffic=True`` switches the matmul HBM term from the legacy
+    ``3 * out_bytes`` approximation to the true local traffic
+    ``(lhs_local + rhs_local + out_local) bytes``, using the per-node
+    ``in_sbps`` attr to shard the operand shapes.  That makes weight-read
+    traffic visible to the search — a column/row-sharded weight streams
+    ``1/n`` of its bytes per device — which is what lets
+    ``choose_tp_layout`` discriminate tensor-parallel layouts whose output
+    shards are identical.  The legacy form stays the default because
+    existing extraction tests pin layouts chosen under it.
+    """
     pl = dg.placement
     from repro.core.tensor_ir import term_shape
     shape_cache: Dict[Term, Tuple[int, ...]] = {}
     shapes = [term_shape(t, shape_cache) for t in dg.terms]
+    tmap = {t: i for i, t in enumerate(dg.terms)}
 
     def cost(node: ENode) -> float:
         tid = node.attr("term_id")
@@ -207,7 +250,27 @@ def make_cost_fn(dg: DistEGraph, dtype_bytes: int = 2):
         for d in local:
             elems *= d
         if node.op == "matmul":
-            # contraction dim from child's local shape
+            in_sbps = node.attr("in_sbps")
+            if input_traffic and in_sbps is not None:
+                term = dg.terms[tid]
+                a_full = shapes[tmap[term.children[0]]]
+                b_full = shapes[tmap[term.children[1]]]
+                a_local = shard_shape(a_full, in_sbps[0], pl)
+                b_local = shard_shape(b_full, in_sbps[1], pl)
+                if a_local is None or b_local is None:
+                    return 1e9
+                k_local = a_local[-1]
+                in_elems = 1
+                for d in a_local:
+                    in_elems *= d
+                b_elems = 1
+                for d in b_local:
+                    b_elems *= d
+                in_elems += b_elems
+                flops = 2 * elems * k_local
+                return max(flops / PEAK_FLOPS,
+                           (in_elems + elems) * dtype_bytes / HBM_BW)
+            # legacy approximation: full contraction dim, 3x output bytes
             k_local = shape[1]  # fallback
             ch_sbp = None
             for n2 in dg.eg.nodes(node.children[0]):
@@ -222,6 +285,11 @@ def make_cost_fn(dg: DistEGraph, dtype_bytes: int = 2):
 
 
 def make_mem_fn(dg: DistEGraph, dtype_bytes: int = 2):
+    """Per-ENode *per-device* memory in bytes (``memory_bytes`` of the local
+    shard; Partial tensors charge full size since every device holds an
+    unreduced copy).  Input split boxes charge the placed weight/activation,
+    so summing over a chosen extraction approximates per-device peak
+    residency — the quantity ``auto_distribute(mem_capacity=...)`` caps."""
     pl = dg.placement
     from repro.core.tensor_ir import term_shape
     shape_cache: Dict[Term, Tuple[int, ...]] = {}
@@ -239,6 +307,18 @@ def make_mem_fn(dg: DistEGraph, dtype_bytes: int = 2):
 
 @dataclasses.dataclass
 class DistributedPlan:
+    """Result of :func:`auto_distribute`.
+
+    Attributes:
+      cost: modelled execution time of the chosen strategy (seconds).
+      assignments: term index (into the builder's topo order) -> chosen
+        ND-SBP.  Input terms map to their host-split placement — for a
+        weight input this *is* its tensor-parallel layout.
+      boxing: ``(term_id, src, dst)`` resharding collectives the plan
+        inserts between producer and consumer.
+      peak_memory: summed per-device bytes of every chosen node (the value
+        checked against ``mem_capacity``).
+    """
     cost: float
     assignments: Dict[int, NdSbp]        # term index -> chosen ND-SBP
     boxing: List[Tuple[int, NdSbp, NdSbp]]
@@ -247,10 +327,25 @@ class DistributedPlan:
 
 def auto_distribute(root_term: Term, pl: Placement,
                     mem_capacity: Optional[int] = None,
-                    use_sat: bool = True) -> DistributedPlan:
+                    use_sat: bool = True,
+                    input_traffic: bool = False,
+                    dtype_bytes: int = 2) -> DistributedPlan:
+    """Search the SBP strategy space of ``root_term`` over placement ``pl``.
+
+    Builds the distributed e-graph (every feasible per-tensor SBP plus
+    resharding boxing) and extracts the min-cost strategy:
+
+      * ``mem_capacity`` set -> exact branch-and-bound with a hard
+        per-device byte cap (raises ``ValueError`` when no strategy fits);
+      * otherwise WPMaxSAT (``use_sat=True``) or greedy extraction.
+
+    ``input_traffic``/``dtype_bytes`` configure :func:`make_cost_fn`; see
+    there for why weight-read traffic is opt-in.
+    """
     dg = build_distributed_egraph(root_term, pl)
-    cost_fn = make_cost_fn(dg)
-    mem_fn = make_mem_fn(dg)
+    cost_fn = make_cost_fn(dg, dtype_bytes=dtype_bytes,
+                           input_traffic=input_traffic)
+    mem_fn = make_mem_fn(dg, dtype_bytes=dtype_bytes)
     if mem_capacity is not None:
         # hard per-device memory capacity: the specialized exact B&B prunes
         # over-capacity branches monotonically (see extraction.py)
@@ -288,3 +383,137 @@ def ndsbp_to_pspec(nd: NdSbp, pl: Placement, tensor_ndim: int):
             entries[sbp.axis] = tuple(cur) + (axis_name,)
     return PartitionSpec(*[e if e is None or len(e) > 1 else e[0]
                            for e in entries])
+
+
+# ---------------------------------------------------------------------------
+# Tensor-parallel layout choice for serving (consumed by
+# repro.distributed.param_sharding)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class WeightChoice:
+    """Layout the search picked for one weight matrix.
+
+    ``kind`` classifies the single-mesh-axis SBP of a 2-D ``(in, out)``
+    weight: ``"column"`` = S(1) (output features sharded, no collective on
+    this matmul), ``"row"`` = S(0) (contraction sharded, produces Partial
+    output that costs one all-reduce), ``"replicated"`` = B.
+    """
+    name: str
+    sbp: object
+    kind: str
+
+
+@dataclasses.dataclass(frozen=True)
+class TPPlan:
+    """Per-weight tensor-parallel layout emitted by :func:`choose_tp_layout`.
+
+    ``choices`` maps weight name -> :class:`WeightChoice`; ``fallback``
+    lists blocks where branch-and-bound found no strategy under the memory
+    cap (non-divisible dims) and replicated layouts were substituted.
+    ``cost``/``peak_memory`` aggregate the per-block plans for reporting.
+    """
+    n_model: int
+    choices: Dict[str, WeightChoice]
+    cost: float
+    peak_memory: int
+    fallback: Tuple[str, ...]
+
+
+def _weight_kind(sbp) -> str:
+    if isinstance(sbp, S):
+        return "column" if sbp.axis == 1 else "row"
+    return "replicated"
+
+
+def choose_tp_layout(*, d_model: int, q_dim: int, d_ff: int, vocab: int,
+                     n_model: int, tokens: int = 8,
+                     dtype_bytes: int = 2) -> TPPlan:
+    """Have Auto Distribution pick the tensor-parallel weight layout.
+
+    Models a decode step as three block graphs at the paper's Fig. 6
+    granularity — attention projections ``x @ wq -> silu -> @ wo``, the MLP
+    ``x @ wi -> silu -> @ wdown``, and the LM head ``x @ wu`` — and runs
+    each through :func:`auto_distribute` over a 1-D ``('model',)`` placement
+    of ``n_model`` devices with:
+
+      * a per-device memory cap that admits only ``1/n``-sharded weight
+        storage (full activations allowed), so replicating any weight is
+        infeasible by construction, and
+      * ``input_traffic=True`` compute costs plus alpha-beta boxing costs,
+        so among the feasible sharded layouts the one with the fewest /
+        cheapest collectives wins (canonically: column-parallel wq/wi,
+        row-parallel wo/wdown — exactly one all-reduce per block).
+
+    The chosen per-weight ND-SBPs come back as :class:`WeightChoice`
+    entries; blocks whose dims don't divide ``n_model`` fall back to
+    replicated and are recorded in ``TPPlan.fallback``.  This is the sole
+    source of the serving partition rules — ``param_sharding`` translates
+    these kinds to ``PartitionSpec``s but never hard-codes a layout.
+    """
+    from repro.core.tensor_ir import inp, matmul, term_shape, unary
+
+    pl = Placement(("model",), (n_model,))
+
+    def chain(weights):
+        t = inp("x", (tokens, d_model))
+        for i, (name, shape) in enumerate(weights):
+            t = matmul(t, inp(name, shape))
+            if i < len(weights) - 1:
+                t = unary(t, "silu")
+        return t
+
+    blocks = [
+        ("attn", chain([("wq", (d_model, q_dim)), ("wo", (q_dim, d_model))])),
+        ("mlp", chain([("wi", (d_model, d_ff)), ("wdown", (d_ff, d_model))])),
+        ("head", chain([("wu", (d_model, vocab))])),
+    ]
+    weight_names = {
+        "attn": ("wq", "wo"),
+        "mlp": ("wi", "wdown"),
+        "head": ("wu",),
+    }
+
+    choices: Dict[str, WeightChoice] = {}
+    total_cost = 0.0
+    peak = 0
+    fallback: List[str] = []
+    for bname, root in blocks:
+        wnames = weight_names[bname]
+        dg = build_distributed_egraph(root, pl)
+        shape_cache: Dict[Term, Tuple[int, ...]] = {}
+        w_bytes = 0
+        other_bytes = 0
+        for t in dg.terms:
+            nb = dtype_bytes
+            for d in term_shape(t, shape_cache):
+                nb *= d
+            if t.op == "input" and t.attr("name") in wnames:
+                w_bytes += nb
+            else:
+                other_bytes += nb
+        root_nb = dtype_bytes
+        for d in term_shape(root, shape_cache):
+            root_nb *= d
+        # weights must fit 1/n-sharded; activations may stay full; the root
+        # unshard box charges one extra full copy of the output
+        cap = w_bytes // n_model + other_bytes + root_nb
+        weight_terms = [(tid, t) for tid, t in enumerate(dg.terms)
+                        if t.op == "input" and t.attr("name") in wnames]
+        try:
+            plan = auto_distribute(root, pl, mem_capacity=cap,
+                                   input_traffic=True,
+                                   dtype_bytes=dtype_bytes)
+        except ValueError:
+            fallback.append(bname)
+            for _, t in weight_terms:
+                name = t.attr("name")
+                choices[name] = WeightChoice(name, (B,), "replicated")
+            continue
+        total_cost += plan.cost
+        peak = max(peak, plan.peak_memory)
+        for tid, t in weight_terms:
+            name = t.attr("name")
+            nd = plan.assignments.get(tid, (B,))
+            choices[name] = WeightChoice(name, nd, _weight_kind(nd[0]))
+    return TPPlan(n_model, choices, total_cost, peak, tuple(fallback))

@@ -1,7 +1,30 @@
 """SBP (Split / Broadcast / Partial) abstraction (§3.1.3), after OneFlow.
 
-An ND-SBP assigns one SBP per mesh axis; axes act orthogonally.  Boxing
-converts between ND-SBPs; its cost is the alpha-beta collective model.
+The three per-mesh-axis placement states of a logical tensor:
+
+  * ``S(d)`` — *Split*: sliced evenly along tensor dim ``d`` across the
+    devices of that mesh axis.  ``S(1)`` on a 2-D ``(in, out)`` weight is
+    column-parallel, ``S(0)`` is row-parallel.
+  * ``B`` — *Broadcast*: every device holds the full tensor.
+  * ``P`` — *Partial*: every device holds a same-shaped unreduced partial
+    sum; the true value is their elementwise sum.  This is what a matmul
+    over a split contraction dim produces, and an all-reduce (``P -> B``)
+    or reduce-scatter (``P -> S``) materializes it.
+
+An *ND-SBP* is a tuple assigning one SBP per mesh axis; axes compose
+orthogonally (a ``(S(0), B)`` over a 2-D mesh shards dim 0 on the first
+axis and replicates over the second).  *Boxing* converts between ND-SBPs
+via collectives; :func:`boxing_cost` prices each transition with the
+alpha-beta model (``ALPHA`` latency + payload / ``ICI_BW``).
+
+Op semantics live in *signatures* (:func:`matmul_axis_signatures`,
+:func:`elementwise_axis_signatures`): per-axis rules mapping input SBP
+tags to the output tag, e.g. ``(B, S1) -> S1`` ("replicated activations
+times a column-sharded weight yield column-sharded output, no comm") and
+``(S1, S0) -> P`` ("split contraction yields partials").  Auto
+Distribution (``repro.core.distribution``) enumerates these per tensor and
+extracts the cheapest consistent assignment; ``ndsbp_to_pspec`` bridges
+the result to ``jax.sharding.PartitionSpec``.
 """
 from __future__ import annotations
 
@@ -14,6 +37,8 @@ from repro.core.cost_model import ALPHA, ICI_BW
 
 @dataclasses.dataclass(frozen=True)
 class S:
+    """Split along tensor dim ``axis``; hashable and interned by value so
+    ND-SBP tuples can key e-cluster dicts."""
     axis: int
 
     def __repr__(self):
@@ -80,7 +105,15 @@ def shard_shape(shape: Tuple[int, ...], nd: NdSbp, pl: Placement):
 
 def valid_ndsbps(shape: Tuple[int, ...], pl: Placement,
                  allow_partial: bool = False) -> List[NdSbp]:
-    """All ND-SBPs whose splits divide `shape` evenly."""
+    """All ND-SBPs whose splits divide `shape` evenly.
+
+    This is the per-tensor strategy-enumeration primitive: Auto
+    Distribution calls it for every graph input (and for resharding
+    targets, with ``allow_partial=False`` since nothing *stores* a tensor
+    as Partial on purpose).  Non-divisible splits are excluded here, which
+    is why a config whose head or FF dims don't divide the mesh axis
+    degrades to replicated instead of crashing.
+    """
     per_axis: List[List[object]] = []
     for size in pl.sizes:
         cands: List[object] = [B]
@@ -96,7 +129,12 @@ def valid_ndsbps(shape: Tuple[int, ...], pl: Placement,
 
 
 def memory_bytes(shape, nd: NdSbp, pl: Placement, dtype_bytes: int = 2) -> int:
-    """Per-device bytes of a tensor stored with this ND-SBP."""
+    """Per-device bytes of a tensor stored with this ND-SBP.
+
+    A Broadcast or Partial axis charges the full extent (each device holds
+    a complete copy or a complete partial sum); a Split axis charges
+    ``1/size``.  An invalid (non-divisible) placement returns 2**60 so it
+    can never win under a memory cap."""
     local = shard_shape(shape, nd, pl)
     if local is None:
         return 1 << 60
@@ -161,6 +199,15 @@ def boxing_ops(src: NdSbp, dst: NdSbp, shape, pl: Placement,
 
 def boxing_cost(src: NdSbp, dst: NdSbp, shape, pl: Placement,
                 dtype_bytes: int = 2) -> Optional[float]:
+    """Alpha-beta time (seconds) to convert ``src -> dst``, or None if no
+    collective implements the transition (e.g. ``B -> P``).
+
+    Per ring-collective convention, each device moves ``(g-1)/g`` of the
+    payload once for all-gather / reduce-scatter / all-to-all and twice for
+    all-reduce (reduce-scatter + all-gather), plus an ``ALPHA`` launch
+    latency per collective.  This is the term that makes one row-parallel
+    all-reduce beat two column-parallel all-gathers in the TP layout
+    search."""
     ops = boxing_ops(src, dst, shape, pl, dtype_bytes)
     if ops is None:
         return None
@@ -194,6 +241,10 @@ def matmul_axis_signatures() -> List[Tuple[Tuple[str, ...], str]]:
 
 def elementwise_axis_signatures(arity: int, linear: bool
                                 ) -> List[Tuple[Tuple[str, ...], str]]:
+    """1-axis signatures for elementwise ops: any split or broadcast state
+    passes through unchanged.  Only *linear* ops (add-like) may consume
+    Partial inputs — a nonlinearity applied to unreduced partial sums would
+    compute ``f(a) + f(b) != f(a + b)``, so P must be boxed to B first."""
     sigs = []
     for tag in ("S0", "S1", "B"):
         sigs.append((tuple(tag for _ in range(arity)), tag))
@@ -206,6 +257,8 @@ def elementwise_axis_signatures(arity: int, linear: bool
 
 
 def resolve_tag(tag: str, ndim: int):
+    """Symbolic signature tag ('B'/'P'/'S<d>') -> SBP object, or None when
+    the split dim doesn't exist on an ``ndim``-dimensional output."""
     if tag == "B":
         return B
     if tag == "P":

@@ -1,0 +1,284 @@
+"""Rule-driven tensor-parallel parameter sharding for serving.
+
+The flow (see docs/sharding.md for the worked example):
+
+  1. :func:`choose_tp_rules` asks Auto Distribution's SBP cost model
+     (``repro.core.distribution.choose_tp_layout``) which layout each weight
+     family should get — column-parallel (S(1)), row-parallel (S(0)) or
+     replicated (B) over the ``('model',)`` mesh axis — and translates the
+     chosen kinds into an ordered list of :class:`ShardRule` regex rules.
+     The matmul-weight rules are *emitted* by the search, never hard-coded;
+     only structurally-replicated leaves (norms, the MoE router) and the
+     embedding lookup table carry ``structural:*`` sources.
+  2. :func:`tp_param_specs` matches every parameter path against the rules
+     (redco-style contiguous-window regex over the flattened path keys) and
+     builds a PyTree of ``PartitionSpec``.  Every leaf must match some rule
+     — an unmatched path raises, so new param families fail loudly.
+  3. ``ServeEngine`` turns the specs into ``NamedSharding``s
+     (``sharding.to_named``) and ``jax.device_put``s the params, composing
+     with the PR 5 KV-head sharding under the same mesh.
+
+Execution has two modes, switched by the ``REPRO_TP_REDUCE_SCATTER`` knob
+via the trace-time state set by :func:`set_serve_tp`:
+
+  * knob **off** (default): weights are *stored* sharded (1/n per-device
+    bytes) but :func:`tp_use` constrains each weight to replicated at its
+    use site, so XLA all-gathers the weight and the arithmetic is exactly
+    the single-device computation — decode output is **bitwise identical**.
+  * knob **on**: :func:`tp_use` is a passthrough, so compute follows the
+    stored layout — column-parallel in-projections need no collective and
+    the row-parallel output projections produce partial sums that XLA
+    reduces with **one all-reduce per layer**.  This halves weight traffic
+    but reorders the reduction, so outputs match within fp32 tolerance
+    rather than bitwise.
+
+Like ``attention.set_serve_mesh``, the state here is trace-time only: the
+engine sets it around its jitted prefill/decode wrappers and resets it in
+a ``finally``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardRule:
+    """One partition rule: ``patterns`` is a sequence of regexes matched
+    against a *contiguous window* of the parameter's path keys (so
+    ``("attn", "w[qkv]")`` matches ``layers/3/attn/wq`` but not
+    ``layers/3/moe/shared/wq``); ``trailing`` gives the mesh-axis entries
+    for the trailing tensor dims (leading stack/expert dims are always
+    unsharded); ``source`` records provenance (``sbp:<kind>`` = emitted by
+    the cost model, ``structural:*`` = trivially replicated/derived)."""
+    name: str
+    patterns: Tuple[str, ...]
+    trailing: Tuple[Optional[str], ...]
+    source: str
+
+
+def _path_keys(path) -> Tuple[str, ...]:
+    keys = []
+    for entry in path:
+        if hasattr(entry, "key"):
+            keys.append(str(entry.key))
+        elif hasattr(entry, "idx"):
+            keys.append(str(entry.idx))
+        elif hasattr(entry, "name"):
+            keys.append(str(entry.name))
+        else:
+            keys.append(str(entry))
+    return tuple(keys)
+
+
+def _match(patterns: Tuple[str, ...], keys: Tuple[str, ...]) -> bool:
+    m = len(patterns)
+    if m == 0 or m > len(keys):
+        return False
+    for start in range(len(keys) - m + 1):
+        if all(re.fullmatch(p, k)
+               for p, k in zip(patterns, keys[start:start + m])):
+            return True
+    return False
+
+
+def _trail(kind: str) -> Tuple[Optional[str], ...]:
+    """WeightChoice.kind for a 2-D (in, out) weight -> trailing spec."""
+    if kind == "column":
+        return (None, "model")
+    if kind == "row":
+        return ("model", None)
+    return ()
+
+
+def _trailing_spec(shape: Tuple[int, ...],
+                   trailing: Tuple[Optional[str], ...],
+                   n_model: int) -> PartitionSpec:
+    ndim = len(shape)
+    entries: List[Optional[str]] = [None] * ndim
+    off = ndim - len(trailing)
+    if off >= 0:
+        for i, ax in enumerate(trailing):
+            if ax is not None and shape[off + i] % n_model == 0:
+                entries[off + i] = ax
+    return PartitionSpec(*entries)
+
+
+def choose_tp_rules(cfg, n_model: int) -> List[ShardRule]:
+    """Emit the ordered partition-rule list for ``cfg`` over ``n_model``
+    model-axis devices, with the matmul layouts chosen by Auto
+    Distribution's SBP cost model (canonically: column qkv/up/gate, row
+    wo/down — one collective per layer)."""
+    from repro.core.distribution import choose_tp_layout
+
+    d_ff = cfg.moe.d_ff_expert if cfg.moe is not None else cfg.d_ff
+    plan = choose_tp_layout(d_model=cfg.d_model, q_dim=cfg.q_dim,
+                            d_ff=d_ff, vocab=cfg.vocab, n_model=n_model)
+    qkv = plan.choices["wq"]
+    attn_out = plan.choices["wo"]
+    mlp_in = plan.choices["wi"]
+    mlp_out = plan.choices["wdown"]
+    head = plan.choices["wu"]
+
+    rules = [
+        ShardRule("attn_qkv", ("attn", "w[qkv]"),
+                  _trail(qkv.kind), f"sbp:{qkv.kind}"),
+        ShardRule("attn_out", ("attn", "wo"),
+                  _trail(attn_out.kind), f"sbp:{attn_out.kind}"),
+        ShardRule("mlp_in", ("mlp|shared", "wi(_gate|_up)?"),
+                  _trail(mlp_in.kind), f"sbp:{mlp_in.kind}"),
+        ShardRule("mlp_out", ("mlp|shared", "wo"),
+                  _trail(mlp_out.kind), f"sbp:{mlp_out.kind}"),
+        ShardRule("moe_expert_in", ("moe", "wi(_gate|_up)?"),
+                  _trail(mlp_in.kind), f"sbp:{mlp_in.kind}"),
+        ShardRule("moe_expert_out", ("moe", "wo"),
+                  _trail(mlp_out.kind), f"sbp:{mlp_out.kind}"),
+        ShardRule("moe_router", ("moe", "router"),
+                  (), "structural:replicated"),
+    ]
+    if cfg.tie_embeddings:
+        # the (vocab, d) table doubles as the unembed matmul weight; the
+        # head choice on the logical (d, vocab) weight maps transposed
+        tied = {"column": ("model", None), "row": (None, "model")}
+        rules.append(ShardRule("embed_tied", ("embed", "embed"),
+                               tied.get(head.kind, ()), f"sbp:{head.kind}"))
+    else:
+        rules.append(ShardRule("lm_head", ("embed", "unembed"),
+                               _trail(head.kind), f"sbp:{head.kind}"))
+        # shard the lookup table on vocab iff the head sharded at all —
+        # vocab-parallel embedding, derived from (not chosen by) the search
+        rules.append(ShardRule("embed_table", ("embed", "embed"),
+                               ("model", None) if head.kind != "replicated"
+                               else (), "structural:vocab"))
+    rules.append(ShardRule("replicated_rest", (".*",),
+                           (), "structural:replicated"))
+    return rules
+
+
+def tp_param_specs(cfg, params, n_model: int,
+                   rules: Optional[List[ShardRule]] = None):
+    """Match every param path against the rules; returns ``(spec_tree,
+    report)`` where ``report`` maps ``"a/b/c"`` path strings to the
+    :class:`ShardRule` that claimed them.  Raises ``ValueError`` if any
+    leaf goes unmatched (the catch-all makes that impossible for the
+    default rule set, but custom rule lists must stay total)."""
+    if rules is None:
+        rules = choose_tp_rules(cfg, n_model)
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    report: Dict[str, ShardRule] = {}
+    for path, leaf in leaves:
+        keys = _path_keys(path)
+        for rule in rules:
+            if _match(rule.patterns, keys):
+                specs.append(_trailing_spec(leaf.shape, rule.trailing,
+                                            n_model))
+                report["/".join(keys)] = rule
+                break
+        else:
+            raise ValueError(
+                f"no sharding rule matched param {'/'.join(keys)}")
+    return jax.tree_util.tree_unflatten(treedef, specs), report
+
+
+def validate_tp_divisibility(cfg, n_model: int) -> None:
+    """Fail fast at engine construction when ``cfg`` can't tensor-parallel
+    over ``n_model`` devices (the rule matcher would silently degrade the
+    offending leaves to replicated, which defeats the point of TP)."""
+    if n_model <= 1:
+        return
+    d_ff = cfg.moe.d_ff_expert if cfg.moe is not None else cfg.d_ff
+    problems = []
+    if cfg.n_heads % n_model:
+        problems.append(f"n_heads={cfg.n_heads}")
+    if cfg.n_kv_heads % n_model:
+        problems.append(f"n_kv_heads={cfg.n_kv_heads}")
+    if d_ff % n_model:
+        problems.append(f"d_ff={d_ff}")
+    if problems:
+        raise ValueError(
+            f"config {cfg.name!r} cannot shard over model axis of "
+            f"{n_model}: {', '.join(problems)} not divisible")
+
+
+def param_bytes_total(params) -> int:
+    """Logical (replicated-equivalent) parameter bytes."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(params):
+        n = leaf.dtype.itemsize
+        for d in leaf.shape:
+            n *= d
+        total += n
+    return total
+
+
+def param_bytes_per_device(params) -> int:
+    """Bytes one device actually stores: sums each leaf's addressable-shard
+    size (falls back to full size for unsharded/host leaves).  The
+    ``bench_serve --tp`` lane reports this next to the replicated total."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(params):
+        sharding = getattr(leaf, "sharding", None)
+        if sharding is not None and hasattr(sharding, "shard_shape"):
+            shape = sharding.shard_shape(leaf.shape)
+        else:
+            shape = leaf.shape
+        n = leaf.dtype.itemsize
+        for d in shape:
+            n *= d
+        total += n
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Trace-time serve state (mirrors attention.set_serve_mesh)
+# ---------------------------------------------------------------------------
+
+_SERVE_TP = {"mesh": None, "reduce_scatter": False}
+
+
+def set_serve_tp(mesh: Optional[Mesh], reduce_scatter: bool = False) -> None:
+    """Engine-only hook: arm (or disarm, with None) weight-TP tracing for
+    the serve jits.  Must be reset in a ``finally`` like the paged plan."""
+    _SERVE_TP["mesh"] = mesh
+    _SERVE_TP["reduce_scatter"] = bool(reduce_scatter)
+
+
+def serve_tp_active() -> bool:
+    return _SERVE_TP["mesh"] is not None
+
+
+def serve_tp_reduce_scatter() -> bool:
+    return _SERVE_TP["mesh"] is not None and _SERVE_TP["reduce_scatter"]
+
+
+def tp_use(w):
+    """Use-site hook for every weight on the serve path.
+
+    Identity mode (knob off): constrain to replicated so XLA all-gathers
+    the stored shard and compute is bitwise single-device.  Reduce-scatter
+    mode: passthrough — compute follows the stored column/row layout and
+    the output projections' partial sums cost one all-reduce per layer."""
+    mesh = _SERVE_TP["mesh"]
+    if mesh is None or _SERVE_TP["reduce_scatter"]:
+        return w
+    return jax.lax.with_sharding_constraint(
+        w, NamedSharding(mesh, PartitionSpec()))
+
+
+def tp_hidden(h):
+    """Pin the MLP hidden activation to the ff-sharded layout in
+    reduce-scatter mode (no-op otherwise) so the down-projection consumes
+    the column-parallel output in place instead of gathering it."""
+    mesh = _SERVE_TP["mesh"]
+    if mesh is None or not _SERVE_TP["reduce_scatter"]:
+        return h
+    n = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+    if n <= 1 or h.shape[-1] % n:
+        return h
+    spec = PartitionSpec(*([None] * (h.ndim - 1) + ["model"]))
+    return jax.lax.with_sharding_constraint(h, NamedSharding(mesh, spec))

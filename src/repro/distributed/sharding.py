@@ -81,7 +81,16 @@ def weight_use(w, *logical):
     """Constrain a weight AT ITS USE SITE to TP-only placement (drops the
     FSDP axes).  Under REPRO_WEIGHT_AG=1 this forces GSPMD to all-gather the
     small weight shard instead of partial-summing the large activations over
-    the FSDP-sharded contraction dim — see perf.py."""
+    the FSDP-sharded contraction dim — see perf.py.
+
+    On the serve path with weight tensor parallelism armed (``ServeEngine``
+    with ``tp=True``), this instead defers to ``param_sharding.tp_use``:
+    replicate-at-use for bitwise identity, or passthrough under
+    REPRO_TP_REDUCE_SCATTER=1 so compute follows the stored column/row
+    layout with one all-reduce per layer."""
+    from repro.distributed import param_sharding as _psh
+    if _psh.serve_tp_active():
+        return _psh.tp_use(w)
     from repro.perf import perf
     if not perf().weight_ag:
         return w

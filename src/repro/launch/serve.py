@@ -5,7 +5,10 @@
 
 ``--mesh N`` shards the KV block pool over N devices on the kv-heads axis
 (on a chipless host it forces an N-device CPU fake pod first); outputs are
-token-identical to the single-device run.  Prints per-run ServeMetrics;
+token-identical to the single-device run.  ``--tp N`` additionally shards
+the WEIGHTS over the same mesh using the partition rules Auto Distribution
+emits (~1/N param bytes per device; see docs/sharding.md and the
+REPRO_TP_REDUCE_SCATTER knob).  Prints per-run ServeMetrics;
 ``--metrics-out`` dumps them as JSON (the same shape bench_serve emits into
 BENCH_serve.json).
 """
@@ -50,17 +53,22 @@ def main():
                          "kv-heads axis (1 = explicit 1-device mesh; 0 = "
                          "defer to REPRO_SERVE_MESH; forces a CPU fake pod "
                          "when not enough devices exist)")
+    ap.add_argument("--tp", type=int, default=0,
+                    help="tensor-parallel: shard the weights AND the KV pool "
+                         "over this many devices (implies --mesh N; 0 = "
+                         "defer to REPRO_SERVE_TP)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--metrics-out", default="")
     args = ap.parse_args()
 
-    ensure_fake_pod(args.mesh)
+    mesh_n = max(args.mesh, args.tp)
+    ensure_fake_pod(mesh_n)
     mesh = None          # 0: defer to the REPRO_SERVE_MESH knob
-    if args.mesh >= 1:   # an explicit CLI width always beats the env knob
+    if mesh_n >= 1:      # an explicit CLI width always beats the env knob
         from repro.launch.mesh import make_serve_mesh
-        mesh = make_serve_mesh(args.mesh)
+        mesh = make_serve_mesh(mesh_n)
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = reduced_config(cfg)
@@ -74,7 +82,12 @@ def main():
                       host_blocks=None if args.host_blocks < 0 else args.host_blocks,
                       prefix_cache_blocks=None if args.prefix_cache_blocks < 0
                       else args.prefix_cache_blocks,
-                      mesh=mesh)
+                      mesh=mesh, tp=True if args.tp >= 1 else None)
+    if eng.tp:
+        print(f"tensor parallel x{eng.metrics().tp_devices}: "
+              f"{eng.param_bytes_per_device / 1e6:.2f} MB/device of "
+              f"{eng.param_bytes_replicated / 1e6:.2f} MB params "
+              f"({eng.param_bytes_per_device / eng.param_bytes_replicated:.0%})")
     rng = np.random.default_rng(args.seed)
     for i in range(args.requests):
         prompt = rng.integers(1, cfg.vocab, size=int(rng.integers(4, 12))).tolist()

@@ -270,19 +270,25 @@ def attention_decode_block_paged(cfg: ModelConfig, p, x: jax.Array,
     else:
         from jax.experimental.shard_map import shard_map
         from jax.sharding import PartitionSpec as P
+        from repro.distributed.param_sharding import serve_tp_reduce_scatter
         hs = P(None, None, "model", None)    # heads/kv axis of q, k, v, pages
+        # Under reduce-scatter TP the per-shard outputs STAY head-sharded:
+        # the row-parallel wo consumes them locally and the layer's single
+        # all-reduce happens on its partial sums instead of gathering o here.
+        rs = serve_tp_reduce_scatter()
 
         def body(q_l, k_l, v_l, kp_l, vp_l, tables, lens):
             kp_l = paged_scatter_token(kp_l, tables, lens, k_l[:, 0])
             vp_l = paged_scatter_token(vp_l, tables, lens, v_l[:, 0])
             o_l = _paged_decode_attend(q_l, kp_l, vp_l, tables, lens)
-            return jax.lax.all_gather(o_l, "model", axis=2, tiled=True), \
-                kp_l, vp_l
+            if not rs:
+                o_l = jax.lax.all_gather(o_l, "model", axis=2, tiled=True)
+            return o_l, kp_l, vp_l
 
         o, k_pages, v_pages = shard_map(
             body, mesh=mesh,
             in_specs=(hs, hs, hs, hs, hs, P(None, None), P(None)),
-            out_specs=(P(None, None, None, None), hs, hs),
+            out_specs=(hs if rs else P(None, None, None, None), hs, hs),
             check_rep=False)(q, k, v, k_pages, v_pages, block_tables, seq_lens)
     b = x.shape[0]
     from repro.distributed.sharding import weight_use
@@ -331,22 +337,27 @@ def attention_prefill_chunk_block(cfg: ModelConfig, p, x: jax.Array,
         # shard_map over the kv-heads axis, mirroring the decode path: each
         # shard scatters and attends its own KV-head slice of the chunk,
         # then the head-split outputs are all-gathered (no cross-shard sums)
+        # — except under reduce-scatter TP, where they stay head-sharded for
+        # the row-parallel wo (one all-reduce on its partial sums instead)
         from jax.experimental.shard_map import shard_map
         from jax.sharding import PartitionSpec as P
+        from repro.distributed.param_sharding import serve_tp_reduce_scatter
         hs = P(None, None, "model", None)
+        rs = serve_tp_reduce_scatter()
 
         def body(q_l, k_l, v_l, kp_l, vp_l, table, blk_, off_, cpos):
             kp_l = kp_l.at[blk_, off_].set(k_l[0].astype(kp_l.dtype))
             vp_l = vp_l.at[blk_, off_].set(v_l[0].astype(vp_l.dtype))
             o_l = _paged_prefill_attend(cfg, q_l, kp_l, vp_l, table, cpos)
-            return jax.lax.all_gather(o_l, "model", axis=2, tiled=True), \
-                kp_l, vp_l
+            if not rs:
+                o_l = jax.lax.all_gather(o_l, "model", axis=2, tiled=True)
+            return o_l, kp_l, vp_l
 
         o, k_pages, v_pages = shard_map(
             body, mesh=mesh,
             in_specs=(hs, hs, hs, hs, hs, P(None, None), P(None), P(None),
                       P(None)),
-            out_specs=(P(None, None, None, None), hs, hs),
+            out_specs=(hs if rs else P(None, None, None, None), hs, hs),
             check_rep=False)(q, k, v, k_pages, v_pages, block_table, blk,
                              off, chunk_pos)
     from repro.distributed.sharding import weight_use

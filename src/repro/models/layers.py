@@ -128,6 +128,8 @@ def apply_mlp(cfg: ModelConfig, p, x: jax.Array) -> jax.Array:
         h = constrain(h, "batch", "seq_mp", None)
     else:
         h = constrain(h, "batch", None, "ff")
+    from repro.distributed.param_sharding import tp_hidden
+    h = tp_hidden(h)
     return jnp.einsum("bsf,fd->bsd", h, weight_use(p["wo"], "ff", None))
 
 
@@ -145,7 +147,8 @@ def init_embed(cfg: ModelConfig, rng, dtype):
 
 
 def embed_tokens(p, tokens: jax.Array) -> jax.Array:
-    out = jnp.take(p["embed"], tokens, axis=0)
+    from repro.distributed.param_sharding import tp_use
+    out = jnp.take(tp_use(p["embed"]), tokens, axis=0)
     return constrain(out, "batch", None, None)
 
 

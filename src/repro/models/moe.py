@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.distributed.param_sharding import tp_use
 from repro.distributed.sharding import constrain
 from repro.models.layers import init_mlp, apply_mlp, truncated_normal
 
@@ -79,11 +80,11 @@ def _expert_ffn(cfg: ModelConfig, p, buf: jax.Array) -> jax.Array:
     GSPMD inserts the expert-parallel all-to-all.
     """
     buf = constrain(buf, "batch", "experts", None, None)
-    g = jnp.einsum("becd,edf->becf", buf, p["wi_gate"])
-    u = jnp.einsum("becd,edf->becf", buf, p["wi_up"])
+    g = jnp.einsum("becd,edf->becf", buf, tp_use(p["wi_gate"]))
+    u = jnp.einsum("becd,edf->becf", buf, tp_use(p["wi_up"]))
     h = jax.nn.silu(g.astype(jnp.float32)).astype(buf.dtype) * u
     h = constrain(h, "batch", "experts", None, None)
-    out = jnp.einsum("becf,efd->becd", h, p["wo"])
+    out = jnp.einsum("becf,efd->becd", h, tp_use(p["wo"]))
     return constrain(out, "batch", "experts", None, None)
 
 
@@ -148,9 +149,9 @@ def apply_moe_decode(cfg: ModelConfig, p, x: jax.Array) -> jax.Array:
     gates = gates.reshape(b * s, m.top_k)
     y = jnp.zeros_like(xt)
     for k in range(m.top_k):
-        wi_g = jnp.take(p["wi_gate"], idx[:, k], axis=0)   # (T,d,f)
-        wi_u = jnp.take(p["wi_up"], idx[:, k], axis=0)
-        wo = jnp.take(p["wo"], idx[:, k], axis=0)          # (T,f,d)
+        wi_g = jnp.take(tp_use(p["wi_gate"]), idx[:, k], axis=0)   # (T,d,f)
+        wi_u = jnp.take(tp_use(p["wi_up"]), idx[:, k], axis=0)
+        wo = jnp.take(tp_use(p["wo"]), idx[:, k], axis=0)          # (T,f,d)
         g = jnp.einsum("td,tdf->tf", xt, wi_g)
         u = jnp.einsum("td,tdf->tf", xt, wi_u)
         h = jax.nn.silu(g.astype(jnp.float32)).astype(xt.dtype) * u

@@ -60,6 +60,21 @@ Knobs (defaults = the paper-faithful baseline):
       per-request cap the HTTP gateway clamps ``max_tokens`` to before
       admission (requests never see the engine's rejection path for
       oversized asks — they get a truncated generation instead)
+  REPRO_SERVE_TP       0 | 1
+      1 — a mesh-backed ServeEngine also shards the WEIGHTS over the model
+          axis using the partition rules Auto Distribution's SBP cost model
+          emits (repro.distributed.param_sharding): per-device param bytes
+          drop to ~1/n.  Equivalent to ``ServeEngine(tp=True)``; requires
+          a mesh (REPRO_SERVE_MESH / ``mesh=``) and divisible
+          n_heads/n_kv_heads/d_ff.
+  REPRO_TP_REDUCE_SCATTER  0 | 1
+      0 — TP weights are gathered at their use site, so decode stays
+          BITWISE identical to single-device (storage scales, traffic
+          doesn't)
+      1 — compute follows the stored column/row layout: in-projections run
+          shard-local and each output projection partial-sums into one
+          all-reduce per layer — real TP traffic, output matches within
+          fp32 tolerance instead of bitwise (see docs/sharding.md)
 """
 from __future__ import annotations
 
@@ -82,6 +97,8 @@ class PerfConfig:
     serve_mesh: str = "0"
     gateway_idle_ms: int = 2
     gateway_max_new: int = 128
+    serve_tp: bool = False
+    tp_reduce_scatter: bool = False
 
 
 def perf() -> PerfConfig:
@@ -99,6 +116,8 @@ def perf() -> PerfConfig:
         serve_mesh=os.environ.get("REPRO_SERVE_MESH", "0"),
         gateway_idle_ms=int(os.environ.get("REPRO_GATEWAY_IDLE_MS", "2")),
         gateway_max_new=int(os.environ.get("REPRO_GATEWAY_MAX_NEW", "128")),
+        serve_tp=os.environ.get("REPRO_SERVE_TP", "0") == "1",
+        tp_reduce_scatter=os.environ.get("REPRO_TP_REDUCE_SCATTER", "0") == "1",
     )
 
 

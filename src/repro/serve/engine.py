@@ -45,14 +45,24 @@ construction skip saturation and search entirely.
 
 **Multi-device serving** (``mesh=`` or the REPRO_SERVE_MESH knob): the
 device tier's block slab is sharded over the mesh's "model" axis on the
-kv-heads dim (``repro.distributed.sharding.paged_cache_specs``), params are
-replicated, and the paged attention paths run under shard_map grouped by KV
-head — outputs are token-identical to a single-device run because no
-floating-point reduction ever crosses a shard (per-shard head outputs are
-all-gathered, never partial-summed).  Scheduling, admission, CoW, prefix
-sharing, and preemption-by-swap are untouched: block ids stay global, and
+kv-heads dim (``repro.distributed.sharding.paged_cache_specs``) and the
+paged attention paths run under shard_map grouped by KV head — outputs are
+token-identical to a single-device run because no floating-point reduction
+ever crosses a shard (per-shard head outputs are all-gathered, never
+partial-summed).  Scheduling, admission, CoW, prefix sharing, and
+preemption-by-swap are untouched: block ids stay global, and
 ``swap_out``/``swap_in`` gather/scatter each block's per-shard slices so the
 host tier keeps holding whole blocks (replicated-on-host).
+
+**Weight tensor parallelism** (``tp=True`` or REPRO_SERVE_TP=1, on top of a
+mesh): params are ``device_put`` with the partition rules Auto
+Distribution's SBP cost model emits (``repro.distributed.param_sharding``
+— canonically column-parallel qkv/up/gate, row-parallel wo/down, so
+per-device param bytes drop to ~1/n).  By default weights are gathered at
+their use site, keeping decode bitwise identical; REPRO_TP_REDUCE_SCATTER=1
+makes compute follow the stored layout with one all-reduce per layer
+(fp32-tolerance closeness instead).  ``param_bytes_per_device`` /
+``param_bytes_replicated`` report the storage win; see docs/sharding.md.
 """
 from __future__ import annotations
 
@@ -67,6 +77,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.codegen import paged_pages_per_fetch
 from repro.core.tensor_ir import inp, matmul, unary
+from repro.distributed import param_sharding
 from repro.models import build_model
 from repro.models import attention as attn_lib
 from repro.perf import perf
@@ -208,9 +219,13 @@ class ServeEngine:
                  prefix_cache_blocks: Optional[int] = None,
                  compiler: Optional[Compiler] = None,
                  plan_kernels: bool = True,
-                 mesh=None):
+                 mesh=None,
+                 tp: Optional[bool] = None):
         # mesh: a jax Mesh with a "model" axis to shard the KV pool over,
         # None to consult REPRO_SERVE_MESH, or False to force single-device
+        # tp: also shard the WEIGHTS over the model axis with the partition
+        # rules Auto Distribution emits (param_sharding); None consults
+        # REPRO_SERVE_TP.  Requires a mesh; no-op without one.
         # vlm is excluded deliberately: the paged prefill/decode path embeds
         # raw token ids with 2-D positions, which would silently degrade
         # M-RoPE + vision-embeds frontends; wiring the embeds interface
@@ -256,6 +271,11 @@ class ServeEngine:
             self.mesh = None
         else:
             self.mesh = mesh if mesh is not None else _mesh_from_knob()
+        self.tp = bool(tp) if tp is not None else perf().serve_tp
+        if self.mesh is None:
+            self.tp = False
+        self.tp_rules = None
+        self.tp_report = None
         cache0 = self.fns.make_paged_cache(num_blocks, block_size)
         shardings = None
         if self.mesh is not None:
@@ -271,8 +291,27 @@ class ServeEngine:
                 lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), cache0)
             shardings = to_named(paged_cache_specs(cfg, abstract, self.mesh),
                                  self.mesh)
-            self.params = jax.device_put(
-                self.params, NamedSharding(self.mesh, PartitionSpec()))
+            if self.tp:
+                # weight tensor parallelism: rules chosen by Auto
+                # Distribution's SBP cost model, matched against the param
+                # paths, device_put per-leaf — see param_sharding.py
+                param_sharding.validate_tp_divisibility(cfg, n_tp)
+                abstract_p = jax.tree.map(
+                    lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                    self.params)
+                self.tp_rules = param_sharding.choose_tp_rules(cfg, n_tp)
+                pspecs, self.tp_report = param_sharding.tp_param_specs(
+                    cfg, abstract_p, n_tp, rules=self.tp_rules)
+                self.params = jax.device_put(
+                    self.params, to_named(pspecs, self.mesh))
+            else:
+                self.params = jax.device_put(
+                    self.params, NamedSharding(self.mesh, PartitionSpec()))
+        self._tp_reduce_scatter = self.tp and perf().tp_reduce_scatter
+        self.param_bytes_replicated = param_sharding.param_bytes_total(
+            self.params)
+        self.param_bytes_per_device = param_sharding.param_bytes_per_device(
+            self.params)
         device = DeviceTier(cache0, self.pool,
                             copy_block=self.fns.paged_block_copy,
                             read_block=self.fns.paged_block_read,
@@ -331,18 +370,24 @@ class ServeEngine:
         def _decode(p, c, b):
             attn_lib.set_paged_plan(self.pages_per_fetch)
             attn_lib.set_serve_mesh(self.mesh)
+            param_sharding.set_serve_tp(self.mesh if self.tp else None,
+                                        self._tp_reduce_scatter)
             try:
                 return self.fns.decode_paged(p, c, b)
             finally:
                 attn_lib.set_serve_mesh(None)
+                param_sharding.set_serve_tp(None)
 
         def _prefill(p, c, b, m_used):
             attn_lib.set_paged_plan(self.pages_per_fetch)
             attn_lib.set_serve_mesh(self.mesh)
+            param_sharding.set_serve_tp(self.mesh if self.tp else None,
+                                        self._tp_reduce_scatter)
             try:
                 return self.fns.prefill_chunk(p, c, b, m_used=m_used)
             finally:
                 attn_lib.set_serve_mesh(None)
+                param_sharding.set_serve_tp(None)
 
         self._decode_fn = jax.jit(_decode)
         # one retrace per distinct m_used (bounded by max_blocks_per_seq),
@@ -862,4 +907,8 @@ class ServeEngine:
             re_prefill_avoided=self._re_prefill_avoided,
             mesh_devices=int(self.mesh.shape.get("model", 1))
             if self.mesh is not None else 1,
+            tp_devices=int(self.mesh.shape.get("model", 1))
+            if self.tp and self.mesh is not None else 1,
+            param_bytes_per_device=self.param_bytes_per_device,
+            param_bytes_replicated=self.param_bytes_replicated,
         )

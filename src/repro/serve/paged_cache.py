@@ -185,6 +185,10 @@ class ServeMetrics:
     #                                      prefixes + restored preemptions)
     mesh_devices: int = 1                # "model"-axis width the pool is
     #                                      sharded over (1 = single device)
+    tp_devices: int = 1                  # "model"-axis width the WEIGHTS are
+    #                                      sharded over (1 = replicated)
+    param_bytes_per_device: int = 0      # bytes one device stores
+    param_bytes_replicated: int = 0      # logical (unsharded) param bytes
 
     def to_dict(self) -> Dict[str, float]:
         return dataclasses.asdict(self)
@@ -201,7 +205,11 @@ class ServeMetrics:
                 f"swap {self.swap_out_blocks} out / {self.swap_in_blocks} in, "
                 f"{self.re_prefill_avoided} prefill tokens avoided"
                 + (f" | pool sharded over {self.mesh_devices} devices"
-                   if self.mesh_devices > 1 else ""))
+                   if self.mesh_devices > 1 else "")
+                + (f" | TP x{self.tp_devices}: "
+                   f"{self.param_bytes_per_device / 1e6:.2f} MB/device of "
+                   f"{self.param_bytes_replicated / 1e6:.2f} MB params"
+                   if self.tp_devices > 1 else ""))
 
 
 def dense_equiv_blocks(max_batch: int, max_len: int, block_size: int) -> int:

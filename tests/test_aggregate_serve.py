@@ -15,6 +15,8 @@ def _point(path, t, tps, **kw):
          "preemptions": kw.get("preempt", 0)}
     if "mesh_devices" in kw:
         p["mesh_devices"] = kw["mesh_devices"]
+    if "tp_devices" in kw:
+        p["tp_devices"] = kw["tp_devices"]
     path.write_text(json.dumps(p))
     return str(path)
 
@@ -118,9 +120,30 @@ def test_sharded_points_labelled_and_excluded_from_ratchet(tmp_path):
     pts = load_points(singles + [sharded, legacy])
     assert [point_mesh(p) for p in pts] == [1, 1, 1, 1, 4]
     table = trend_table(pts)
-    assert "sharded x4" in table and table.count("single") == 4
+    assert "kv x4" in table and table.count("single") == 4
     series = single_device_points(pts)
     assert len(series) == 4
+    assert suggest_floor(series) == pytest.approx(0.8 * 500.0)
+
+
+def test_tp_points_labelled_and_excluded_from_ratchet(tmp_path):
+    """Tensor-parallel points (weights sharded, bench_serve --tp N) get
+    their own 'tp xN' label — distinct from KV-pool-only 'kv xN' — and,
+    like all sharded points, never enter the single-device ratchet."""
+    from benchmarks.aggregate_serve import (point_sharded, point_tp,
+                                            single_device_points)
+    singles = [_point(tmp_path / f"s{i}.json", float(i), 500.0)
+               for i in range(3)]
+    kv_only = _point(tmp_path / "kv.json", 10.0, 800.0, mesh_devices=4)
+    tp = _point(tmp_path / "tp.json", 11.0, 900.0, mesh_devices=4,
+                tp_devices=4)
+    pts = load_points(singles + [kv_only, tp])
+    assert [point_tp(p) for p in pts] == [1, 1, 1, 1, 4]
+    assert point_sharded(pts[-1])
+    table = trend_table(pts)
+    assert "tp x4" in table and "kv x4" in table
+    series = single_device_points(pts)
+    assert len(series) == 3
     assert suggest_floor(series) == pytest.approx(0.8 * 500.0)
 
 
