@@ -80,8 +80,9 @@ def load_points(paths: List[str],
     return points
 
 
-EMPTY_ROW = ("| – | – | – | – | – | – | – | – | – | no trajectory points "
-             "yet — run benchmarks.bench_serve or download CI artifacts |")
+EMPTY_ROW = ("| – | – | – | – | – | – | – | – | – | – | – | no trajectory "
+             "points yet — run benchmarks.bench_serve or download CI "
+             "artifacts |")
 
 
 def point_mesh(p: Dict) -> int:
@@ -139,9 +140,11 @@ def trend_table(points: List[Dict]) -> str:
     empty history renders one explanatory row rather than nothing."""
     lines = [
         "| # | unix_time | mode | mesh | tok/s | ttft p50/p99 ms "
-        "| itl p50/p99 ms | pool_peak | preempt | point |",
+        "| itl p50/p99 ms | shed/exp/err | goodput | pool_peak | preempt "
+        "| point |",
         "|---|-----------|------|------|-------|-----------------"
-        "|----------------|-----------|---------|-------|",
+        "|----------------|--------------|---------|-----------|---------"
+        "|-------|",
     ]
     if not points:
         return "\n".join(lines + [EMPTY_ROW])
@@ -157,6 +160,17 @@ def trend_table(points: List[Dict]) -> str:
         pool = f"{p['peak_pool_utilization']:.3f}" \
             if "peak_pool_utilization" in p else "–"
         preempt = str(p["preemptions"]) if "preemptions" in p else "–"
+        # fault-tolerance columns (PR 8): history predating them renders
+        # blank dashes, never crashes
+        if any(k in p for k in ("requests_shed", "requests_expired",
+                                "requests_errored")):
+            outcomes = (f"{p.get('requests_shed', 0)}/"
+                        f"{p.get('requests_expired', 0)}/"
+                        f"{p.get('requests_errored', 0)}")
+        else:
+            outcomes = "–"
+        goodput = f"{p['goodput_tokens_per_sec']:.1f}" \
+            if "goodput_tokens_per_sec" in p else "–"
         lines.append(
             f"| {i} | {p.get('unix_time', 0):.0f} "
             f"| {mode} "
@@ -164,6 +178,8 @@ def trend_table(points: List[Dict]) -> str:
             f"| {p.get('tokens_per_sec', 0):.1f} "
             f"| {_lat_cell(p, 'ttft_p50_ms', 'ttft_p99_ms', 'ttft_mean_s')} "
             f"| {_lat_cell(p, 'itl_p50_ms', 'itl_p99_ms', 'itl_mean_s')} "
+            f"| {outcomes} "
+            f"| {goodput} "
             f"| {pool} "
             f"| {preempt} "
             f"| {p['_path']} |")

@@ -215,9 +215,12 @@ OPEN_LOOP_REQUESTS = 16      # --quick; the full run triples it
 
 async def _sse_request(host: str, port: int, payload: dict):
     """One streamed /v1/completions over a raw socket.  Returns
-    (ttft_s, itl_samples_s, n_tokens, finish_reason) — timing is measured
-    from the moment the request bytes are flushed, so TTFT includes the
-    gateway's queueing + admission + prefill, exactly what a caller sees."""
+    (ttft_s, itl_samples_s, n_tokens, finish_reason, wall_s) — timing is
+    measured from the moment the request bytes are flushed, so TTFT includes
+    the gateway's queueing + admission + prefill, exactly what a caller
+    sees.  A load-shed 429/503 comes back as finish ``"shed"`` (any other
+    non-200 as ``"http_<status>"``) so open-loop accounting can tell
+    refused work from completed work."""
     import asyncio
     import json as _json
 
@@ -230,7 +233,13 @@ async def _sse_request(host: str, port: int, payload: dict):
             + f"Content-Length: {len(body)}\r\n\r\n".encode() + body)
         await writer.drain()
         t0 = time.monotonic()
-        await reader.readuntil(b"\r\n\r\n")          # response headers
+        status_line = await reader.readline()        # HTTP/1.1 <code> ...
+        parts = status_line.split()
+        status = int(parts[1]) if len(parts) > 1 else 0
+        await reader.readuntil(b"\r\n\r\n")          # rest of the headers
+        if status != 200:
+            finish = "shed" if status in (429, 503) else f"http_{status}"
+            return None, [], 0, finish, time.monotonic() - t0
         ttft = None
         stamps = []
         n_tokens = 0
@@ -259,7 +268,7 @@ async def _sse_request(host: str, port: int, payload: dict):
             if choice.get("finish_reason"):
                 finish = choice["finish_reason"]
         itls = [b - a for a, b in zip(stamps, stamps[1:])]
-        return ttft, itls, n_tokens, finish
+        return ttft, itls, n_tokens, finish, time.monotonic() - t0
     finally:
         writer.close()
         try:
@@ -269,9 +278,15 @@ async def _sse_request(host: str, port: int, payload: dict):
 
 
 def run_open_loop(quick: bool = False, qps: float = OPEN_LOOP_QPS,
-                  n_requests: int = 0, seed: int = 0) -> dict:
+                  n_requests: int = 0, seed: int = 0,
+                  deadline_ms: float = 0.0) -> dict:
     """Boot the gateway in-process, replay the serve workload as Poisson
-    arrivals at ``qps``, and return a BENCH_latency.json point."""
+    arrivals at ``qps``, and return a BENCH_latency.json point.
+
+    ``deadline_ms`` > 0 attaches a per-request ``timeout`` so the engine's
+    deadline reaper is part of the measured system; the point then reports
+    **goodput** (tokens of requests that completed within their deadline)
+    alongside raw delivered throughput, plus shed/expired/errored tallies."""
     import asyncio
 
     import numpy as np
@@ -306,11 +321,14 @@ def run_open_loop(quick: bool = False, qps: float = OPEN_LOOP_QPS,
                 await asyncio.sleep(float(arrivals[i]))
                 r = reqs[i]
                 sp = r.sampling
-                return await _sse_request(gw.host, gw.port, {
+                payload = {
                     "model": cfg.name, "prompt": r.prompt,
                     "max_tokens": r.max_new, "stream": True,
                     "temperature": sp.temperature, "top_k": sp.top_k,
-                    "seed": sp.seed})
+                    "seed": sp.seed}
+                if deadline_ms > 0:
+                    payload["timeout"] = deadline_ms / 1e3
+                return await _sse_request(gw.host, gw.port, payload)
 
             results = await asyncio.gather(*[one(i) for i in range(n)])
             wall = time.monotonic() - t_start
@@ -321,6 +339,13 @@ def run_open_loop(quick: bool = False, qps: float = OPEN_LOOP_QPS,
     itls = [x for r in results for x in r[1]]
     total_tokens = sum(r[2] for r in results)
     completed = sum(1 for r in results if r[3] in ("stop", "length"))
+    shed = sum(1 for r in results if r[3] == "shed")
+    expired = sum(1 for r in results if r[3] == "expired")
+    errored = sum(1 for r in results
+                  if r[3].startswith(("error", "http_")))
+    # goodput: only tokens of requests that actually completed count —
+    # work burned on expired/errored streams is throughput, not goodput
+    good_tokens = sum(r[2] for r in results if r[3] in ("stop", "length"))
 
     def pct(xs, q):
         return float(np.percentile(xs, q)) if xs else 0.0
@@ -332,12 +357,17 @@ def run_open_loop(quick: bool = False, qps: float = OPEN_LOOP_QPS,
         "qps": qps,
         "requests": n,
         "completed": completed,
+        "requests_shed": shed,
+        "requests_expired": expired,
+        "requests_errored": errored,
+        "deadline_ms": deadline_ms,
         "mesh_devices": 1,
         "workload": {"requests": n, "max_batch": MAX_BATCH,
                      "max_len": MAX_LEN, "block_size": BLOCK_SIZE,
                      "arch": cfg.name, "quick": quick, "qps": qps},
         "wall_s": wall,
         "tokens_per_sec": total_tokens / wall if wall > 0 else 0.0,
+        "goodput_tokens_per_sec": good_tokens / wall if wall > 0 else 0.0,
         "ttft_mean_s": float(np.mean(ttfts)) if ttfts else 0.0,
         "ttft_p50_ms": pct(ttfts, 50) * 1e3,
         "ttft_p99_ms": pct(ttfts, 99) * 1e3,
@@ -347,13 +377,25 @@ def run_open_loop(quick: bool = False, qps: float = OPEN_LOOP_QPS,
     }
 
 
-def check_latency(point: dict, baseline: Optional[dict] = None) -> List[str]:
-    """Open-loop acceptance: everything finished, latency was recorded, and
-    the committed SLO ceilings (when given) held."""
+def check_latency(point: dict, baseline: Optional[dict] = None,
+                  faulty: bool = False) -> List[str]:
+    """Open-loop acceptance: everything reached a terminal outcome, latency
+    was recorded, and the committed SLO ceilings (when given) held.
+    ``faulty`` relaxes the all-completed check to all-*terminal* — under
+    injected faults or tight deadlines some requests legitimately end shed/
+    expired/errored, but none may vanish."""
     errs = []
-    if point["completed"] != point["requests"]:
+    terminal = point["completed"] + point.get("requests_shed", 0) \
+        + point.get("requests_expired", 0) + point.get("requests_errored", 0)
+    if terminal != point["requests"]:
+        errs.append(f"only {terminal}/{point['requests']} open-loop "
+                    "requests reached a terminal outcome")
+    if not faulty and point["completed"] != point["requests"]:
         errs.append(f"only {point['completed']}/{point['requests']} "
                     "open-loop requests completed")
+    if faulty and point["completed"] == 0:
+        errs.append("no open-loop request completed under faults "
+                    "(zero goodput)")
     if not point["ttft_p50_ms"] > 0:
         errs.append("no TTFT samples recorded")
     if point["requests"] > 1 and not point["itl_p50_ms"] > 0:
@@ -478,6 +520,10 @@ def cli() -> int:
     ap.add_argument("--requests", type=int, default=0,
                     help="open-loop request count override (0 = workload "
                          "default)")
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="open-loop per-request deadline (engine reaper); "
+                         "0 = none.  Relaxes the all-completed gate to "
+                         "all-terminal and reports goodput")
     args = ap.parse_args()
 
     mesh_n = max(args.mesh, args.tp)
@@ -494,21 +540,27 @@ def cli() -> int:
         out = args.out if args.out != "BENCH_serve.json" \
             else "BENCH_latency.json"
         point = run_open_loop(quick=args.quick, qps=args.qps,
-                              n_requests=args.requests)
+                              n_requests=args.requests,
+                              deadline_ms=args.deadline_ms)
         with open(out, "w") as f:
             json.dump(point, f, indent=2)
         print(f"open-loop @ {point['qps']:g} qps over {point['requests']} "
-              f"requests ({point['completed']} completed): "
+              f"requests ({point['completed']} completed, "
+              f"{point['requests_shed']} shed / {point['requests_expired']} "
+              f"expired / {point['requests_errored']} errored): "
               f"TTFT p50/p99 {point['ttft_p50_ms']:.1f}/"
               f"{point['ttft_p99_ms']:.1f}ms, ITL p50/p99 "
               f"{point['itl_p50_ms']:.1f}/{point['itl_p99_ms']:.1f}ms, "
-              f"{point['tokens_per_sec']:.1f} delivered tok/s")
+              f"{point['tokens_per_sec']:.1f} delivered tok/s "
+              f"({point['goodput_tokens_per_sec']:.1f} goodput)")
         print(f"latency trajectory point written to {out}")
         baseline = None
         if args.baseline:
             with open(args.baseline) as f:
                 baseline = json.load(f)
-        errs = check_latency(point, baseline)
+        import os as _os
+        faulty = args.deadline_ms > 0 or bool(_os.environ.get("REPRO_FAULT"))
+        errs = check_latency(point, baseline, faulty=faulty)
         for e in errs:
             print(f"bench_serve: FAIL: {e}", file=sys.stderr)
         return 1 if errs else 0

@@ -67,6 +67,35 @@ Knobs (defaults = the paper-faithful baseline):
           drop to ~1/n.  Equivalent to ``ServeEngine(tp=True)``; requires
           a mesh (REPRO_SERVE_MESH / ``mesh=``) and divisible
           n_heads/n_kv_heads/d_ff.
+  REPRO_SERVE_DEADLINE_MS  int (0)
+      default per-request deadline for the serve engine: a request older
+      than this (queued, active, or parked) is expired by the step-loop
+      reaper with finish_reason="expired" and its KV freed.  0 = no default
+      deadline; a per-request ``deadline_ms`` (the gateway's ``timeout``
+      body field, seconds) always overrides the knob.
+  REPRO_SERVE_MAX_QUEUE  int (0)
+      bound on the engine's admission queue.  A submit that would push the
+      queue past the bound is shed immediately (finish_reason="shed"; the
+      gateway answers 429 with Retry-After).  0 = unbounded (the default —
+      closed-loop benches rely on deep queues).
+  REPRO_SERVE_SHED_PRESSURE  float (0)
+      block-pool pressure threshold for gateway load shedding: when the
+      fraction of the pool that is used-or-reserved reaches this value AND
+      requests are already queued, new submissions are shed with 429.
+      0 = disabled (pool saturation is the *normal* operating point of a
+      well-fed engine; only enable for latency-sensitive deployments).
+  REPRO_SERVE_MAX_CRASHES  int (3)
+      consecutive step-loop crashes (each one quarantines the request it
+      blames) before the engine declares itself ``degraded`` — surfaced by
+      the gateway's /health as a 503 until a productive step succeeds.
+  REPRO_FAULT          fault-injection spec (default "": disabled)
+      e.g. "alloc:p=0.05,swap_out:after=3,step:exc=1" — see
+      repro.serve.faults.FaultInjector for the grammar.  Injects failures
+      at the entry of BlockPool.alloc, KVStore.swap_out/swap_in, and the
+      engine's prefill/decode dispatch so the recovery paths actually run
+      (the CI chaos-smoke lane drives the gateway under this knob).
+  REPRO_FAULT_SEED     int (0)
+      seed for the p= probabilistic fault rules (deterministic replay)
   REPRO_TP_REDUCE_SCATTER  0 | 1
       0 — TP weights are gathered at their use site, so decode stays
           BITWISE identical to single-device (storage scales, traffic
@@ -99,6 +128,12 @@ class PerfConfig:
     gateway_max_new: int = 128
     serve_tp: bool = False
     tp_reduce_scatter: bool = False
+    serve_deadline_ms: int = 0
+    serve_max_queue: int = 0
+    serve_shed_pressure: float = 0.0
+    serve_max_crashes: int = 3
+    fault_spec: str = ""
+    fault_seed: int = 0
 
 
 def perf() -> PerfConfig:
@@ -118,6 +153,13 @@ def perf() -> PerfConfig:
         gateway_max_new=int(os.environ.get("REPRO_GATEWAY_MAX_NEW", "128")),
         serve_tp=os.environ.get("REPRO_SERVE_TP", "0") == "1",
         tp_reduce_scatter=os.environ.get("REPRO_TP_REDUCE_SCATTER", "0") == "1",
+        serve_deadline_ms=int(os.environ.get("REPRO_SERVE_DEADLINE_MS", "0")),
+        serve_max_queue=int(os.environ.get("REPRO_SERVE_MAX_QUEUE", "0")),
+        serve_shed_pressure=float(
+            os.environ.get("REPRO_SERVE_SHED_PRESSURE", "0")),
+        serve_max_crashes=int(os.environ.get("REPRO_SERVE_MAX_CRASHES", "3")),
+        fault_spec=os.environ.get("REPRO_FAULT", ""),
+        fault_seed=int(os.environ.get("REPRO_FAULT_SEED", "0")),
     )
 
 

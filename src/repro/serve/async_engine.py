@@ -136,15 +136,24 @@ class AsyncServeEngine:
 
     # -- request API (event-loop side) -------------------------------------
     def submit(self, prompt: Sequence[int], max_new: int = 16,
-               sampling: SamplingParams = GREEDY) -> TokenStream:
+               sampling: SamplingParams = GREEDY,
+               deadline_ms: Optional[float] = None) -> TokenStream:
         """Enqueue a generation; returns its ``TokenStream`` immediately.
         The request enters the engine's admission queue at the stepper's
-        next iteration — this call never waits on a decode step."""
+        next iteration — this call never waits on a decode step.
+
+        After ``stop()`` (or a dead stepper thread) the inbox would never
+        drain, so the stream terminates immediately with
+        ``finish_reason="shutdown"`` instead of hanging its consumer."""
         assert self._loop is not None, "submit() before start()"
         rid = next(self._rids)
         req = Request(rid=rid, prompt=list(prompt), max_new=max_new,
-                      sampling=sampling)
+                      sampling=sampling, deadline_ms=deadline_ms)
         stream = TokenStream(rid, req, asyncio.Queue())
+        if self._stopping or not self.running:
+            # called on the event loop thread: enqueue the terminal directly
+            stream.queue.put_nowait((DONE, "shutdown"))
+            return stream
         with self._lock:
             self._inbox.append(("submit", stream))
         self._wake.set()
@@ -159,9 +168,11 @@ class AsyncServeEngine:
         self._wake.set()
 
     async def generate(self, prompt: Sequence[int], max_new: int = 16,
-                       sampling: SamplingParams = GREEDY) -> List[int]:
+                       sampling: SamplingParams = GREEDY,
+                       deadline_ms: Optional[float] = None) -> List[int]:
         """Submit and await the full output (the non-streaming path)."""
-        return await self.submit(prompt, max_new, sampling).drain()
+        return await self.submit(prompt, max_new, sampling,
+                                 deadline_ms=deadline_ms).drain()
 
     def stats(self) -> Dict[str, object]:
         eng = self.engine
@@ -170,6 +181,11 @@ class AsyncServeEngine:
             "live_requests": len(self._live),
             "queued": len(eng.queue),
             "running": self.running,
+            "degraded": eng.degraded,
+            "step_crashes": eng._step_crashes,
+            "requests_errored": len(eng.errored),
+            "requests_expired": len(eng.expired),
+            "requests_shed": len(eng.shed) + eng._gateway_shed,
             "pool_blocks_used": eng.pool.num_used,
             "pool_blocks": eng.pool.usable_blocks,
             "engine_steps": eng.steps,
@@ -220,17 +236,32 @@ class AsyncServeEngine:
                 self.engine.cancel(payload)   # no-op if already finished
 
     def _stepper(self) -> None:
-        while True:
-            self._drain_inbox()
-            if self._stopping:
-                break
-            worked = self.engine.step()
-            if not worked:
-                # drained: park until a submit/cancel/stop wakes us (the
-                # timeout covers a race where work arrived after step())
-                self._wake.wait(self.idle_s)
-                self._wake.clear()
-        # terminate whatever was still in flight so consumers unblock
-        for stream in list(self._live.values()):
-            self._emit(stream, (DONE, "shutdown"))
-        self._live.clear()
+        # step_guarded (not raw step) is the crash-isolation boundary: an
+        # exception inside the engine quarantines the poison request with
+        # finish_reason="error" and the loop keeps serving everyone else.
+        # The finally still runs if this thread dies some *other* way, so
+        # live streams and racing submits always get a terminal event.
+        try:
+            while True:
+                self._drain_inbox()
+                if self._stopping:
+                    break
+                worked = self.engine.step_guarded()
+                if not worked:
+                    # drained: park until a submit/cancel/stop wakes us (the
+                    # timeout covers a race where work arrived after step())
+                    self._wake.wait(self.idle_s)
+                    self._wake.clear()
+        finally:
+            # terminate whatever was still in flight so consumers unblock —
+            # including submits that raced into the inbox after the last
+            # drain (their streams were never registered with the engine)
+            with self._lock:
+                cmds = list(self._inbox)
+                self._inbox.clear()
+            for kind, payload in cmds:
+                if kind == "submit":
+                    self._emit(payload, (DONE, "shutdown"))
+            for stream in list(self._live.values()):
+                self._emit(stream, (DONE, "shutdown"))
+            self._live.clear()

@@ -66,7 +66,9 @@ makes compute follow the stored layout with one all-reduce per layer
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import sys
 import time
 from typing import Callable, Dict, List, Optional
 
@@ -82,6 +84,7 @@ from repro.models import build_model
 from repro.models import attention as attn_lib
 from repro.perf import perf
 from repro.pipeline import CompileOptions, Compiler, default_compiler
+from repro.serve.faults import FaultInjector, InjectedFault, check_kv_invariants
 from repro.serve.kv_store import (DEVICE, HOST, Block, BlockTable, DeviceTier,
                                   HostTier, KVStore)
 from repro.serve.paged_cache import (BlockPool, PoolExhausted, ServeMetrics,
@@ -122,6 +125,16 @@ class Request:
     rejected: bool = False
     cancelled: bool = False
     reject_reason: str = ""
+    # fault-tolerance terminal states (PR 8)
+    expired: bool = False       # deadline reaper killed it
+    shed: bool = False          # bounded queue refused it at submit
+    errored: bool = False       # quarantined by a step-loop crash
+    error: str = ""             # why (crash message)
+    # per-request deadline in ms from submit; None consults the
+    # REPRO_SERVE_DEADLINE_MS default, 0 disables.  The engine stamps the
+    # absolute monotonic cutoff into _deadline_at at submit time.
+    deadline_ms: Optional[float] = None
+    _deadline_at: float = 0.0
     # timing (monotonic seconds; filled in by the engine)
     t_submit: float = 0.0
     t_first: float = 0.0
@@ -142,6 +155,12 @@ class Request:
         """OpenAI-style terminal state ("" while still running)."""
         if self.cancelled:
             return "cancelled"
+        if self.expired:
+            return "expired"
+        if self.shed:
+            return "shed"
+        if self.errored:
+            return "error"
         if self.rejected:
             return "rejected"
         if self.done:
@@ -220,12 +239,21 @@ class ServeEngine:
                  compiler: Optional[Compiler] = None,
                  plan_kernels: bool = True,
                  mesh=None,
-                 tp: Optional[bool] = None):
+                 tp: Optional[bool] = None,
+                 max_queue: Optional[int] = None,
+                 fault_injector=None):
         # mesh: a jax Mesh with a "model" axis to shard the KV pool over,
         # None to consult REPRO_SERVE_MESH, or False to force single-device
         # tp: also shard the WEIGHTS over the model axis with the partition
         # rules Auto Distribution emits (param_sharding); None consults
         # REPRO_SERVE_TP.  Requires a mesh; no-op without one.
+        # max_queue: bound on the admission queue (submits past it are shed
+        # with finish_reason="shed"); None consults REPRO_SERVE_MAX_QUEUE,
+        # 0 = unbounded.
+        # fault_injector: a repro.serve.faults.FaultInjector wired into the
+        # allocator, the swap paths, and the step dispatch; None consults
+        # REPRO_FAULT, False forces off (oracle/reference engines must not
+        # inherit chaos from ambient env).
         # vlm is excluded deliberately: the paged prefill/decode path embeds
         # raw token ids with 2-D positions, which would silently degrade
         # M-RoPE + vision-embeds frontends; wiring the embeds interface
@@ -320,11 +348,37 @@ class ServeEngine:
         self.store = KVStore(device, HostTier(n_host),
                              prefix_cache_blocks=prefix_budget)
 
+        # fault tolerance: chaos injector (opt-in), bounded queue, default
+        # deadline, crash quarantine bookkeeping
+        if fault_injector is False:
+            self.faults = None
+        else:
+            self.faults = fault_injector if fault_injector is not None \
+                else FaultInjector.from_env()
+        self.pool.fault_injector = self.faults
+        self.store.fault_injector = self.faults
+        self.max_queue = perf().serve_max_queue if max_queue is None \
+            else max_queue
+        self.default_deadline_ms = perf().serve_deadline_ms
+        self.shed_pressure = perf().serve_shed_pressure
+        self.max_consecutive_crashes = max(perf().serve_max_crashes, 1)
+        self.degraded = False
+        self.invariant_violations: List[str] = []
+        self._blame_rid: Optional[int] = None    # request under the knife now
+        self._crash_rid: Optional[int] = None    # captured at raise time
+        self._consecutive_crashes = 0
+        self._step_crashes = 0
+        self._swap_failures = 0
+        self._gateway_shed = 0   # 429s the gateway refused pre-submit
+
         self.slots: List[Optional[_Active]] = [None] * max_batch
         self.queue: List[Request] = []
         self.finished: List[Request] = []
         self.rejected: List[Request] = []
         self.cancelled: List[Request] = []
+        self.expired: List[Request] = []
+        self.errored: List[Request] = []
+        self.shed: List[Request] = []
         self._parked: Dict[int, _Parked] = {}
         self.steps = 0
         self._admit_seq = 0
@@ -413,9 +467,28 @@ class ServeEngine:
         ``Request.reject_reason``) or queued until blocks free up.  The
         engine mutates ``req`` in place: ``out`` grows as tokens are
         sampled, ``done``/``rejected`` flip on completion, and the
-        ``t_submit``/``t_first``/``t_done`` stamps feed ``ServeMetrics``."""
+        ``t_submit``/``t_first``/``t_done`` stamps feed ``ServeMetrics``.
+
+        A bounded queue (``max_queue`` / REPRO_SERVE_MAX_QUEUE) sheds the
+        request instead of enqueueing it — ``finish_reason="shed"``, hooks
+        fired — so a flooded engine answers immediately rather than growing
+        an unbounded backlog.  The deadline cutoff (per-request
+        ``deadline_ms`` or the REPRO_SERVE_DEADLINE_MS default) is stamped
+        here; the step loop's reaper enforces it."""
         req.t_submit = time.monotonic()
         self._submitted += 1
+        if self.max_queue and len(self.queue) >= self.max_queue:
+            req.shed = True
+            req.done = True
+            req.t_done = req.t_submit
+            self.shed.append(req)
+            if req.on_finish is not None:
+                req.on_finish(req)
+            return
+        dl = req.deadline_ms if req.deadline_ms is not None \
+            else self.default_deadline_ms
+        if dl and dl > 0:
+            req._deadline_at = req.t_submit + dl / 1e3
         self.queue.append(req)
 
     def _reject(self, req: Request, reason: str) -> None:
@@ -502,7 +575,18 @@ class ServeEngine:
             a = _Active(req=req, table=BlockTable(self.block_size),
                         reserved_left=need, admit_seq=self._admit_seq)
             if parked is not None:
-                self._restore(a, parked)
+                try:
+                    with self._blame(req.rid):
+                        self._restore(a, parked)
+                except BaseException:
+                    # failed restore: ``a`` was never slotted, so quarantine
+                    # can't reach what it holds — release it here (req stays
+                    # at queue[0] with its remaining parked blocks; the
+                    # quarantine path drops those and fails the request)
+                    a.table.release_to(self.store)
+                    self.pool.release(a.reserved_left)
+                    a.reserved_left = 0
+                    raise
             self.slots[slot] = a
             self._admit_seq += 1
             self.queue.pop(0)
@@ -512,14 +596,29 @@ class ServeEngine:
     def _restore(self, a: _Active, parked: _Parked) -> None:
         """Re-admission of a preempted request: swap its parked blocks back
         onto the device and resume exactly where it stopped — this replaces
-        the legacy restart-from-prompt."""
-        for b in parked.blocks:
+        the legacy restart-from-prompt.
+
+        Crash-safe: blocks move out of ``parked.blocks`` only once fully
+        restored, and a swap_in/alloc failure mid-restore undoes its own
+        partial allocation before propagating — so a quarantine can release
+        ``a.table`` plus the *remaining* parked blocks without double-frees.
+        """
+        while parked.blocks:
+            b = parked.blocks[0]
             if b.tier == DEVICE:
                 a.table.blocks.append(b)       # stayed resident (shared)
             else:
                 dst = self.store.alloc(reserved=True)
                 a.reserved_left -= 1
-                a.table.blocks.append(self.store.swap_in(b, dst))
+                try:
+                    restored = self.store.swap_in(b, dst)
+                except BaseException:
+                    self.store.decref(dst)     # undo: dst never held data
+                    self.pool.reserve(1)       # re-earmark the freed block
+                    a.reserved_left += 1
+                    raise
+                a.table.blocks.append(restored)
+            parked.blocks.pop(0)
         a.next_prefill = parked.next_prefill
         a.pos = parked.pos
         # the legacy path would have re-prefilled everything written so far
@@ -534,8 +633,11 @@ class ServeEngine:
         ``a`` itself was the youngest and got preempted."""
         while True:
             if a.reserved_left > 0:
+                # alloc BEFORE decrementing: a crash inside alloc (injected
+                # or real) must leave the slot ledger matching the pool's
+                blk = self.store.alloc(reserved=True)
                 a.reserved_left -= 1
-                return self.store.alloc(reserved=True)
+                return blk
             try:
                 return self.store.alloc()
             except PoolExhausted:
@@ -567,7 +669,13 @@ class ServeEngine:
             for j, b in enumerate(parked.blocks):
                 if (b.tier == DEVICE and not b.shared
                         and self.store.host.num_free > 0):
-                    parked.blocks[j] = self.store.swap_out(b)
+                    try:
+                        parked.blocks[j] = self.store.swap_out(b)
+                    except InjectedFault:
+                        # swap faults at entry: the block is still intact on
+                        # device — skip it, pressure relief just frees less
+                        self._swap_failures += 1
+                        continue
                     freed += 1
                     if freed >= min_blocks:
                         return freed
@@ -616,9 +724,30 @@ class ServeEngine:
         # only park victims that actually hold KV: parking an empty table
         # would re-admit with a zero reservation (no backpressure) and
         # ping-pong straight back into preemption under pool pressure
+        parked: Optional[List[Block]] = None
         if self.swap_enabled and victim.table.blocks \
                 and self.store.can_swap_out(victim.table.blocks):
-            parked = [self.store.swap_out(b) for b in victim.table.blocks]
+            parked = []
+            try:
+                for b in victim.table.blocks:
+                    parked.append(self.store.swap_out(b))
+            except Exception as e:  # noqa: BLE001 — downgrade, don't crash
+                # swap failed mid-park: degrade to the legacy drop.  Faults
+                # fire at swap_out entry, so the failing block is still a
+                # live device ref; release everything parked so far plus the
+                # untouched remainder and let the request restart from its
+                # prompt — token-identical by stateless-sampling replay.
+                self._swap_failures += 1
+                print(f"serve-engine: swap_out failed parking request "
+                      f"{req.rid} ({type(e).__name__}: {e}); dropping its KV "
+                      "(legacy restart)", file=sys.stderr)
+                for b in parked:
+                    self.store.decref(b)
+                for b in victim.table.blocks[len(parked):]:
+                    self.store.decref(b)
+                victim.table.blocks = []
+                parked = None
+        if parked is not None:
             victim.table.blocks = []
             self._parked[req.rid] = _Parked(
                 blocks=parked, next_prefill=victim.next_prefill,
@@ -676,13 +805,179 @@ class ServeEngine:
                 return True
         for a in self.slots:
             if a is not None and a.req.rid == rid:
-                a.table.release_to(self.store)
-                self.pool.release(a.reserved_left)
-                a.reserved_left = 0
-                self.slots[self.slots.index(a)] = None
+                self._release_active(a)
                 self._finish_cancel(a.req)
                 return True
         return False
+
+    # -- fault tolerance ---------------------------------------------------
+    @contextlib.contextmanager
+    def _blame(self, rid: int):
+        """Attribute any exception raised in the body to request ``rid``:
+        the innermost attribution at raise time wins (captured in
+        ``_crash_rid``, read by ``_on_step_crash`` after the stack unwinds).
+        """
+        prev = self._blame_rid
+        self._blame_rid = rid
+        try:
+            yield
+        except BaseException:
+            if self._crash_rid is None:
+                self._crash_rid = rid
+            raise
+        finally:
+            self._blame_rid = prev
+
+    def _release_active(self, a: _Active) -> None:
+        """Free everything an active slot holds: table blocks back to the
+        store, reservation back to the pool, slot emptied."""
+        a.table.release_to(self.store)
+        self.pool.release(a.reserved_left)
+        a.reserved_left = 0
+        self.slots[self.slots.index(a)] = None
+
+    def _finish_expired(self, req: Request) -> None:
+        req.expired = True
+        req.done = True
+        req.t_done = time.monotonic()
+        self.expired.append(req)
+        if req.on_finish is not None:
+            req.on_finish(req)
+
+    def _fail_request(self, req: Request, msg: str) -> None:
+        """Terminal error state (quarantine outcome).  The on_finish hook is
+        guarded: a raising hook is exactly the kind of poison quarantine
+        exists to absorb, so it must not re-crash the recovery path."""
+        req.errored = True
+        req.error = msg
+        req.done = True
+        req.t_done = time.monotonic()
+        self.errored.append(req)
+        if req.on_finish is not None:
+            try:
+                req.on_finish(req)
+            except Exception as e:  # noqa: BLE001
+                print(f"serve-engine: on_finish hook raised for errored "
+                      f"request {req.rid}: {type(e).__name__}: {e}",
+                      file=sys.stderr)
+
+    def _reap_deadlines(self) -> int:
+        """Expire queued, parked, and active requests past their deadline
+        cutoff, freeing every block and reservation they hold.  Runs at the
+        top of ``step`` — before the crash-prone model dispatch — so
+        deadlines keep draining a persistently-crashing engine."""
+        now = time.monotonic()
+        n = 0
+        for req in [r for r in self.queue
+                    if r._deadline_at and now > r._deadline_at]:
+            self.queue.remove(req)
+            self._drop_parked(req.rid)   # a preempted request queues parked
+            self._finish_expired(req)
+            n += 1
+        for a in [s for s in self.slots
+                  if s is not None and s.req._deadline_at
+                  and now > s.req._deadline_at]:
+            self._release_active(a)
+            self._finish_expired(a.req)
+            n += 1
+        return n
+
+    def _quarantine(self, rid: int, msg: str) -> bool:
+        """Remove request ``rid`` from wherever it lives (queue, slot,
+        parked) and fail it with ``finish_reason="error"``, releasing its
+        device/host blocks and reservations."""
+        for i, req in enumerate(self.queue):
+            if req.rid == rid:
+                self.queue.pop(i)
+                self._drop_parked(rid)
+                self._fail_request(req, msg)
+                return True
+        for a in self.slots:
+            if a is not None and a.req.rid == rid:
+                self._release_active(a)
+                self._fail_request(a.req, msg)
+                return True
+        parked = self._parked.pop(rid, None)
+        if parked is not None:       # parked without a queue entry: cleanup
+            for b in parked.blocks:
+                self.store.decref(b)
+            return True
+        return False
+
+    def _on_step_crash(self, exc: BaseException) -> None:
+        """Recovery after ``step()`` raised: quarantine the blamed request
+        (or the youngest live one when the crash had no single owner — a
+        batched decode dispatch), count consecutive crashes toward the
+        degraded state, and assert the KV-leak invariants."""
+        self._step_crashes += 1
+        self._consecutive_crashes += 1
+        if self._consecutive_crashes >= self.max_consecutive_crashes:
+            self.degraded = True
+        rid = self._crash_rid
+        if rid is None:
+            live = [s for s in self.slots if s is not None]
+            if live:
+                rid = max(live, key=lambda s: s.admit_seq).req.rid
+        msg = f"engine step crashed: {type(exc).__name__}: {exc}"
+        print(f"serve-engine: {msg} (crash {self._step_crashes}, "
+              f"{self._consecutive_crashes} consecutive"
+              + (f"; quarantining request {rid}" if rid is not None else
+                 "; no request to blame")
+              + (", engine DEGRADED" if self.degraded else "") + ")",
+              file=sys.stderr)
+        if rid is not None:
+            self._quarantine(rid, msg)
+        violations = self.check_invariants()
+        if violations:
+            self.invariant_violations.extend(violations)
+            for v in violations:
+                print(f"serve-engine: KV-LEAK INVARIANT VIOLATED: {v}",
+                      file=sys.stderr)
+
+    def step_guarded(self) -> bool:
+        """``step()`` wrapped in crash isolation: an exception quarantines
+        the request that poisoned the batch and the loop keeps going —
+        this is what the async stepper thread drives.  Returns True after a
+        crash (recovery IS work); a clean productive step resets the
+        consecutive-crash counter and clears the degraded flag."""
+        self._crash_rid = None
+        try:
+            worked = self.step()
+        except Exception as e:  # noqa: BLE001 — isolate, quarantine, go on
+            self._on_step_crash(e)
+            return True
+        if worked:
+            self._consecutive_crashes = 0
+            self.degraded = False
+        return worked
+
+    def overload_reason(self) -> str:
+        """Why a new submit should be shed right now ("" = accept): the
+        admission queue hit its bound, or — with REPRO_SERVE_SHED_PRESSURE
+        set — the pool is pressure-saturated with a backlog already queued.
+        The gateway turns a non-empty reason into HTTP 429 + Retry-After."""
+        if self.max_queue and len(self.queue) >= self.max_queue:
+            return (f"admission queue full "
+                    f"({len(self.queue)} >= {self.max_queue})")
+        if self.shed_pressure > 0 and self.queue:
+            frac = (self.pool.usable_blocks - self.pool.available()) \
+                / self.pool.usable_blocks
+            if frac >= self.shed_pressure:
+                return (f"block pool pressure {frac:.2f} >= "
+                        f"{self.shed_pressure:g} with "
+                        f"{len(self.queue)} queued")
+        return ""
+
+    def note_gateway_shed(self) -> None:
+        """Count a request the gateway refused before submit (429)."""
+        self._gateway_shed += 1
+
+    def check_invariants(self) -> List[str]:
+        """KV-leak invariants (see ``repro.serve.faults``): every allocated
+        device/host block reachable from active+parked+prefix-registry with
+        a consistent refcount, reservation ledgers in agreement.  Empty list
+        = healthy."""
+        return check_kv_invariants(self)
 
     # -- sampling ----------------------------------------------------------
     @staticmethod
@@ -731,6 +1026,10 @@ class ServeEngine:
         if not pending:
             return False
         a = min(pending, key=lambda s: s.admit_seq)
+        with self._blame(a.req.rid):
+            return self._prefill_chunk_for(a)
+
+    def _prefill_chunk_for(self, a: _Active) -> bool:
         req, c = a.req, self.prefill_chunk_tokens
         plen = len(req.prompt)
         if a.next_prefill == 0 and not a.table.blocks:
@@ -758,6 +1057,8 @@ class ServeEngine:
         # attend only over blocks written so far, not the full table capacity
         m_used = min(blocks_for_tokens(end, self.block_size),
                      self.max_blocks_per_seq)
+        if self.faults is not None:
+            self.faults.check("step")
         self.cache, logits = self._prefill_fn(self.params, self.cache, batch,
                                               m_used=m_used)
         a.next_prefill = end
@@ -788,8 +1089,10 @@ class ServeEngine:
         # admission either can preempt (an earlier row's growth may evict a
         # later row — or the row itself, when it is the youngest)
         for a in live:
-            if a in self.slots and self._grow(a, a.pos + 1):
-                self._make_writable(a, a.pos, a.pos + 1)
+            if a in self.slots:
+                with self._blame(a.req.rid):
+                    if self._grow(a, a.pos + 1):
+                        self._make_writable(a, a.pos, a.pos + 1)
         live = [a for a in live if a in self.slots]
         if not live:
             return False
@@ -808,28 +1111,35 @@ class ServeEngine:
         batch = {"token": jnp.asarray(tok),
                  "block_tables": jnp.asarray(tables),
                  "seq_lens": jnp.asarray(lens)}
+        # the batched dispatch has no single owner: a crash here blames no
+        # rid and _on_step_crash falls back to the youngest live request
+        if self.faults is not None:
+            self.faults.check("step")
         self.cache, logits = self._decode_fn(self.params, self.cache, batch)
         logits_np = np.asarray(logits)
         now = time.monotonic()
         for i, a in rows:
             req = a.req
-            nxt = self._sample(logits_np[i], req.sampling, len(req.out))
-            req.out.append(nxt)
-            a.pos += 1
-            self._decode_tokens += 1
-            if req.on_token is not None:
-                req.on_token(nxt, len(req.out) - 1)
-            if len(req.out) >= req.max_new or a.pos >= self.max_len:
-                self._retire(a, now=now)
+            with self._blame(req.rid):
+                nxt = self._sample(logits_np[i], req.sampling, len(req.out))
+                req.out.append(nxt)
+                a.pos += 1
+                self._decode_tokens += 1
+                if req.on_token is not None:
+                    req.on_token(nxt, len(req.out) - 1)
+                if len(req.out) >= req.max_new or a.pos >= self.max_len:
+                    self._retire(a, now=now)
         return True
 
     # -- engine loop -------------------------------------------------------
     def step(self) -> bool:
-        """One engine iteration: admit, one prefill chunk, one batched decode
-        step.  Returns False when there is nothing left to do."""
+        """One engine iteration: reap deadlines, admit, one prefill chunk,
+        one batched decode step.  Returns False when there is nothing left
+        to do."""
         if self._t0 is None:
             self._t0 = time.monotonic()
-        worked = self._admit() > 0
+        worked = self._reap_deadlines() > 0
+        worked = self._admit() > 0 or worked
         worked = self._prefill_step() or worked
         worked = self._decode_step() or worked
         if worked:
@@ -872,6 +1182,15 @@ class ServeEngine:
         self.finished = []
         self.rejected = []
         self.cancelled = []
+        self.expired = []
+        self.errored = []
+        self.shed = []
+        self._step_crashes = 0
+        self._consecutive_crashes = 0
+        self._swap_failures = 0
+        self._gateway_shed = 0
+        self.degraded = False
+        self.invariant_violations = []
         self.pool.peak_used = self.pool.num_used
 
     # -- metrics -----------------------------------------------------------
@@ -905,6 +1224,12 @@ class ServeEngine:
             swap_out_blocks=self.store.swapped_out,
             swap_in_blocks=self.store.swapped_in,
             re_prefill_avoided=self._re_prefill_avoided,
+            requests_expired=len(self.expired),
+            requests_shed=len(self.shed) + self._gateway_shed,
+            requests_errored=len(self.errored),
+            step_crashes=self._step_crashes,
+            swap_failures=self._swap_failures,
+            degraded=self.degraded,
             mesh_devices=int(self.mesh.shape.get("model", 1))
             if self.mesh is not None else 1,
             tp_devices=int(self.mesh.shape.get("model", 1))

@@ -34,6 +34,7 @@ from __future__ import annotations
 import asyncio
 import dataclasses
 import json
+import sys
 import time
 import uuid
 from typing import Dict, List, Optional, Sequence, Tuple, Union
@@ -167,13 +168,17 @@ class Router:
 # ---------------------------------------------------------------------------
 
 class _BadRequest(Exception):
-    def __init__(self, message: str, status: int = 400):
+    def __init__(self, message: str, status: int = 400,
+                 retry_after: Optional[int] = None):
         super().__init__(message)
         self.status = status
+        # seconds for a Retry-After header (load-shed 429/503 responses)
+        self.retry_after = retry_after
 
 
 _STATUS = {200: "OK", 400: "Bad Request", 404: "Not Found",
-           405: "Method Not Allowed", 500: "Internal Server Error"}
+           405: "Method Not Allowed", 429: "Too Many Requests",
+           500: "Internal Server Error", 503: "Service Unavailable"}
 
 
 async def _read_request(reader: asyncio.StreamReader
@@ -201,21 +206,26 @@ async def _read_request(reader: asyncio.StreamReader
 
 
 def _headers(status: int, req_id: str, content_type: str,
-             length: Optional[int] = None) -> bytes:
+             length: Optional[int] = None,
+             extra: Optional[Dict[str, str]] = None) -> bytes:
     lines = [f"HTTP/1.1 {status} {_STATUS.get(status, 'OK')}",
              f"Content-Type: {content_type}",
              f"x-request-id: {req_id}",
              "Cache-Control: no-cache",
              "Connection: close"]
+    for k, v in (extra or {}).items():
+        lines.append(f"{k}: {v}")
     if length is not None:
         lines.append(f"Content-Length: {length}")
     return ("\r\n".join(lines) + "\r\n\r\n").encode("latin-1")
 
 
 async def _send_json(writer: asyncio.StreamWriter, status: int, obj: Dict,
-                     req_id: str) -> None:
+                     req_id: str,
+                     extra: Optional[Dict[str, str]] = None) -> None:
     body = json.dumps(obj).encode("utf-8")
-    writer.write(_headers(status, req_id, "application/json", len(body)))
+    writer.write(_headers(status, req_id, "application/json", len(body),
+                          extra=extra))
     writer.write(body)
     await writer.drain()
 
@@ -251,6 +261,8 @@ class _Completion:
     stream: bool
     stops: List[str]
     echo_text: str = ""       # prompt text, for completions' echo=true
+    deadline_ms: Optional[float] = None   # request "timeout" (body field,
+    #                                       seconds) -> engine deadline
 
 
 def _parse_prompt(model: GatewayModel, prompt) -> Tuple[List[int], str]:
@@ -319,6 +331,18 @@ def _parse_body(router: Router, body: bytes, chat: bool) -> _Completion:
             not all(isinstance(s, str) for s in stops):
         raise _BadRequest("stop must be a string or list of strings")
 
+    # per-request deadline: OpenAI clients pass "timeout" in seconds; the
+    # engine-wide REPRO_SERVE_DEADLINE_MS default applies when absent
+    deadline_ms: Optional[float] = None
+    if "timeout" in d and d["timeout"] is not None:
+        try:
+            timeout_s = float(d["timeout"])
+        except (TypeError, ValueError) as e:
+            raise _BadRequest("timeout must be a number (seconds)") from e
+        if timeout_s <= 0:
+            raise _BadRequest("timeout must be > 0 seconds")
+        deadline_ms = timeout_s * 1e3
+
     sampling = SamplingParams(
         temperature=float(d.get("temperature", 0.0)),
         top_k=int(d.get("top_k", 0)),
@@ -326,7 +350,7 @@ def _parse_body(router: Router, body: bytes, chat: bool) -> _Completion:
     return _Completion(model=model, prompt_ids=prompt_ids,
                        max_tokens=max_tokens, sampling=sampling,
                        stream=bool(d.get("stream", False)), stops=stops,
-                       echo_text=echo)
+                       echo_text=echo, deadline_ms=deadline_ms)
 
 
 def _usage(prompt_tokens: int, completion_tokens: int) -> Dict:
@@ -422,13 +446,21 @@ class Gateway:
             method, path, headers, body = parsed
             await self._route(method, path, body, writer, req_id)
         except _BadRequest as e:
+            extra = {"Retry-After": str(e.retry_after)} \
+                if e.retry_after is not None else None
+            err_type = "overloaded_error" if e.status in (429, 503) \
+                else "invalid_request_error"
             try:
-                await _send_json(writer, e.status, _error(str(e)), req_id)
+                await _send_json(writer, e.status, _error(str(e), err_type),
+                                 req_id, extra=extra)
             except (ConnectionError, RuntimeError):
                 pass
         except (asyncio.IncompleteReadError, ConnectionError):
             pass  # client went away mid-request; stream handlers cancelled
         except Exception as e:  # noqa: BLE001 — one bad conn must not kill the server
+            # never swallowed silently: the operator sees what the client got
+            print(f"gateway: unhandled {type(e).__name__} serving {req_id}: "
+                  f"{e}", file=sys.stderr)
             try:
                 await _send_json(writer, 500,
                                  _error(f"{type(e).__name__}: {e}",
@@ -446,8 +478,12 @@ class Gateway:
                      writer: asyncio.StreamWriter, req_id: str) -> None:
         if path == "/health" and method == "GET":
             stats = [m.async_engine.stats() for m in self.router.models()]
-            await _send_json(writer, 200, {"status": "ok", "models": stats},
-                             req_id)
+            # non-200 when any stepper is dead or its engine crossed the
+            # consecutive-crash threshold — orchestrators key restarts on this
+            healthy = all(s["running"] and not s["degraded"] for s in stats)
+            status = "ok" if healthy else "degraded"
+            await _send_json(writer, 200 if healthy else 503,
+                             {"status": status, "models": stats}, req_id)
         elif path == "/v1/models" and method == "GET":
             await _send_json(writer, 200, {
                 "object": "list",
@@ -471,10 +507,24 @@ class Gateway:
     async def _completion(self, body: bytes, writer: asyncio.StreamWriter,
                           req_id: str, chat: bool) -> None:
         ask = _parse_body(self.router, body, chat=chat)
+        aeng = ask.model.async_engine
+        if not aeng.running:
+            raise _BadRequest("engine is not running", status=503,
+                              retry_after=1)
+        # load shedding: refuse at the door (429 + Retry-After) while the
+        # submit queue is full or the block pool is past the pressure
+        # threshold — cheaper for everyone than queueing work that will
+        # miss its deadline anyway
+        reason = aeng.engine.overload_reason()
+        if reason:
+            aeng.engine.note_gateway_shed()
+            raise _BadRequest(f"overloaded: {reason}", status=429,
+                              retry_after=1)
         req_id = ("chatcmpl-" if chat else "cmpl-") + uuid.uuid4().hex[:24]
         created = int(time.time())
-        stream = ask.model.async_engine.submit(
-            ask.prompt_ids, max_new=ask.max_tokens, sampling=ask.sampling)
+        stream = aeng.submit(
+            ask.prompt_ids, max_new=ask.max_tokens, sampling=ask.sampling,
+            deadline_ms=ask.deadline_ms)
         if ask.stream:
             await self._stream_response(ask, stream, writer, req_id, created,
                                         chat)

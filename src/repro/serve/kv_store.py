@@ -207,6 +207,10 @@ class KVStore:
         self.tiers: Dict[str, object] = {DEVICE: self.device, HOST: self.host}
         self.prefix_cache_blocks = prefix_cache_blocks
         self._prefixes: List[_PrefixEntry] = []   # oldest first (LRU order)
+        # optional chaos hook (repro.serve.faults.FaultInjector): checked at
+        # swap entry, before any tier state moves, so an injected swap fault
+        # leaves both tiers consistent (the engine downgrades or quarantines)
+        self.fault_injector = None
         # traffic counters (engine folds these into ServeMetrics)
         self.shared_blocks = 0
         self.cow_copies = 0
@@ -265,6 +269,8 @@ class KVStore:
         assert block.tier == DEVICE
         if block.shared:
             return block
+        if self.fault_injector is not None:
+            self.fault_injector.check("swap_out")
         hidx = self.host.alloc()
         self.host.write(hidx, self.device.read(block.idx))
         self.decref(block)
@@ -277,6 +283,8 @@ class KVStore:
         if block.tier == DEVICE:
             return block                      # was never swapped (shared)
         assert dst.tier == DEVICE
+        if self.fault_injector is not None:
+            self.fault_injector.check("swap_in")
         self.device.write(dst.idx, self.host.read(block.idx))
         self.decref(block)
         self.swapped_in += 1

@@ -74,6 +74,10 @@ class BlockPool:
         self._free: List[int] = list(range(num_blocks - 1, 0, -1))
         self._reserved = 0
         self.peak_used = 0
+        # optional chaos hook (repro.serve.faults.FaultInjector): checked at
+        # alloc entry, BEFORE any ledger mutation, so an injected allocator
+        # failure can never corrupt the free list it is testing
+        self.fault_injector = None
 
     # -- introspection ----------------------------------------------------
     @property
@@ -122,6 +126,8 @@ class BlockPool:
         """Pop one free block id.  ``reserved=True`` draws the block out of an
         existing reservation (the caller must have reserved it); otherwise the
         block must be available over and above all reservations."""
+        if self.fault_injector is not None:
+            self.fault_injector.check("alloc")
         if reserved:
             if self._reserved < 1:
                 raise ValueError("alloc(reserved=True) without a reservation")
@@ -183,6 +189,16 @@ class ServeMetrics:
     swap_in_blocks: int = 0              # host -> device (restore on readmission)
     re_prefill_avoided: int = 0          # prompt tokens NOT re-prefilled (shared
     #                                      prefixes + restored preemptions)
+    # fault tolerance (PR 8): terminal outcomes past the happy path
+    requests_expired: int = 0            # deadline reaper kills (queued/active)
+    requests_shed: int = 0               # load-shed submits (bounded queue /
+    #                                      gateway 429 pressure threshold)
+    requests_errored: int = 0            # quarantined by a step-loop crash
+    step_crashes: int = 0                # step() exceptions survived
+    swap_failures: int = 0               # swap_out faults downgraded to the
+    #                                      legacy drop-and-restart path
+    degraded: bool = False               # >= max consecutive crashes; /health
+    #                                      answers 503 until a clean step
     mesh_devices: int = 1                # "model"-axis width the pool is
     #                                      sharded over (1 = single device)
     tp_devices: int = 1                  # "model"-axis width the WEIGHTS are
@@ -204,6 +220,12 @@ class ServeMetrics:
                 f" | {self.shared_blocks} shared / {self.cow_copies} CoW blocks, "
                 f"swap {self.swap_out_blocks} out / {self.swap_in_blocks} in, "
                 f"{self.re_prefill_avoided} prefill tokens avoided"
+                + (f" | {self.requests_shed} shed / {self.requests_expired} "
+                   f"expired / {self.requests_errored} errored, "
+                   f"{self.step_crashes} step crashes"
+                   + (" [DEGRADED]" if self.degraded else "")
+                   if (self.requests_shed or self.requests_expired
+                       or self.requests_errored or self.step_crashes) else "")
                 + (f" | pool sharded over {self.mesh_devices} devices"
                    if self.mesh_devices > 1 else "")
                 + (f" | TP x{self.tp_devices}: "

@@ -305,6 +305,107 @@ def test_http_bad_requests(setup):
 
 
 # ---------------------------------------------------------------------------
+# fault tolerance surface: degraded health, load shedding, deadlines
+# ---------------------------------------------------------------------------
+
+def test_health_degraded_answers_503(setup):
+    """Repeated step crashes flip the engine degraded; /health must turn
+    non-200 so orchestrators can key restarts on it."""
+    cfg, fns, params = setup
+    model = _http_model(cfg, params)
+
+    async def go():
+        async with Gateway(Router([model]), port=0) as gw:
+            ok = await _raw(gw.host, gw.port, "GET", "/health")
+            model.engine.degraded = True     # what max consecutive crashes do
+            bad = await _raw(gw.host, gw.port, "GET", "/health")
+            model.engine.degraded = False
+            return ok, bad
+
+    (st_ok, _, body_ok), (st_bad, _, body_bad) = asyncio.run(go())
+    assert st_ok == 200 and json.loads(body_ok)["status"] == "ok"
+    assert st_bad == 503
+    health = json.loads(body_bad)
+    assert health["status"] == "degraded"
+    assert health["models"][0]["degraded"] is True
+
+
+def test_overloaded_gateway_sheds_with_429_and_retry_after(setup):
+    cfg, fns, params = setup
+    model = _http_model(cfg, params)
+
+    async def go():
+        async with Gateway(Router([model]), port=0) as gw:
+            model.engine.overload_reason = lambda: "admission queue full"
+            try:
+                shed = await _raw(gw.host, gw.port, "POST",
+                                  "/v1/completions",
+                                  {"model": "m", "prompt": [3, 5, 7]})
+            finally:
+                del model.engine.overload_reason
+            ok = await _raw(gw.host, gw.port, "POST", "/v1/completions",
+                            {"model": "m", "prompt": [3, 5, 7],
+                             "max_tokens": 2})
+            return shed, ok
+
+    (st, headers, body), (st_ok, _, _) = asyncio.run(go())
+    assert st == 429
+    assert headers.get("retry-after") == "1"
+    err = json.loads(body)["error"]
+    assert err["type"] == "overloaded_error"
+    assert "queue full" in err["message"]
+    assert model.engine.metrics().requests_shed == 1
+    assert st_ok == 200, "shedding one request must not poison the next"
+
+
+def test_request_timeout_field_expires_via_engine_reaper(setup):
+    cfg, fns, params = setup
+
+    async def go():
+        async with Gateway(Router([_http_model(cfg, params)]), port=0) as gw:
+            st, _, data = await _raw(
+                gw.host, gw.port, "POST", "/v1/completions",
+                {"model": "m", "prompt": [3, 5, 7], "max_tokens": 8,
+                 "stream": True, "timeout": 1e-6})
+            bad = await _raw(gw.host, gw.port, "POST", "/v1/completions",
+                             {"model": "m", "prompt": [3, 5, 7],
+                              "timeout": -1})
+            return st, data, bad
+
+    st, data, (st_bad, _, body_bad) = asyncio.run(go())
+    assert st == 200
+    chunks = _sse_chunks(data)
+    assert chunks[-1]["choices"][0]["finish_reason"] == "expired"
+    assert st_bad == 400 and b"timeout" in body_bad
+
+
+def test_stream_of_quarantined_request_ends_with_error(setup):
+    """A step crash mid-request must surface to the HTTP client as a
+    terminal finish_reason="error" SSE event, not a hung stream."""
+    from repro.serve.faults import FaultInjector
+
+    cfg, fns, params = setup
+    model = _http_model(cfg, params,
+                        fault_injector=FaultInjector.parse("step:exc=1"))
+
+    async def go():
+        async with Gateway(Router([model]), port=0) as gw:
+            return await asyncio.wait_for(
+                _raw(gw.host, gw.port, "POST", "/v1/completions",
+                     {"model": "m", "prompt": [3, 5, 7], "max_tokens": 4,
+                      "stream": True}),
+                timeout=30.0)
+
+    st, _, data = asyncio.run(go())
+    assert st == 200
+    chunks = _sse_chunks(data)
+    assert chunks[-1]["choices"][0]["finish_reason"] == "error"
+    eng = model.engine
+    assert eng.metrics().step_crashes == 1
+    assert eng.check_invariants() == []
+
+
+# ---------------------------------------------------------------------------
 # pure helpers
 # ---------------------------------------------------------------------------
 

@@ -104,6 +104,74 @@ def test_swap_out_keeps_shared_blocks_resident():
     assert store.can_swap_out([b]), "shared blocks don't consume host space"
 
 
+def test_parked_release_frees_host_blocks_keeps_registry_refs():
+    """Cancelling/expiring a parked (preempted) request decrefs its block
+    list — exactly what the engine's _drop_parked does.  Its exclusive
+    host-tier blocks must return to the host pool; a block the prefix
+    registry also holds survives with the registry's ref intact."""
+    store = make_store(num_blocks=9, block_size=4, prefix_cache_blocks=4)
+    shared = store.alloc()                # prompt block, registry-held too
+    put(store, shared, "prefix-kv")
+    assert store.register_prefix(list(range(100, 104)), [shared])
+    tail = store.alloc()                  # exclusive generation tail
+    put(store, tail, "tail-kv")
+    parked = [shared, store.swap_out(tail)]
+    assert parked[0].tier == DEVICE, "shared block pinned resident"
+    assert parked[1].tier == HOST and store.host.num_used == 1
+    # the parked holder goes away (cancel / deadline expiry)
+    for b in parked:
+        store.decref(b)
+    assert store.host.num_used == 0, "parked host blocks must be freed"
+    assert shared.refcount == 1, "registry's reference survives"
+    n, got = store.match_prefix(list(range(100, 104)))
+    assert n == 4 and got[0] is shared, "prefix stays servable"
+
+
+def test_injected_swap_faults_fire_at_entry_leaving_ledgers_clean():
+    """Fault hooks sit at operation entry, before any bookkeeping mutates:
+    a fired swap fault must leave device/host ledgers exactly as they were
+    (that's what makes the KV-leak invariants enforceable under chaos).
+    The shared-block swap_out early-return doesn't even reach the hook."""
+    from repro.serve.faults import FaultInjector, InjectedFault
+
+    store = make_store()
+    store.fault_injector = FaultInjector.parse("swap_out:exc=1,swap_in:exc=1")
+    b = store.alloc()
+    put(store, b, "kv")
+    used0, host0 = store.device.pool.num_used, store.host.num_used
+    with pytest.raises(InjectedFault):
+        store.swap_out(b)
+    assert b.tier == DEVICE and b.refcount == 1
+    assert store.device.pool.num_used == used0
+    assert store.host.num_used == host0
+    h = store.swap_out(b)                 # rule exhausted: works now
+    dst = store.alloc()
+    with pytest.raises(InjectedFault):
+        store.swap_in(h, dst)
+    assert h.tier == HOST and store.host.num_used == host0 + 1
+    assert store.swap_in(h, dst) is dst
+    assert get(store, dst) == "kv"
+    # a shared block short-circuits before the injection point
+    store.fault_injector = FaultInjector.parse("swap_out:p=1.0")
+    s = store.alloc()
+    store.fork([s])
+    assert store.swap_out(s) is s, "early-return must not consume a check"
+
+
+def test_injected_alloc_fault_leaves_pool_ledger_clean():
+    from repro.serve.faults import FaultInjector, InjectedFault
+
+    pool = BlockPool(5, 4)
+    pool.fault_injector = FaultInjector.parse("alloc:after=1")
+    blk = pool.alloc()
+    free0, reserved0 = pool.num_free, pool.num_reserved
+    with pytest.raises(InjectedFault):
+        pool.alloc()
+    assert pool.num_free == free0 and pool.num_reserved == reserved0
+    pool.free([blk, pool.alloc()])        # both allocs accounted, no leak
+    assert pool.num_used == 0
+
+
 def test_host_tier_exhaustion_and_double_free():
     store = make_store(host_blocks=1)
     a, b = store.alloc(), store.alloc()

@@ -1,0 +1,401 @@
+"""Fault-tolerant serving: seeded fault injection, crash-isolated stepping
+(quarantine + degraded health), request deadlines, bounded-queue load
+shedding, and the KV-leak invariant checker."""
+import time
+
+import jax
+import pytest
+
+from repro.configs.base import get_config, reduced_config
+from repro.models import build_model
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.faults import FaultInjector, InjectedFault, \
+    check_kv_invariants
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced_config(get_config("qwen3-0.6b"))
+    fns = build_model(cfg)
+    params = fns.init(jax.random.PRNGKey(0))
+    return cfg, fns, params
+
+
+def _engine(cfg, params, faults=False, **kw):
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("max_len", 32)
+    kw.setdefault("block_size", 4)
+    kw.setdefault("plan_kernels", False)
+    return ServeEngine(cfg, params, fault_injector=faults, **kw)
+
+
+def _run_guarded(eng, max_steps=500):
+    """Drive step_guarded until the engine drains (what the async stepper
+    thread does, minus the thread)."""
+    for _ in range(max_steps):
+        busy = eng.queue or eng._parked or \
+            any(s is not None for s in eng.slots)
+        if not busy:
+            return
+        eng.step_guarded()
+    raise AssertionError("engine did not drain")
+
+
+def _drained(eng):
+    eng.release_prefix_cache()
+    assert eng.pool.num_used == 0
+    assert eng.pool.num_reserved == 0
+    assert eng.store.host.num_used == 0
+    assert eng.check_invariants() == []
+    assert eng.invariant_violations == []
+
+
+# ---------------------------------------------------------------------------
+# FaultInjector semantics (pure Python, no engine)
+# ---------------------------------------------------------------------------
+
+def test_fault_injector_parse_rejects_bad_specs():
+    for bad in ("alloc", "alloc:p", "nosite:p=0.5", "alloc:bogus=1"):
+        with pytest.raises(ValueError):
+            FaultInjector.parse(bad)
+    fi = FaultInjector.parse("alloc:p=0.5, step:exc=2 ,")
+    assert [(r.site, r.mode, r.value) for r in fi.rules] == \
+        [("alloc", "p", 0.5), ("step", "exc", 2.0)]
+
+
+def test_fault_injector_modes_fire_deterministically():
+    fi = FaultInjector.parse("alloc:p=1.0")
+    with pytest.raises(InjectedFault) as ei:
+        fi.check("alloc")
+    assert ei.value.site == "alloc"
+    fi.check("step")                       # other sites unaffected
+
+    never = FaultInjector.parse("alloc:p=0.0")
+    for _ in range(50):
+        never.check("alloc")
+
+    after = FaultInjector.parse("swap_out:after=2")
+    after.check("swap_out")
+    after.check("swap_out")
+    with pytest.raises(InjectedFault):
+        after.check("swap_out")            # the (N+1)-th check
+    after.check("swap_out")                # exactly once
+
+    exc = FaultInjector.parse("step:exc=2")
+    for _ in range(2):
+        with pytest.raises(InjectedFault):
+            exc.check("step")
+    exc.check("step")                      # first N only
+    assert exc.counts() == {"step": {"checks": 3, "fired": 2}}
+
+
+def test_fault_injector_from_env(monkeypatch):
+    monkeypatch.delenv("REPRO_FAULT", raising=False)
+    assert FaultInjector.from_env() is None
+    monkeypatch.setenv("REPRO_FAULT", "alloc:after=1")
+    monkeypatch.setenv("REPRO_FAULT_SEED", "7")
+    fi = FaultInjector.from_env()
+    assert fi is not None and fi.seed == 7
+    assert fi.rules[0].site == "alloc"
+
+
+def test_injected_fault_is_not_pool_exhausted():
+    """An injected alloc fault models a device/allocator error — the
+    eviction/preemption ladder (which catches PoolExhausted) must NOT
+    absorb it, or chaos runs would never reach the recovery paths."""
+    from repro.serve.paged_cache import PoolExhausted
+    assert not issubclass(InjectedFault, PoolExhausted)
+
+
+# ---------------------------------------------------------------------------
+# Crash isolation: quarantine, degraded health
+# ---------------------------------------------------------------------------
+
+def test_step_crash_quarantines_poison_request_others_complete(setup):
+    """The tentpole regression: a step-loop exception fails the poisoning
+    request with finish_reason="error" and frees its blocks; everyone else
+    completes; one crash does not degrade the engine."""
+    cfg, fns, params = setup
+    eng = _engine(cfg, params,
+                  faults=FaultInjector.parse("step:exc=1"))
+    reqs = [Request(rid=i, prompt=[3 + i, 5, 7], max_new=4)
+            for i in range(3)]
+    for r in reqs:
+        eng.submit(r)
+    _run_guarded(eng)
+    errored = [r for r in reqs if r.errored]
+    assert len(errored) == 1
+    assert errored[0].finish_reason == "error"
+    assert "injected step fault" in errored[0].error
+    survivors = [r for r in reqs if not r.errored]
+    assert all(r.done and len(r.out) == 4 for r in survivors)
+    m = eng.metrics()
+    assert m.step_crashes == 1 and m.requests_errored == 1
+    assert not eng.degraded and not m.degraded
+    _drained(eng)
+
+
+def test_repeated_crashes_degrade_engine_and_idle_does_not_clear(setup):
+    cfg, fns, params = setup
+    eng = _engine(cfg, params, faults=FaultInjector.parse("step:exc=100"))
+    for i in range(3):
+        eng.submit(Request(rid=i, prompt=[3 + i, 5, 7], max_new=4))
+    _run_guarded(eng)
+    assert eng._step_crashes >= eng.max_consecutive_crashes
+    assert eng.degraded and eng.metrics().degraded
+    # an idle step is not evidence of health: degraded must stick until a
+    # step actually serves something cleanly
+    assert eng.step_guarded() is False
+    assert eng.degraded
+    _drained(eng)
+
+
+def test_clean_step_clears_degraded(setup, monkeypatch):
+    monkeypatch.setenv("REPRO_SERVE_MAX_CRASHES", "1")
+    cfg, fns, params = setup
+    eng = _engine(cfg, params, faults=FaultInjector.parse("step:exc=1"))
+    assert eng.max_consecutive_crashes == 1
+    for i in range(2):
+        eng.submit(Request(rid=i, prompt=[3 + i, 5, 7], max_new=4))
+    eng.step_guarded()                       # crash -> degraded at threshold 1
+    assert eng.degraded
+    _run_guarded(eng)                        # survivor serves cleanly
+    assert not eng.degraded
+    _drained(eng)
+
+
+def test_alloc_fault_mid_flight_quarantines_without_leaks(setup):
+    """An allocator fault during prefill/decode growth is attributed to the
+    request being grown; every request still reaches a terminal state and
+    both tiers account for every block."""
+    cfg, fns, params = setup
+    eng = _engine(cfg, params, faults=FaultInjector.parse("alloc:after=6"))
+    reqs = [Request(rid=i, prompt=[3 + i, 5, 7, 11, 13], max_new=8)
+            for i in range(3)]
+    for r in reqs:
+        eng.submit(r)
+    _run_guarded(eng)
+    assert all(r.done for r in reqs)
+    assert sum(1 for r in reqs if r.errored) >= 1
+    assert all(len(r.out) == 8 for r in reqs if not r.errored)
+    assert eng.metrics().step_crashes >= 1
+    _drained(eng)
+
+
+def test_invariant_checker_detects_manufactured_leak(setup):
+    cfg, fns, params = setup
+    eng = _engine(cfg, params)
+    assert eng.check_invariants() == []
+    leaked = eng.store.alloc()               # allocated, reachable nowhere
+    errs = check_kv_invariants(eng)
+    assert any("leaked" in e for e in errs)
+    eng.store.decref(leaked)
+    assert eng.check_invariants() == []
+
+
+# ---------------------------------------------------------------------------
+# Deadlines and load shedding
+# ---------------------------------------------------------------------------
+
+def test_deadline_expires_queued_request_before_any_work(setup):
+    cfg, fns, params = setup
+    eng = _engine(cfg, params)
+    req = Request(rid=0, prompt=[3, 5, 7], max_new=4, deadline_ms=1.0)
+    eng.submit(req)
+    time.sleep(0.01)
+    eng.step()
+    assert req.expired and req.done and req.finish_reason == "expired"
+    assert req.out == []
+    assert eng.metrics().requests_expired == 1
+    _drained(eng)
+
+
+def test_deadline_expires_active_request_and_frees_blocks(setup):
+    cfg, fns, params = setup
+    eng = _engine(cfg, params)
+    victim = Request(rid=0, prompt=[3, 5, 7], max_new=16)
+    other = Request(rid=1, prompt=[4, 6, 8], max_new=4)
+    eng.submit(victim)
+    eng.submit(other)
+    for _ in range(4):                       # admit + a few decode steps
+        eng.step()
+    assert not victim.done
+    victim._deadline_at = time.monotonic() - 1.0
+    _run_guarded(eng)
+    assert victim.expired and victim.finish_reason == "expired"
+    assert 0 < len(victim.out) < 16, "expired mid-generation"
+    assert other.done and not other.expired and len(other.out) == 4
+    _drained(eng)
+
+
+def test_default_deadline_env_applies_to_all_requests(setup, monkeypatch):
+    monkeypatch.setenv("REPRO_SERVE_DEADLINE_MS", "1")
+    cfg, fns, params = setup
+    eng = _engine(cfg, params)
+    assert eng.default_deadline_ms == 1
+    req = Request(rid=0, prompt=[3, 5, 7], max_new=4)
+    eng.submit(req)
+    assert req._deadline_at > 0
+    time.sleep(0.01)
+    eng.step()
+    assert req.expired
+
+
+def test_bounded_queue_sheds_at_submit(setup):
+    cfg, fns, params = setup
+    eng = _engine(cfg, params, max_queue=2)
+    reqs = [Request(rid=i, prompt=[3 + i, 5, 7], max_new=4)
+            for i in range(3)]
+    for r in reqs:
+        eng.submit(r)
+    assert reqs[2].shed and reqs[2].done
+    assert reqs[2].finish_reason == "shed"
+    assert len(eng.queue) == 2
+    _run_guarded(eng)
+    assert all(r.done and len(r.out) == 4 for r in reqs[:2])
+    m = eng.metrics()
+    assert m.requests_shed == 1 and m.requests_finished == 2
+    _drained(eng)
+
+
+def test_overload_reason_reports_queue_and_pressure(setup):
+    cfg, fns, params = setup
+    eng = _engine(cfg, params, max_queue=1)
+    assert eng.overload_reason() == ""
+    eng.submit(Request(rid=0, prompt=[3, 5, 7], max_new=4))
+    assert "queue full" in eng.overload_reason()
+    eng.note_gateway_shed()
+    assert eng.metrics().requests_shed == 1
+    _run_guarded(eng)
+    _drained(eng)
+
+
+# ---------------------------------------------------------------------------
+# Parked (preempted) requests: cancel / expiry must release the host tier
+# ---------------------------------------------------------------------------
+
+def _park_one(cfg, params):
+    """The preemption workload from test_serve: pool too small for both
+    generations, so the youngest gets parked on the host tier.  Steps until
+    the park actually happens and returns (engine, parked victim)."""
+    eng = ServeEngine(cfg, params, max_batch=2, max_len=32, block_size=4,
+                      num_blocks=7, admission="optimistic",
+                      plan_kernels=False, fault_injector=False)
+    reqs = [Request(rid=i, prompt=[3, 5, 7, 11 + i], max_new=16)
+            for i in range(2)]
+    for r in reqs:
+        eng.submit(r)
+    for _ in range(200):
+        if eng._parked:
+            break
+        eng.step()
+    assert eng._parked, "workload must preempt"
+    rid = next(iter(eng._parked))
+    victim = next(r for r in reqs if r.rid == rid)
+    other = next(r for r in reqs if r.rid != rid)
+    return eng, victim, other
+
+
+def test_cancel_parked_request_releases_host_blocks(setup):
+    cfg, fns, params = setup
+    eng, victim, other = _park_one(cfg, params)
+    assert eng.store.host.num_used > 0, "victim parked on the host tier"
+    assert eng.cancel(victim.rid)
+    assert victim.cancelled and victim.rid not in eng._parked
+    assert eng.store.host.num_used == 0, \
+        "cancelling a parked request must free its host-tier blocks"
+    assert eng.check_invariants() == []
+    _run_guarded(eng)
+    assert other.done and len(other.out) == 16
+    _drained(eng)
+
+
+def test_expire_parked_request_releases_host_blocks(setup):
+    cfg, fns, params = setup
+    eng, victim, other = _park_one(cfg, params)
+    assert eng.store.host.num_used > 0
+    victim._deadline_at = time.monotonic() - 1.0
+    _run_guarded(eng)
+    assert victim.expired and victim.finish_reason == "expired"
+    assert victim.rid not in eng._parked
+    assert other.done and len(other.out) == 16
+    _drained(eng)
+
+
+def test_swap_out_fault_downgrades_preemption_to_legacy_restart(setup):
+    """A swap_out fault during preemption must not kill the victim: the
+    engine falls back to drop-and-restart (stateless seeded sampling keeps
+    the output identical), counts a swap_failure, and leaks nothing."""
+    cfg, fns, params = setup
+    eng = ServeEngine(cfg, params, max_batch=2, max_len=32, block_size=4,
+                      num_blocks=7, admission="optimistic",
+                      plan_kernels=False,
+                      fault_injector=FaultInjector.parse("swap_out:p=1.0"))
+    reqs = [Request(rid=i, prompt=[3, 5, 7, 11 + i], max_new=16)
+            for i in range(2)]
+    for r in reqs:
+        eng.submit(r)
+    _run_guarded(eng)
+    assert all(r.done and not r.errored and len(r.out) == 16 for r in reqs)
+    m = eng.metrics()
+    assert m.preemptions >= 1, "workload must overcommit and preempt"
+    assert m.swap_failures >= 1, "the injected swap fault must have fired"
+    assert m.swap_out_blocks == 0, "no swap completed under p=1.0 faults"
+    # legacy restart replays the same tokens (stateless (seed,idx) sampling)
+    ref = ServeEngine(cfg, params, max_batch=1, max_len=32, block_size=4,
+                      plan_kernels=False, prefix_cache_blocks=0,
+                      fault_injector=False)
+    for r in reqs:
+        ref_req = Request(rid=r.rid, prompt=list(r.prompt), max_new=16)
+        ref.submit(ref_req)
+        ref.run_until_done()
+        assert r.out == ref_req.out, \
+            f"rid {r.rid}: swap-fault downgrade changed the output"
+
+
+# ---------------------------------------------------------------------------
+# Async engine: submit after stop must not hang
+# ---------------------------------------------------------------------------
+
+def test_submit_after_stop_terminates_stream_immediately(setup):
+    import asyncio
+
+    from repro.serve.async_engine import AsyncServeEngine
+
+    cfg, fns, params = setup
+    eng = _engine(cfg, params)
+
+    async def scenario():
+        aeng = AsyncServeEngine(eng, model_id="m")
+        await aeng.start()
+        out = await aeng.generate([3, 5, 7], max_new=4)
+        assert len(out) == 4
+        await aeng.stop()
+        stream = aeng.submit([3, 5, 7], max_new=4)
+        toks = await asyncio.wait_for(stream.drain(), timeout=5.0)
+        assert toks == [] and stream.finish_reason == "shutdown"
+
+    asyncio.run(scenario())
+
+
+# ---------------------------------------------------------------------------
+# Chaos lane (marked `chaos`: excluded from the fast lane, run by the
+# chaos-smoke CI job and the full tier-1 suite)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.chaos
+def test_chaos_lane_holds_fault_tolerance_contract():
+    """tools.chaos_smoke in-process: the open-loop gateway workload under a
+    deterministic alloc+step fault mix must end with every stream terminal,
+    zero leaked blocks on either tier, and survivors oracle-identical."""
+    from tools.chaos_smoke import run_chaos
+    from tools.gateway_smoke import Deadline
+
+    report, failures = run_chaos("alloc:p=0.1,step:exc=2", seed=1,
+                                 n_requests=6, qps=30.0,
+                                 deadline=Deadline(240.0))
+    assert failures == [], failures
+    assert sum(report["outcomes"].values()) == 6, \
+        "every request must reach a terminal outcome"
+    assert report["step_crashes"] >= 1, "the step faults must have fired"
+    assert sum(c["fired"] for c in report["fault_counts"].values()) >= 1

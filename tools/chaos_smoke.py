@@ -1,0 +1,259 @@
+"""Chaos lane: the open-loop gateway workload under injected faults.
+
+    JAX_PLATFORMS=cpu PYTHONPATH=src python -m tools.chaos_smoke \
+        --fault "alloc:p=0.05,step:exc=2" --requests 12 --out chaos_report.json
+
+Boots the same in-process gateway the open-loop latency bench uses, but
+with a seeded ``FaultInjector`` (repro.serve.faults) wired into the live
+engine's allocator, swap paths and step dispatch, then fires the serve
+workload at it as Poisson arrivals and holds the wreckage to the PR's
+fault-tolerance contract:
+
+  * **no hung streams** — every client either finishes its SSE stream or a
+    per-client deadline trips (reusing ``tools.gateway_smoke.Deadline`` for
+    the whole-run budget);
+  * **every request reaches a terminal outcome** — a finished stream
+    (``length``), a load-shed 429, or an engine-side terminal
+    (``error`` / ``expired``), never silence;
+  * **no leaked KV blocks** — after the run drains, both tiers are empty,
+    the reservation ledger is zero, and ``ServeEngine.check_invariants()``
+    (plus every violation recorded during crash recovery) is clean;
+  * **fault-free survivors are oracle-identical** — requests that ran to
+    ``length`` stream exactly the tokens a fresh fault-free
+    ``run_until_done()`` engine produces for the same request, i.e.
+    quarantine/recovery never corrupts an innocent neighbour's KV.
+
+Writes a ``chaos_report.json`` with outcome tallies, per-site fault
+counts, and any failures.  Exit status is the number of failed checks.
+The chaos-smoke CI job runs this with ``REPRO_FAULT`` exported; the spec
+is consumed from the environment (and cleared, so the oracle engine stays
+fault-free) when ``--fault`` is not given.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import Dict, List, Optional, Tuple
+
+from tools.gateway_smoke import Deadline
+
+DEFAULT_FAULT = "alloc:p=0.05,step:exc=2,swap_out:p=0.2"
+
+
+async def _sse_collect(host: str, port: int, payload: dict
+                       ) -> Tuple[List[int], str]:
+    """One streamed /v1/completions; returns (token_ids, finish_reason).
+    A load-shed 429/503 maps to finish ``"shed"``; any other non-200 to
+    ``"http_<status>"``."""
+    import asyncio
+
+    body = json.dumps(payload).encode("utf-8")
+    reader, writer = await asyncio.open_connection(host, port)
+    try:
+        writer.write(
+            b"POST /v1/completions HTTP/1.1\r\nHost: chaos\r\n"
+            b"Content-Type: application/json\r\n"
+            + f"Content-Length: {len(body)}\r\n\r\n".encode() + body)
+        await writer.drain()
+        status_line = await reader.readline()
+        parts = status_line.split()
+        status = int(parts[1]) if len(parts) > 1 else 0
+        await reader.readuntil(b"\r\n\r\n")
+        if status != 200:
+            return [], ("shed" if status in (429, 503) else f"http_{status}")
+        token_ids: List[int] = []
+        finish = ""
+        while True:
+            line = await reader.readline()
+            if not line:
+                break
+            if not line.startswith(b"data: "):
+                continue
+            data = line[len(b"data: "):].strip()
+            if data == b"[DONE]":
+                break
+            chunk = json.loads(data)
+            if "error" in chunk:
+                finish = f"rejected: {chunk['error']['message']}"
+                break
+            choice = chunk["choices"][0]
+            token_ids.extend(choice.get("token_ids") or [])
+            if choice.get("finish_reason"):
+                finish = choice["finish_reason"]
+        return token_ids, finish or "NO_TERMINAL"
+    finally:
+        writer.close()
+        try:
+            await writer.wait_closed()
+        except (ConnectionError, RuntimeError):
+            pass
+
+
+def build_engines(fault_spec: str, seed: int):
+    """(cfg, live engine with faults, fault-free oracle engine) sharing one
+    set of params, built exactly the way the open-loop bench builds its
+    engine."""
+    import jax
+
+    from benchmarks.bench_serve import BLOCK_SIZE, MAX_BATCH, MAX_LEN, \
+        _smoke_cfg
+    from repro.models import build_model
+    from repro.serve.engine import ServeEngine
+    from repro.serve.faults import FaultInjector
+
+    cfg = _smoke_cfg(0)
+    fns = build_model(cfg)
+    params = fns.init(jax.random.PRNGKey(0))
+    live = ServeEngine(cfg, params, max_batch=MAX_BATCH, max_len=MAX_LEN,
+                       block_size=BLOCK_SIZE, mesh=False,
+                       fault_injector=FaultInjector.parse(fault_spec,
+                                                          seed=seed))
+    oracle = ServeEngine(cfg, params, max_batch=MAX_BATCH, max_len=MAX_LEN,
+                         block_size=BLOCK_SIZE, mesh=False,
+                         fault_injector=False)
+    return cfg, live, oracle
+
+
+def run_chaos(fault_spec: str, seed: int, n_requests: int, qps: float,
+              deadline: Deadline) -> Tuple[Dict, List[str]]:
+    import asyncio
+
+    import numpy as np
+
+    from benchmarks.bench_serve import _workload
+    from repro.serve.async_engine import AsyncServeEngine
+    from repro.serve.gateway import (ByteTokenizer, Gateway, GatewayModel,
+                                     Router)
+
+    cfg, live, oracle_eng = build_engines(fault_spec, seed)
+
+    # oracle pass first: exact expected tokens per request AND a warm jit
+    # cache, so the chaotic run measures recovery, not compilation
+    oracle_reqs = _workload(cfg, n_requests, seed=seed)
+    for r in oracle_reqs:
+        oracle_eng.submit(r)
+    oracle_eng.run_until_done()
+    oracle_out = [list(r.out) for r in oracle_reqs]
+
+    reqs = _workload(cfg, n_requests, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    arrivals = np.cumsum(rng.exponential(1.0 / max(qps, 1e-9),
+                                         size=n_requests))
+    model = GatewayModel(model_id=cfg.name,
+                         async_engine=AsyncServeEngine(live,
+                                                       model_id=cfg.name),
+                         tokenizer=ByteTokenizer(cfg.vocab))
+
+    async def drive():
+        async with Gateway(Router([model]), port=0) as gw:
+            async def one(i: int):
+                await asyncio.sleep(float(arrivals[i]))
+                r = reqs[i]
+                sp = r.sampling
+                try:
+                    return await asyncio.wait_for(
+                        _sse_collect(gw.host, gw.port, {
+                            "model": cfg.name, "prompt": r.prompt,
+                            "max_tokens": r.max_new, "stream": True,
+                            "temperature": sp.temperature, "top_k": sp.top_k,
+                            "seed": sp.seed}),
+                        timeout=max(deadline.remaining, 1.0))
+                except asyncio.TimeoutError:
+                    return [], "HUNG"
+            return await asyncio.gather(*[one(i) for i in range(n_requests)])
+
+    results = asyncio.run(drive())
+
+    failures: List[str] = []
+    outcomes: Dict[str, int] = {}
+    for i, (ids, finish) in enumerate(results):
+        key = finish.split(":", 1)[0]
+        outcomes[key] = outcomes.get(key, 0) + 1
+        if finish == "HUNG":
+            failures.append(f"request {i}: stream hung past the deadline")
+        elif finish == "NO_TERMINAL":
+            failures.append(f"request {i}: SSE stream ended without a "
+                            "terminal event")
+        elif finish in ("length", "stop") and ids != oracle_out[i]:
+            failures.append(
+                f"request {i}: survived but diverged from the fault-free "
+                f"oracle: {ids} != {oracle_out[i]}")
+
+    # drain check: with every stream terminal, both tiers must be empty
+    live.release_prefix_cache()
+    leaks = live.check_invariants()
+    host_used = live.store.host.num_used
+    if live.pool.num_used != 0:
+        failures.append(f"{live.pool.num_used} device blocks leaked "
+                        "after drain")
+    if host_used != 0:
+        failures.append(f"{host_used} host blocks leaked after drain")
+    if live.pool.num_reserved != 0:
+        failures.append(f"reservation ledger nonzero after drain: "
+                        f"{live.pool.num_reserved}")
+    failures.extend(f"invariant violation at drain: {e}" for e in leaks)
+    failures.extend(f"invariant violation during recovery: {e}"
+                    for e in live.invariant_violations)
+
+    m = live.metrics()
+    report = {
+        "fault_spec": fault_spec,
+        "fault_seed": seed,
+        "requests": n_requests,
+        "qps": qps,
+        "unix_time": time.time(),
+        "outcomes": outcomes,
+        "fault_counts": live.faults.counts(),
+        "step_crashes": m.step_crashes,
+        "swap_failures": m.swap_failures,
+        "requests_errored": m.requests_errored,
+        "requests_expired": m.requests_expired,
+        "requests_shed": m.requests_shed,
+        "degraded": m.degraded,
+        "failures": failures,
+    }
+    return report, failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fault", default="",
+                    help="fault spec (site:mode=value,...); default: the "
+                         "REPRO_FAULT env var, else a stock chaos mix")
+    ap.add_argument("--seed", type=int,
+                    default=int(os.environ.get("REPRO_FAULT_SEED", "0")))
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--qps", type=float, default=8.0)
+    ap.add_argument("--deadline-s", type=float, default=300.0,
+                    help="whole-run wall-clock budget (0 = unlimited)")
+    ap.add_argument("--out", default="chaos_report.json")
+    args = ap.parse_args()
+
+    # consume (don't inherit) the env spec: the oracle engine and any other
+    # ServeEngine built in this process must stay fault-free
+    spec = args.fault or os.environ.pop("REPRO_FAULT", "") or DEFAULT_FAULT
+    deadline = Deadline(args.deadline_s or None)
+
+    report, failures = run_chaos(spec, args.seed, args.requests, args.qps,
+                                 deadline)
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"chaos over {args.requests} requests under {spec!r} "
+          f"(seed {args.seed}): outcomes {report['outcomes']}, "
+          f"{report['step_crashes']} step crashes, "
+          f"{report['swap_failures']} swap failures, fault counts "
+          f"{report['fault_counts']}")
+    print(f"chaos report written to {args.out}")
+    for e in failures:
+        print(f"chaos_smoke: FAIL: {e}", file=sys.stderr)
+    if not failures:
+        print("chaos_smoke: all checks passed (no hangs, no leaks, "
+              "survivors oracle-identical)")
+    return len(failures)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

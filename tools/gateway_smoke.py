@@ -34,7 +34,8 @@ import http.client
 import json
 import socket
 import sys
-from typing import List, Tuple
+import time
+from typing import List, Optional, Tuple
 from urllib.parse import urlparse
 
 # the request both sides generate: mixed sampling, long enough to cross a
@@ -42,6 +43,33 @@ from urllib.parse import urlparse
 PROMPT = [3, 5, 7, 11, 13, 17]
 MAX_TOKENS = 12
 SAMPLING = {"temperature": 0.7, "top_k": 20, "seed": 5}
+
+
+class Deadline:
+    """Whole-run wall-clock budget for a smoke client.
+
+    A wedged gateway (stream that never sends its terminal event) would
+    otherwise park the SSE read loops forever and hang the CI job until the
+    runner-level timeout.  ``check()`` raises ``TimeoutError`` the moment
+    the budget is gone; ``remaining`` doubles as a per-read socket timeout.
+    ``tools.chaos_smoke`` reuses this for its no-hung-streams assertion.
+    """
+
+    def __init__(self, seconds: Optional[float] = None):
+        self.seconds = seconds
+        self._t0 = time.monotonic()
+
+    @property
+    def remaining(self) -> float:
+        if self.seconds is None:
+            return float("inf")
+        return self.seconds - (time.monotonic() - self._t0)
+
+    def check(self, what: str) -> None:
+        if self.remaining <= 0:
+            raise TimeoutError(
+                f"wall-clock deadline of {self.seconds:.0f}s exhausted "
+                f"while {what}")
 
 
 def _get_json(host: str, port: int, path: str) -> dict:
@@ -56,8 +84,8 @@ def _get_json(host: str, port: int, path: str) -> dict:
         conn.close()
 
 
-def _stream(host: str, port: int, path: str,
-            payload: dict) -> Tuple[List[bytes], dict]:
+def _stream(host: str, port: int, path: str, payload: dict,
+            deadline: Optional[Deadline] = None) -> Tuple[List[bytes], dict]:
     """POST a streaming request; return (raw data-lines, response headers).
     Raw socket so the SSE bytes are inspected exactly as sent."""
     body = json.dumps(payload).encode()
@@ -70,6 +98,9 @@ def _stream(host: str, port: int, path: str,
         assert b" 200 " in status, f"POST {path} -> {status!r}"
         headers = {}
         while True:
+            if deadline is not None:
+                deadline.check(f"reading response headers of {path}")
+                sk.settimeout(min(60.0, max(deadline.remaining, 0.1)))
             line = f.readline()
             if line in (b"\r\n", b"\n", b""):
                 break
@@ -79,6 +110,9 @@ def _stream(host: str, port: int, path: str,
             "text/event-stream"), f"not SSE: {headers}"
         lines = []
         while True:
+            if deadline is not None:
+                deadline.check(f"reading the SSE stream of {path}")
+                sk.settimeout(min(60.0, max(deadline.remaining, 0.1)))
             line = f.readline()
             if not line:
                 break
@@ -93,11 +127,12 @@ def _stream(host: str, port: int, path: str,
 
 
 def check_completions(host: str, port: int, model_id: str,
-                      oracle: List[int]) -> List[str]:
+                      oracle: List[int],
+                      deadline: Optional[Deadline] = None) -> List[str]:
     errs = []
     lines, headers = _stream(host, port, "/v1/completions", {
         "model": model_id, "prompt": PROMPT, "max_tokens": MAX_TOKENS,
-        "stream": True, **SAMPLING})
+        "stream": True, **SAMPLING}, deadline=deadline)
     if "x-request-id" not in headers:
         errs.append("stream response missing x-request-id header")
     if lines.count(b"[DONE]") != 1 or lines[-1] != b"[DONE]":
@@ -124,11 +159,12 @@ def check_completions(host: str, port: int, model_id: str,
     return errs
 
 
-def check_chat(host: str, port: int, model_id: str) -> List[str]:
+def check_chat(host: str, port: int, model_id: str,
+               deadline: Optional[Deadline] = None) -> List[str]:
     errs = []
     lines, _ = _stream(host, port, "/v1/chat/completions", {
         "model": model_id, "stream": True, "max_tokens": 4,
-        "messages": [{"role": "user", "content": "hi"}]})
+        "messages": [{"role": "user", "content": "hi"}]}, deadline=deadline)
     if lines[-1] != b"[DONE]":
         errs.append("chat stream not [DONE]-terminated")
         return errs
@@ -170,9 +206,12 @@ def main() -> int:
     ap.add_argument("--max-batch", type=int, default=2)
     ap.add_argument("--max-len", type=int, default=64)
     ap.add_argument("--block-size", type=int, default=8)
+    ap.add_argument("--deadline-s", type=float, default=120.0,
+                    help="whole-run wall-clock budget (0 = unlimited)")
     args = ap.parse_args()
     u = urlparse(args.url)
     host, port = u.hostname, u.port or 80
+    deadline = Deadline(args.deadline_s or None)
 
     health = _get_json(host, port, "/health")
     print(f"health: {health}")
@@ -183,8 +222,12 @@ def main() -> int:
 
     oracle = build_oracle(args.arch, args.max_batch, args.max_len,
                           args.block_size)
-    errs = check_completions(host, port, model_id, oracle)
-    errs += check_chat(host, port, model_id)
+    try:
+        errs = check_completions(host, port, model_id, oracle,
+                                 deadline=deadline)
+        errs += check_chat(host, port, model_id, deadline=deadline)
+    except (TimeoutError, socket.timeout) as e:
+        errs = [f"hung stream: {e}"]
     for e in errs:
         print(f"gateway_smoke: FAIL: {e}", file=sys.stderr)
     if not errs:
