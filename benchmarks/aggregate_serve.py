@@ -71,9 +71,22 @@ def load_points(paths: List[str],
             if skipped is not None:
                 skipped.append(f"{path}: empty or unparseable JSON")
             continue
+        if p.get("bench") == "multilora":
+            # BENCH_multilora.json rides the same artifact glob: render its
+            # mixed-tenant throughput in the table (ratchet-excluded — a
+            # 5-tenant gateway workload is not single-tenant capacity)
+            p.setdefault("tokens_per_sec", p.get("mixed_tokens_per_sec", 0.0))
         if "tokens_per_sec" not in p and "ttft_p50_ms" not in p:
             raise ValueError(f"{path}: not a serve/latency trajectory point "
                              "(no tokens_per_sec or ttft_p50_ms)")
+        if p.get("qps_sweep"):
+            # a --qps-sweep artifact: the top-level point duplicates the
+            # highest-rate measurement, so render the sub-points instead —
+            # one row per swept rate IS the goodput-vs-QPS curve
+            for sub in p["qps_sweep"]:
+                sub["_path"] = f"{path}@{sub.get('qps', 0):g}qps"
+                points.append(sub)
+            continue
         p["_path"] = path
         points.append(p)
     points.sort(key=lambda p: p.get("unix_time", 0.0))
@@ -98,6 +111,12 @@ def point_open_loop(p: Dict) -> bool:
     return bool(p.get("open_loop") or p.get("bench") == "serve_latency")
 
 
+def point_multilora(p: Dict) -> bool:
+    """Whether the point came from the multi-LoRA multiplexing lane
+    (``bench_serve --multi-lora`` -> BENCH_multilora.json)."""
+    return p.get("bench") == "multilora"
+
+
 def point_tp(p: Dict) -> int:
     """A point's tensor-parallel width (devices the *weights* were sharded
     over; 1 = replicated).  Pre-TP history has no label."""
@@ -118,9 +137,10 @@ def point_sharded(p: Dict) -> bool:
 def single_device_points(points: List[Dict]) -> List[Dict]:
     """The ratchet series: only closed-loop points comparable to the
     committed single-device baseline floor (no shard_map engine of any
-    width, no open-loop latency runs)."""
+    width, no open-loop latency runs, no mixed-tenant multi-LoRA runs)."""
     return [p for p in points
-            if not point_sharded(p) and not point_open_loop(p)]
+            if not point_sharded(p) and not point_open_loop(p)
+            and not point_multilora(p)]
 
 
 def _lat_cell(p: Dict, p50_key: str, p99_key: str, mean_key: str) -> str:
@@ -155,8 +175,12 @@ def trend_table(points: List[Dict]) -> str:
             label = f"kv x{point_mesh(p)}"      # KV pool only
         else:
             label = "single"
-        mode = f"open @{p.get('qps', 0):g}qps" if point_open_loop(p) \
-            else "closed"
+        if point_multilora(p):
+            mode = f"multilora x{p.get('tenants', 0)}"
+        elif point_open_loop(p):
+            mode = f"open @{p.get('qps', 0):g}qps"
+        else:
+            mode = "closed"
         pool = f"{p['peak_pool_utilization']:.3f}" \
             if "peak_pool_utilization" in p else "–"
         preempt = str(p["preemptions"]) if "preemptions" in p else "–"
@@ -244,7 +268,12 @@ def cli() -> int:
         return 0
     singles = single_device_points(points)
     n_open = sum(1 for p in points if point_open_loop(p))
-    n_sharded = len(points) - len(singles) - n_open
+    n_multilora = sum(1 for p in points if point_multilora(p))
+    n_sharded = len(points) - len(singles) - n_open - n_multilora
+    if n_multilora:
+        print(f"\n{n_multilora} multi-LoRA point(s) labelled in the table "
+              "but excluded from the single-device ratchet series "
+              "(mixed-tenant gateway throughput is not base capacity)")
     if n_sharded:
         print(f"\n{n_sharded} mesh-sharded point(s) labelled in the table "
               "but excluded from the single-device ratchet series")

@@ -1,0 +1,20 @@
+"""Multi-LoRA multiplexing lane for ``benchmarks.run``.
+
+Thin registration shim: the implementation lives in
+``benchmarks.bench_serve`` (``run_multilora`` / ``multilora_main``) because
+it reuses the serve bench's engine builder and gateway plumbing.  Kept as
+its own module so ``benchmarks.run`` lists it as a separate lane and a
+failure here is attributed to tenant isolation, not closed-loop throughput.
+
+    PYTHONPATH=src python -m benchmarks.bench_serve --multi-lora --quick
+
+is the CLI equivalent (there is deliberately no separate bench_multilora
+CLI).
+"""
+from __future__ import annotations
+
+from benchmarks.bench_serve import multilora_main
+
+
+def main(quick: bool = False):
+    yield from multilora_main(quick=quick)

@@ -90,7 +90,7 @@ def _smoke_cfg(mesh_devices: int = 0):
 
 
 def _build_engine(mesh_devices: int = 0, params=None, sharded: bool = True,
-                  tp: bool = False):
+                  tp: bool = False, **engine_kwargs):
     import jax
 
     from repro.models import build_model
@@ -110,7 +110,8 @@ def _build_engine(mesh_devices: int = 0, params=None, sharded: bool = True,
         params = fns.init(jax.random.PRNGKey(0))
     eng = ServeEngine(cfg, params, max_batch=MAX_BATCH, max_len=MAX_LEN,
                       block_size=BLOCK_SIZE, mesh=mesh,
-                      tp=True if (tp and sharded) else None)
+                      tp=True if (tp and sharded) else None,
+                      **engine_kwargs)
     return cfg, eng, params
 
 
@@ -377,6 +378,268 @@ def run_open_loop(quick: bool = False, qps: float = OPEN_LOOP_QPS,
     }
 
 
+# ---------------------------------------------------------------------------
+# Multi-LoRA: N tenants over one shared paged base, through the live gateway
+# ---------------------------------------------------------------------------
+
+MULTILORA_TENANTS = ["tenant-a", "tenant-b", "tenant-c", "tenant-d"]
+
+
+async def _sse_collect(host: str, port: int, payload: dict):
+    """One streamed /v1/completions, returning (token_ids, model_tag,
+    finish_reason) — the multi-LoRA lane checks *which tenant* answered a
+    stream, not just how fast."""
+    import asyncio
+    import json as _json
+
+    body = _json.dumps(payload).encode("utf-8")
+    reader, writer = await asyncio.open_connection(host, port)
+    try:
+        writer.write(
+            b"POST /v1/completions HTTP/1.1\r\nHost: bench\r\n"
+            b"Content-Type: application/json\r\n"
+            + f"Content-Length: {len(body)}\r\n\r\n".encode() + body)
+        await writer.drain()
+        status_line = await reader.readline()
+        parts = status_line.split()
+        status = int(parts[1]) if len(parts) > 1 else 0
+        await reader.readuntil(b"\r\n\r\n")
+        if status != 200:
+            return [], "", f"http_{status}"
+        ids: List[int] = []
+        model_tag = ""
+        finish = ""
+        while True:
+            line = await reader.readline()
+            if not line:
+                break
+            if not line.startswith(b"data: "):
+                continue
+            data = line[len(b"data: "):].strip()
+            if data == b"[DONE]":
+                break
+            chunk = _json.loads(data)
+            if "error" in chunk:
+                finish = f"error: {chunk['error']['message']}"
+                break
+            model_tag = chunk.get("model", model_tag)
+            choice = chunk["choices"][0]
+            ids.extend(choice.get("token_ids") or [])
+            if choice.get("finish_reason"):
+                finish = choice["finish_reason"]
+        return ids, model_tag, finish
+    finally:
+        writer.close()
+        try:
+            await writer.wait_closed()
+        except (ConnectionError, RuntimeError):
+            pass
+
+
+def run_multilora(quick: bool = False, seed: int = 0) -> dict:
+    """Mixed-tenant serving through a live gateway: 4 LoRA tenants + the
+    base model multiplexed over ONE engine, ONE block pool, ONE set of base
+    weights.  Returns a ``BENCH_multilora.json`` point.
+
+    The workload is adversarial for isolation: every tenant asks the SAME
+    prompt (greedy), so any cross-tenant KV leak is observable.
+
+    * phase 1 — one identical-prompt request per tenant, empty prefix
+      registry: any prefix adoption here would necessarily be cross-tenant,
+      so the gate is ``re_prefill_avoided == 0``;
+    * phase 2 — the same five asks again: now each tenant owns a registered
+      prefix in its own namespace, so reuse MUST happen
+      (``re_prefill_avoided > 0``) and every stream must still be
+      token-identical to its phase-1 run;
+    * oracle — each tenant's stream is replayed on a fresh single-tenant
+      reference engine (same params, same adapter name -> same
+      deterministic factors) and must match token-for-token;
+    * throughput — a mixed 5-way workload is timed against a base-only
+      workload of the same size on the same engine (ratio recorded, loose
+      floor gated: per-row adapter gathers must not crater decode).
+    """
+    import asyncio
+
+    from repro.serve.async_engine import AsyncServeEngine
+    from repro.serve.gateway import (ByteTokenizer, Gateway, GatewayModel,
+                                     Router)
+
+    import numpy as np
+
+    # multi-LoRA is single-device (the engine refuses adapters on a mesh);
+    # sharded=False keeps ambient REPRO_SERVE_MESH from breaking the lane.
+    # The pool gets explicit registry headroom: conservative admission
+    # reserves max_blocks_per_seq per slot, and the default pool is sized
+    # exactly to those reservations — phase 2's adoption gate needs the 5
+    # per-tenant prefix entries (2 blocks each) to SURVIVE a full batch.
+    n_prefix = (len(MULTILORA_TENANTS) + 1) * ((16 + BLOCK_SIZE - 1)
+                                               // BLOCK_SIZE)
+    cfg, eng, params = _build_engine(
+        0, sharded=False,
+        num_blocks=MAX_BATCH * (MAX_LEN // BLOCK_SIZE) + n_prefix + 1,
+        prefix_cache_blocks=n_prefix)
+    model = GatewayModel(
+        model_id=cfg.name,
+        async_engine=AsyncServeEngine(eng, model_id=cfg.name),
+        tokenizer=ByteTokenizer(cfg.vocab),
+        adapters=list(MULTILORA_TENANTS))
+
+    rng = np.random.default_rng(seed)
+    prompt = rng.integers(1, cfg.vocab, size=16).tolist()
+    max_new = 8 if quick else 12
+    asks = [None] + list(MULTILORA_TENANTS)      # base + 4 tenants
+
+    def tag(t):
+        return cfg.name if t is None else f"{cfg.name}:{t}"
+
+    async def drive():
+        async with Gateway(Router([model]), port=0) as gw:
+            async def ask_one(t):
+                return await _sse_collect(gw.host, gw.port, {
+                    "model": tag(t), "prompt": prompt,
+                    "max_tokens": max_new, "stream": True})
+
+            # warm the jit caches (base and lora graphs), then reset
+            await ask_one(None)
+            await ask_one(MULTILORA_TENANTS[0])
+            eng.release_prefix_cache()
+            eng.reset_metrics()
+
+            # phase 1: identical prompt, one request per tenant, cold
+            # registry — any prefix hit would be cross-tenant
+            phase1 = await asyncio.gather(*[ask_one(t) for t in asks])
+            cross_tenant_hits = eng.metrics().re_prefill_avoided
+
+            # phase 2: same asks again — now reuse must happen, within
+            # namespace only, without changing a single token
+            phase2 = await asyncio.gather(*[ask_one(t) for t in asks])
+            reuse_tokens = eng.metrics().re_prefill_avoided
+
+            # throughput: mixed 5-tenant round-robin vs base-only, same
+            # size, same engine (prefixes dropped so neither is favored)
+            n_tput = 10 if quick else 20
+            eng.release_prefix_cache()
+
+            async def timed(tenants):
+                t0 = time.monotonic()
+                rs = await asyncio.gather(*[
+                    ask_one(tenants[i % len(tenants)]) for i in range(n_tput)])
+                toks = sum(len(r[0]) for r in rs)
+                return toks / max(time.monotonic() - t0, 1e-9)
+
+            base_tps = await timed([None])
+            eng.release_prefix_cache()
+            mixed_tps = await timed(asks)
+            return phase1, phase2, cross_tenant_hits, reuse_tokens, \
+                base_tps, mixed_tps
+
+    phase1, phase2, cross_hits, reuse_tokens, base_tps, mixed_tps = \
+        asyncio.run(drive())
+
+    # oracle: replay each tenant on a fresh single-tenant reference engine
+    from repro.serve.engine import Request
+    oracle_match = {}
+    for t, (ids, _, _) in zip(asks, phase1):
+        _, ref, _ = _build_engine(0, params=params, sharded=False)
+        if t is not None:
+            ref.load_adapter(t)
+        r = Request(rid=0, prompt=list(prompt), max_new=max_new, adapter_id=t)
+        ref.submit(r)
+        ref.run_until_done()
+        oracle_match[t or "base"] = (r.out == ids)
+
+    m = eng.metrics()
+    am = eng.adapters.metrics()
+    slab_cap_bytes = eng.adapters.per_adapter_bytes() \
+        * eng.adapters.max_adapters
+    distinct = len({tuple(ids) for ids, _, _ in phase1})
+    return {
+        "bench": "multilora",
+        "unix_time": time.time(),
+        "quick": quick,
+        "tenants": len(MULTILORA_TENANTS),
+        "workload": {"arch": cfg.name, "prompt_tokens": len(prompt),
+                     "max_new": max_new, "max_batch": MAX_BATCH,
+                     "block_size": BLOCK_SIZE},
+        "model_tags_ok": all(mt == tag(t)
+                             for t, (_, mt, _) in zip(asks, phase1)),
+        "streams_completed": all(f == "length"
+                                 for _, _, f in phase1 + phase2),
+        "distinct_streams": distinct,
+        "cross_tenant_prefix_hits": int(cross_hits),
+        "within_tenant_reuse_tokens": int(reuse_tokens - cross_hits),
+        "phase2_token_identical": all(
+            a[0] == b[0] for a, b in zip(phase1, phase2)),
+        "oracle_match": oracle_match,
+        "per_tenant": m.per_tenant,
+        "adapters_loaded": am["adapters_loaded"],
+        "adapter_device_bytes": am["adapter_device_bytes"],
+        "adapter_host_bytes": am["adapter_host_bytes"],
+        "adapter_slab_cap_bytes": slab_cap_bytes,
+        "base_tokens_per_sec": base_tps,
+        "mixed_tokens_per_sec": mixed_tps,
+        "mixed_vs_base_ratio": mixed_tps / max(base_tps, 1e-9),
+    }
+
+
+def check_multilora(point: dict) -> List[str]:
+    """The multi-LoRA PR's acceptance assertions, gated by the
+    ``multilora-smoke`` CI lane."""
+    errs = []
+    if not point["model_tags_ok"]:
+        errs.append("a stream's model tag did not echo the asked tenant")
+    if not point["streams_completed"]:
+        errs.append("not every tenant stream ran to completion")
+    # base + 4 tenants with distinct adapters must produce distinct streams
+    want = point["tenants"] + 1
+    if point["distinct_streams"] != want:
+        errs.append(f"only {point['distinct_streams']}/{want} distinct "
+                    "streams for an identical prompt across tenants "
+                    "(adapters not actually applied, or leaking)")
+    if point["cross_tenant_prefix_hits"] != 0:
+        errs.append(f"{point['cross_tenant_prefix_hits']} prefill tokens "
+                    "adopted across tenant namespaces (KV isolation broken)")
+    if not point["within_tenant_reuse_tokens"] > 0:
+        errs.append("no within-tenant prefix reuse on repeated prompts "
+                    "(namespacing is over-isolating)")
+    if not point["phase2_token_identical"]:
+        errs.append("prefix-reusing rerun changed tokens")
+    bad = [t for t, ok in point["oracle_match"].items() if not ok]
+    if bad:
+        errs.append(f"streams diverged from single-tenant oracle: {bad}")
+    if point["adapter_device_bytes"] > point["adapter_slab_cap_bytes"]:
+        errs.append(f"adapter slab {point['adapter_device_bytes']}B exceeds "
+                    f"its cap {point['adapter_slab_cap_bytes']}B")
+    if point["adapters_loaded"] > point["tenants"]:
+        errs.append(f"{point['adapters_loaded']} adapters resident for "
+                    f"{point['tenants']} tenants")
+    # per-row gathers cost something, but multiplexing must not crater the
+    # shared engine (generous floor: CPU interpret-mode kernels + CI noise)
+    if point["mixed_vs_base_ratio"] < 0.15:
+        errs.append(f"mixed-tenant throughput is only "
+                    f"{point['mixed_vs_base_ratio']:.1%} of base-only")
+    return errs
+
+
+def multilora_main(quick: bool = False):
+    """benchmarks.run entry for the multi-LoRA lane: one row per isolation/
+    cost headline, gated on the acceptance assertions."""
+    point = run_multilora(quick=quick)
+    errs = check_multilora(point)
+    if errs:
+        raise RuntimeError("; ".join(errs))
+    yield ("multilora_isolation", f"{point['cross_tenant_prefix_hits']}",
+           f"cross-tenant prefix hits over {point['tenants']} tenants "
+           f"({point['within_tenant_reuse_tokens']} within-tenant reuse)")
+    yield ("multilora_slab_mb",
+           f"{point['adapter_device_bytes'] / 1e6:.2f}",
+           f"{point['adapters_loaded']} adapters resident "
+           f"(cap {point['adapter_slab_cap_bytes'] / 1e6:.2f} MB)")
+    yield ("multilora_tput_ratio", f"{point['mixed_vs_base_ratio']:.3f}",
+           f"mixed {point['mixed_tokens_per_sec']:.1f} vs base "
+           f"{point['base_tokens_per_sec']:.1f} tok/s on one engine")
+
+
 def check_latency(point: dict, baseline: Optional[dict] = None,
                   faulty: bool = False) -> List[str]:
     """Open-loop acceptance: everything reached a terminal outcome, latency
@@ -517,6 +780,17 @@ def cli() -> int:
                          "benchmarks/baselines/latency.json)")
     ap.add_argument("--qps", type=float, default=OPEN_LOOP_QPS,
                     help="open-loop Poisson arrival rate")
+    ap.add_argument("--qps-sweep", default="",
+                    help="comma-separated arrival rates (e.g. 1,2,4,8): run "
+                         "the open-loop lane once per rate and write the "
+                         "goodput-vs-QPS curve into the point's qps_sweep "
+                         "list (implies --open-loop)")
+    ap.add_argument("--multi-lora", action="store_true",
+                    help="mixed-tenant multi-LoRA lane: 4 tenants + base "
+                         "through the live gateway on ONE engine; gates "
+                         "per-tenant isolation (zero cross-tenant prefix "
+                         "hits, oracle-identical streams) and throughput "
+                         "vs the shared base.  Writes BENCH_multilora.json")
     ap.add_argument("--requests", type=int, default=0,
                     help="open-loop request count override (0 = workload "
                          "default)")
@@ -532,27 +806,63 @@ def cli() -> int:
     from repro.launch.mesh import ensure_fake_pod
     ensure_fake_pod(mesh_n)
 
-    if args.open_loop:
+    if args.multi_lora:
+        if mesh_n:
+            print("bench_serve: FAIL: --multi-lora does not take --mesh/--tp"
+                  " (multi-LoRA serving is single-device)", file=sys.stderr)
+            return 2
+        out = args.out if args.out != "BENCH_serve.json" \
+            else "BENCH_multilora.json"
+        point = run_multilora(quick=args.quick)
+        with open(out, "w") as f:
+            json.dump(point, f, indent=2)
+        print(f"multi-lora: {point['tenants']} tenants + base, "
+              f"{point['cross_tenant_prefix_hits']} cross-tenant prefix "
+              f"hits, {point['within_tenant_reuse_tokens']} within-tenant "
+              f"reuse tokens, {point['adapters_loaded']} adapters resident "
+              f"({point['adapter_device_bytes'] / 1e6:.2f} MB slab <= "
+              f"{point['adapter_slab_cap_bytes'] / 1e6:.2f} MB cap), mixed "
+              f"{point['mixed_tokens_per_sec']:.1f} vs base "
+              f"{point['base_tokens_per_sec']:.1f} tok/s "
+              f"({point['mixed_vs_base_ratio']:.0%})")
+        print(f"multi-lora trajectory point written to {out}")
+        errs = check_multilora(point)
+        for e in errs:
+            print(f"bench_serve: FAIL: {e}", file=sys.stderr)
+        return 1 if errs else 0
+
+    if args.open_loop or args.qps_sweep:
         if mesh_n:
             print("bench_serve: FAIL: --open-loop does not take --mesh/--tp "
                   "(the latency lane is single-device)", file=sys.stderr)
             return 2
         out = args.out if args.out != "BENCH_serve.json" \
             else "BENCH_latency.json"
-        point = run_open_loop(quick=args.quick, qps=args.qps,
-                              n_requests=args.requests,
-                              deadline_ms=args.deadline_ms)
+        rates = [float(x) for x in args.qps_sweep.split(",") if x.strip()] \
+            if args.qps_sweep else [args.qps]
+        sweep = []
+        for q in rates:
+            sweep.append(run_open_loop(quick=args.quick, qps=q,
+                                       n_requests=args.requests,
+                                       deadline_ms=args.deadline_ms))
+        # the written point is the HIGHEST-rate measurement (the most
+        # loaded, the one an SLO ceiling should bite on) and carries the
+        # whole goodput-vs-QPS curve for aggregate_serve to render
+        point = dict(sweep[-1])
+        if len(sweep) > 1:
+            point["qps_sweep"] = sweep
         with open(out, "w") as f:
             json.dump(point, f, indent=2)
-        print(f"open-loop @ {point['qps']:g} qps over {point['requests']} "
-              f"requests ({point['completed']} completed, "
-              f"{point['requests_shed']} shed / {point['requests_expired']} "
-              f"expired / {point['requests_errored']} errored): "
-              f"TTFT p50/p99 {point['ttft_p50_ms']:.1f}/"
-              f"{point['ttft_p99_ms']:.1f}ms, ITL p50/p99 "
-              f"{point['itl_p50_ms']:.1f}/{point['itl_p99_ms']:.1f}ms, "
-              f"{point['tokens_per_sec']:.1f} delivered tok/s "
-              f"({point['goodput_tokens_per_sec']:.1f} goodput)")
+        for p in sweep:
+            print(f"open-loop @ {p['qps']:g} qps over {p['requests']} "
+                  f"requests ({p['completed']} completed, "
+                  f"{p['requests_shed']} shed / {p['requests_expired']} "
+                  f"expired / {p['requests_errored']} errored): "
+                  f"TTFT p50/p99 {p['ttft_p50_ms']:.1f}/"
+                  f"{p['ttft_p99_ms']:.1f}ms, ITL p50/p99 "
+                  f"{p['itl_p50_ms']:.1f}/{p['itl_p99_ms']:.1f}ms, "
+                  f"{p['tokens_per_sec']:.1f} delivered tok/s "
+                  f"({p['goodput_tokens_per_sec']:.1f} goodput)")
         print(f"latency trajectory point written to {out}")
         baseline = None
         if args.baseline:
@@ -560,7 +870,11 @@ def cli() -> int:
                 baseline = json.load(f)
         import os as _os
         faulty = args.deadline_ms > 0 or bool(_os.environ.get("REPRO_FAULT"))
-        errs = check_latency(point, baseline, faulty=faulty)
+        errs = []
+        for p in sweep:
+            for e in check_latency(p, baseline, faulty=faulty):
+                errs.append(f"@ {p['qps']:g} qps: {e}"
+                            if len(sweep) > 1 else e)
         for e in errs:
             print(f"bench_serve: FAIL: {e}", file=sys.stderr)
         return 1 if errs else 0

@@ -21,11 +21,11 @@ def main() -> int:
                     help="skip the real full-size qwen3 decode benchmark")
     args, _ = ap.parse_known_args()
 
-    from benchmarks import (bench_kernels, bench_latency, bench_passes,
-                            bench_serve, roofline)
+    from benchmarks import (bench_kernels, bench_latency, bench_multilora,
+                            bench_passes, bench_serve, roofline)
     modules = [("passes", bench_passes), ("kernels", bench_kernels),
                ("serve", bench_serve), ("latency", bench_latency),
-               ("roofline", roofline)]
+               ("multilora", bench_multilora), ("roofline", roofline)]
     if not args.skip_fig9:
         from benchmarks import bench_single_chip
         modules.insert(0, ("fig9", bench_single_chip))

@@ -133,6 +133,12 @@ class KernelPlan:
     # the page granularity (8) rather than the lane width — the MINLP's kv
     # tile choice survives at page resolution instead of collapsing to 128
     paged_block_kv: int = 512
+    # segmented LoRA (gather-BGMV): output-dim tile per grid step and the
+    # rank-slot granularity the adapter slab is padded to.  Rank aligns to
+    # the sublane width (8) like the page tile, not the lane width — typical
+    # LoRA ranks (8/16/32) would all collapse to one 128 tile otherwise
+    lora_block_out: int = 256
+    lora_block_rank: int = 16
 
 
 def kernel_plan(schedule: Schedule, group: int = 0) -> KernelPlan:
@@ -151,6 +157,8 @@ def kernel_plan(schedule: Schedule, group: int = 0) -> KernelPlan:
         block_q=pick("i", 512),
         block_kv=pick("l", 1024),
         paged_block_kv=pick("l", 512, align=8),
+        lora_block_out=pick("j", 256),
+        lora_block_rank=pick("k", 16, align=8),
     )
 
 
@@ -164,3 +172,20 @@ def paged_pages_per_fetch(plan: KernelPlan, block_size: int,
         return 1
     pages = max(1, plan.paged_block_kv // block_size)
     return max(1, min(pages, max_blocks_per_seq))
+
+
+def lora_tiles(plan: KernelPlan, out_dim: int, max_rank: int
+               ) -> "tuple[int, int]":
+    """Map the schedule's tiles to the segmented-LoRA kernel's granularity:
+    ``(block_out, rank_pad)``.  ``block_out`` is the output-feature tile one
+    expand grid step covers (never wider than the projection itself);
+    ``rank_pad`` is the rank-slot size adapter slabs are padded to, so a mix
+    of ranks shares one slab shape and the MINLP's contraction tile choice
+    survives at sublane resolution.  This is how the serve engine turns the
+    compiler's tiling decision into the LoRA kernel's shape instead of
+    hand-picking constants (the paged-attention analogue is
+    ``paged_pages_per_fetch``)."""
+    block_out = max(1, min(plan.lora_block_out, out_dim))
+    rank_pad = max(8, ((max_rank + plan.lora_block_rank - 1)
+                       // plan.lora_block_rank) * plan.lora_block_rank)
+    return block_out, rank_pad

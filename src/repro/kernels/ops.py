@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.flash_attention import flash_attention_kernel
+from repro.kernels.lora import lora_expand_kernel, lora_shrink_kernel
 from repro.kernels.matmul import matmul_kernel
 from repro.kernels.paged_attention import paged_attention_kernel
 from repro.kernels.rmsnorm import rmsnorm_kernel
@@ -92,6 +93,25 @@ def paged_attention_chunk(q, k_pages, v_pages, block_tables, chunk_pos,
                                interpret=_interpret())
     return o.reshape(b, kv, group, c, hd).transpose(0, 3, 1, 2, 4
                                                     ).reshape(b, c, h, hd)
+
+
+@jax.jit
+def lora_shrink(x, a_slab, idx):
+    """Segmented LoRA down-projection: x (T,d) rows each contract against
+    their *own* adapter's A matrix, selected from slab (S,d,R) by
+    idx (T,) int32 (-1 = base-only row, exact-zero output) -> (T,R) f32.
+    The gather happens inside the kernel (scalar-prefetched indices drive
+    the weight-tile DMA), never materializing per-row (d,R) copies."""
+    return lora_shrink_kernel(x, a_slab, idx, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("block_out",))
+def lora_expand(h, b_slab, idx, block_out: int = 256):
+    """Segmented LoRA up-projection: h (T,R) f32 against slab (S,R,O) by
+    per-row idx (T,) -> (T,O) in the slab dtype.  ``block_out`` tiles the
+    output features (Auto Schedule's choice via codegen.lora_tiles)."""
+    return lora_expand_kernel(h, b_slab, idx, out_dtype=b_slab.dtype,
+                              block_out=block_out, interpret=_interpret())
 
 
 @functools.partial(jax.jit, static_argnames=("eps", "block_rows"))

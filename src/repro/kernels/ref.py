@@ -79,6 +79,26 @@ def paged_attention_chunk_ref(q: jax.Array, k_pages: jax.Array,
                                                               ).astype(q.dtype)
 
 
+def lora_shrink_ref(x: jax.Array, a_slab: jax.Array, idx: jax.Array
+                    ) -> jax.Array:
+    """Dense-gather oracle for ``ops.lora_shrink``: x (T,d), a_slab (S,d,R),
+    idx (T,) int32 (-1 = no adapter) -> (T,R) f32.  Gathers each row's full
+    adapter matrix and masks no-adapter rows to exact zero."""
+    a = a_slab[jnp.maximum(idx, 0)].astype(jnp.float32)       # (T, d, R)
+    h = jnp.einsum("td,tdr->tr", x.astype(jnp.float32), a)
+    return jnp.where((idx >= 0)[:, None], h, 0.0)
+
+
+def lora_expand_ref(h: jax.Array, b_slab: jax.Array, idx: jax.Array,
+                    out_dtype=None) -> jax.Array:
+    """Dense-gather oracle for ``ops.lora_expand``: h (T,R) f32,
+    b_slab (S,R,O), idx (T,) -> (T,O)."""
+    bm = b_slab[jnp.maximum(idx, 0)].astype(jnp.float32)      # (T, R, O)
+    y = jnp.einsum("tr,tro->to", h.astype(jnp.float32), bm)
+    y = jnp.where((idx >= 0)[:, None], y, 0.0)
+    return y.astype(out_dtype or h.dtype)
+
+
 def rmsnorm_ref(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
     xf = x.astype(jnp.float32)
     var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)

@@ -246,7 +246,8 @@ def _paged_decode_attend(q, k_pages, v_pages, block_tables, seq_lens):
 
 def attention_decode_block_paged(cfg: ModelConfig, p, x: jax.Array,
                                  k_pages: jax.Array, v_pages: jax.Array,
-                                 block_tables: jax.Array, seq_lens: jax.Array):
+                                 block_tables: jax.Array, seq_lens: jax.Array,
+                                 lora: Optional[dict] = None):
     """One-token attention against a paged cache.
 
     x (B,1,d); pages (N,bs,KV,hd); block_tables (B,M); seq_lens (B,) — the
@@ -261,7 +262,7 @@ def attention_decode_block_paged(cfg: ModelConfig, p, x: jax.Array,
     because no reduction ever spans shards.
     """
     positions = seq_lens[:, None].astype(jnp.int32)
-    q, k, v = qkv_project(cfg, p, x, positions)
+    q, k, v = qkv_project(cfg, p, x, positions, lora=lora)
     mesh = _serve_shard_mesh(k_pages.shape[2], q.shape[2])
     if mesh is None:
         k_pages = paged_scatter_token(k_pages, block_tables, seq_lens, k[:, 0])
@@ -292,8 +293,11 @@ def attention_decode_block_paged(cfg: ModelConfig, p, x: jax.Array,
             check_rep=False)(q, k, v, k_pages, v_pages, block_tables, seq_lens)
     b = x.shape[0]
     from repro.distributed.sharding import weight_use
-    out = jnp.einsum("bse,ed->bsd", o.reshape(b, 1, cfg.q_dim),
-                     weight_use(p["wo"], "heads", None))
+    from repro.models import lora as lora_mod
+    oh = o.reshape(b, 1, cfg.q_dim)
+    out = lora_mod.add_delta(
+        "o", jnp.einsum("bse,ed->bsd", oh,
+                        weight_use(p["wo"], "heads", None)), oh, lora)
     return out, k_pages, v_pages
 
 
@@ -301,7 +305,8 @@ def attention_prefill_chunk_block(cfg: ModelConfig, p, x: jax.Array,
                                   k_pages: jax.Array, v_pages: jax.Array,
                                   block_table: jax.Array, chunk_pos: jax.Array,
                                   prompt_len: jax.Array,
-                                  m_used: Optional[int] = None):
+                                  m_used: Optional[int] = None,
+                                  lora: Optional[dict] = None):
     """One prompt chunk's attention against the paged cache (batch of 1).
 
     x (1,C,d); block_table (1,M); chunk_pos (C,) absolute token positions of
@@ -317,7 +322,7 @@ def attention_prefill_chunk_block(cfg: ModelConfig, p, x: jax.Array,
     blocks written so far.  Positions past the chunk are causally masked
     either way; this is purely a traffic/FLOP win.
     """
-    q, k, v = qkv_project(cfg, p, x, chunk_pos[None, :])
+    q, k, v = qkv_project(cfg, p, x, chunk_pos[None, :], lora=lora)
     bs = k_pages.shape[1]
     if m_used is not None:
         block_table = block_table[:, :min(m_used, block_table.shape[1])]
@@ -361,8 +366,11 @@ def attention_prefill_chunk_block(cfg: ModelConfig, p, x: jax.Array,
             check_rep=False)(q, k, v, k_pages, v_pages, block_table, blk,
                              off, chunk_pos)
     from repro.distributed.sharding import weight_use
-    out = jnp.einsum("bse,ed->bsd", o.reshape(1, c, cfg.q_dim),
-                     weight_use(p["wo"], "heads", None))
+    from repro.models import lora as lora_mod
+    oh = o.reshape(1, c, cfg.q_dim)
+    out = lora_mod.add_delta(
+        "o", jnp.einsum("bse,ed->bsd", oh,
+                        weight_use(p["wo"], "heads", None)), oh, lora)
     return out, k_pages, v_pages
 
 
@@ -411,17 +419,26 @@ def init_attention(cfg: ModelConfig, rng, dtype):
     return p
 
 
-def qkv_project(cfg: ModelConfig, p, x: jax.Array, positions: jax.Array):
-    """x (B,S,d) -> q (B,S,H,hd), k/v (B,S,KV,hd) with rope + qk-norm."""
+def qkv_project(cfg: ModelConfig, p, x: jax.Array, positions: jax.Array,
+                lora: Optional[dict] = None):
+    """x (B,S,d) -> q (B,S,H,hd), k/v (B,S,KV,hd) with rope + qk-norm.
+
+    ``lora`` (serve-only, see ``repro.models.lora``) adds each batch row's
+    own adapter delta to the q/k/v projections before reshape/norm/rope;
+    None (every non-serve caller) traces the exact pre-LoRA graph."""
     b, s, _ = x.shape
     hd = cfg.resolved_head_dim
     from repro.distributed.sharding import weight_use
-    q = jnp.einsum("bsd,de->bse", x, weight_use(p["wq"], None, "heads")
-                   ).reshape(b, s, cfg.n_heads, hd)
-    k = jnp.einsum("bsd,de->bse", x, weight_use(p["wk"], None, "kv")
-                   ).reshape(b, s, cfg.n_kv_heads, hd)
-    v = jnp.einsum("bsd,de->bse", x, weight_use(p["wv"], None, "kv")
-                   ).reshape(b, s, cfg.n_kv_heads, hd)
+    from repro.models import lora as lora_mod
+    q = lora_mod.add_delta("q", jnp.einsum(
+        "bsd,de->bse", x, weight_use(p["wq"], None, "heads")), x, lora
+        ).reshape(b, s, cfg.n_heads, hd)
+    k = lora_mod.add_delta("k", jnp.einsum(
+        "bsd,de->bse", x, weight_use(p["wk"], None, "kv")), x, lora
+        ).reshape(b, s, cfg.n_kv_heads, hd)
+    v = lora_mod.add_delta("v", jnp.einsum(
+        "bsd,de->bse", x, weight_use(p["wv"], None, "kv")), x, lora
+        ).reshape(b, s, cfg.n_kv_heads, hd)
     q = constrain(q, "batch", None, "heads", None)
     k = constrain(k, "batch", None, "kv", None)
     v = constrain(v, "batch", None, "kv", None)

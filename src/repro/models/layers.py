@@ -108,14 +108,19 @@ def init_mlp(cfg: ModelConfig, rng, d_ff: int, dtype):
     }
 
 
-def apply_mlp(cfg: ModelConfig, p, x: jax.Array) -> jax.Array:
+def apply_mlp(cfg: ModelConfig, p, x: jax.Array,
+              lora: Optional[dict] = None) -> jax.Array:
     from repro.distributed.sharding import weight_use
+    from repro.models import lora as lora_mod
     if cfg.act == "swiglu":
-        g = jnp.einsum("bsd,df->bsf", x, weight_use(p["wi_gate"], None, "ff"))
-        u = jnp.einsum("bsd,df->bsf", x, weight_use(p["wi_up"], None, "ff"))
+        g = lora_mod.add_delta("gate", jnp.einsum(
+            "bsd,df->bsf", x, weight_use(p["wi_gate"], None, "ff")), x, lora)
+        u = lora_mod.add_delta("up", jnp.einsum(
+            "bsd,df->bsf", x, weight_use(p["wi_up"], None, "ff")), x, lora)
         h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
     else:
-        h = jnp.einsum("bsd,df->bsf", x, weight_use(p["wi"], None, "ff"))
+        h = lora_mod.add_delta("wi", jnp.einsum(
+            "bsd,df->bsf", x, weight_use(p["wi"], None, "ff")), x, lora)
         if cfg.act == "squared_relu":
             h = jnp.square(jax.nn.relu(h.astype(jnp.float32))).astype(x.dtype)
         else:  # gelu
@@ -130,7 +135,8 @@ def apply_mlp(cfg: ModelConfig, p, x: jax.Array) -> jax.Array:
         h = constrain(h, "batch", None, "ff")
     from repro.distributed.param_sharding import tp_hidden
     h = tp_hidden(h)
-    return jnp.einsum("bsf,fd->bsd", h, weight_use(p["wo"], "ff", None))
+    return lora_mod.add_delta("down", jnp.einsum(
+        "bsf,fd->bsd", h, weight_use(p["wo"], "ff", None)), h, lora)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,66 @@
+"""Model-side multi-LoRA glue: apply each batch row's own adapter delta.
+
+The serve engine threads a ``lora`` descriptor through the paged model
+functions when (and only when) at least one adapter is loaded:
+
+    {"ids": (B,) int32 per-sequence adapter slot (-1 = base-only),
+     "slabs": {proj: {"a": (L, S, d_in, R), "b": (L, S, R, d_out)}}}
+
+The layer scan slices the leading layer axis off every slab, so inside a
+layer body ``slabs[proj]`` is ``(S, d_in, R)`` / ``(S, R, d_out)`` and the
+segmented kernels gather per-row.  When the descriptor is ``None`` (no
+tenant has an adapter) nothing here traces a single op — that structural
+absence is the ``adapter_id=None`` bitwise-identity contract, asserted by
+tests/test_multilora.py.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def split_layers(lora: Optional[dict], every: int):
+    """Reshape a full-stack descriptor's slabs for the transformer's
+    super-layer scan: returns a tuple of ``every`` per-sub-layer slab
+    stacks, each with leading axis ``n_layers // every`` (matching how
+    ``init_lm`` stacks ``params['layers']``: sub-stack ``j`` holds layers
+    ``j, every+j, ...``).  The ids stay in the scan body's closure; only
+    the slabs ride the xs."""
+    if lora is None:
+        return None
+    return tuple(
+        {p: {"a": sl["a"][j::every], "b": sl["b"][j::every]}
+         for p, sl in lora["slabs"].items()}
+        for j in range(every))
+
+
+def delta(proj: str, x: jax.Array, lora: Optional[dict]) -> jax.Array:
+    """The per-row LoRA delta for projection ``proj`` of one layer:
+    x (B, S, d_in) -> (B, S, d_out) in x.dtype, or 0 contribution when the
+    descriptor is None / doesn't adapt this projection (returns None so the
+    caller can skip the add entirely)."""
+    if lora is None or proj not in lora["slabs"]:
+        return None
+    from repro.kernels import ops
+    from repro.kernels.lora import lora_plan_block_out
+    a = lora["slabs"][proj]["a"]
+    b = lora["slabs"][proj]["b"]
+    assert a.ndim == 3, \
+        f"lora slab for {proj} must be layer-sliced (S,d,R), got {a.shape}"
+    bsz, s, d = x.shape
+    rows = x.reshape(bsz * s, d)
+    ids = jnp.repeat(lora["ids"].astype(jnp.int32), s)
+    h = ops.lora_shrink(rows, a, ids)
+    block_out = max(1, min(lora_plan_block_out(), int(b.shape[-1])))
+    y = ops.lora_expand(h, b, ids, block_out=block_out)
+    return y.reshape(bsz, s, -1).astype(x.dtype)
+
+
+def add_delta(proj: str, base: jax.Array, x: jax.Array,
+              lora: Optional[dict]) -> jax.Array:
+    """base + per-row delta(proj, x); the base array passes through
+    untouched (not even an add traced) when no LoRA is active."""
+    d = delta(proj, x, lora)
+    return base if d is None else base + d

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.distributed.sharding import constrain
 from repro.models import attention as attn
+from repro.models import lora as lora_mod
 from repro.models import moe as moe_lib
 from repro.models.layers import (
     apply_mlp, embed_tokens, init_embed, init_mlp, logits_from_hidden,
@@ -70,8 +71,12 @@ def init_lm(cfg: ModelConfig, rng) -> Dict:
 # Forward
 # ---------------------------------------------------------------------------
 
-def _ffn(cfg: ModelConfig, lp, h: jax.Array, decode: bool) -> Tuple[jax.Array, jax.Array]:
+def _ffn(cfg: ModelConfig, lp, h: jax.Array, decode: bool,
+         lora: Optional[dict] = None) -> Tuple[jax.Array, jax.Array]:
     if "moe" in lp:
+        # MoE experts are per-token routed; per-tenant deltas there would
+        # need per-(token, expert) gathers — MoE archs get attention-only
+        # LoRA (adapters.adapted_projections omits the MLP for them)
         if decode:
             from repro.perf import perf
             if perf().moe_decode == "dispatch":
@@ -79,7 +84,7 @@ def _ffn(cfg: ModelConfig, lp, h: jax.Array, decode: bool) -> Tuple[jax.Array, j
                     jnp.float32(0)
             return moe_lib.apply_moe_decode(cfg, lp["moe"], h), jnp.float32(0)
         return moe_lib.apply_moe(cfg, lp["moe"], h)
-    return apply_mlp(cfg, lp["mlp"], h), jnp.float32(0)
+    return apply_mlp(cfg, lp["mlp"], h, lora=lora), jnp.float32(0)
 
 
 def _layer_fwd(cfg: ModelConfig, lp, x: jax.Array, positions: jax.Array,
@@ -292,24 +297,36 @@ def lm_decode_step_paged(cfg: ModelConfig, params, cache: Dict, batch: Dict):
     seq_lens = batch["seq_lens"].astype(jnp.int32)
     tables = batch["block_tables"].astype(jnp.int32)
     x = embed_tokens(params["embed"], batch["token"])
+    every, k_slots, v_slots = _slot_major_split(cfg, cache)
+    # multi-LoRA: per-row adapter slot ids + stacked slabs ride the batch
+    # only when the engine has adapters loaded — absent, not even a zero-add
+    # is traced (the adapter_id=None bitwise-identity contract)
+    lora = batch.get("lora")
+    lora_ids = None if lora is None else lora["ids"].astype(jnp.int32)
+    lora_slots = lora_mod.split_layers(lora, every)
 
     def body(x, xs):
-        lps, kcs, vcs = xs
+        lps, kcs, vcs, lsl = xs if lora is not None else (*xs, None)
         new_kc, new_vc = [], []
         for i, lp in enumerate(lps):
             kc, vc = kcs[i], vcs[i]
+            ll = None if lsl is None else {"ids": lora_ids,
+                                           "slabs": lsl[i]}
             xn = rms_norm(x, lp["ln1"], cfg.norm_eps)
             o, kc, vc = attn.attention_decode_block_paged(
-                cfg, lp["attn"], xn, kc, vc, tables, seq_lens)
+                cfg, lp["attn"], xn, kc, vc, tables, seq_lens, lora=ll)
             h = x + o
-            y, _ = _ffn(cfg, lp, rms_norm(h, lp["ln2"], cfg.norm_eps), decode=True)
+            y, _ = _ffn(cfg, lp, rms_norm(h, lp["ln2"], cfg.norm_eps),
+                        decode=True, lora=ll)
             x = h + y
             new_kc.append(kc)
             new_vc.append(vc)
         return x, (tuple(new_kc), tuple(new_vc))
 
-    every, k_slots, v_slots = _slot_major_split(cfg, cache)
-    x, (new_k, new_v) = jax.lax.scan(body, x, (params["layers"], k_slots, v_slots))
+    xs = (params["layers"], k_slots, v_slots)
+    if lora is not None:
+        xs = xs + (lora_slots,)
+    x, (new_k, new_v) = jax.lax.scan(body, x, xs)
     h = rms_norm(x, params["final_norm"], cfg.norm_eps)
     logits = logits_from_hidden(cfg, params["embed"], h)[:, 0, :]
     return _slot_major_merge(new_k, new_v, every), logits
@@ -342,25 +359,36 @@ def lm_prefill_chunk(cfg: ModelConfig, params, cache: Dict, batch: Dict,
     c = batch["tokens"].shape[1]
     chunk_pos = start + jnp.arange(c, dtype=jnp.int32)
     x = embed_tokens(params["embed"], batch["tokens"])
+    every, k_slots, v_slots = _slot_major_split(cfg, cache)
+    # prefill runs one request per call: "lora" carries a single-element ids
+    # row broadcast over the chunk (see lm_decode_step_paged for the shape)
+    lora = batch.get("lora")
+    lora_ids = None if lora is None else lora["ids"].astype(jnp.int32)
+    lora_slots = lora_mod.split_layers(lora, every)
 
     def body(x, xs):
-        lps, kcs, vcs = xs
+        lps, kcs, vcs, lsl = xs if lora is not None else (*xs, None)
         new_kc, new_vc = [], []
         for i, lp in enumerate(lps):
             kc, vc = kcs[i], vcs[i]
+            ll = None if lsl is None else {"ids": lora_ids,
+                                           "slabs": lsl[i]}
             xn = rms_norm(x, lp["ln1"], cfg.norm_eps)
             o, kc, vc = attn.attention_prefill_chunk_block(
                 cfg, lp["attn"], xn, kc, vc, table, chunk_pos, prompt_len,
-                m_used=m_used)
+                m_used=m_used, lora=ll)
             h = x + o
-            y, _ = _ffn(cfg, lp, rms_norm(h, lp["ln2"], cfg.norm_eps), decode=False)
+            y, _ = _ffn(cfg, lp, rms_norm(h, lp["ln2"], cfg.norm_eps),
+                        decode=False, lora=ll)
             x = h + y
             new_kc.append(kc)
             new_vc.append(vc)
         return x, (tuple(new_kc), tuple(new_vc))
 
-    every, k_slots, v_slots = _slot_major_split(cfg, cache)
-    x, (new_k, new_v) = jax.lax.scan(body, x, (params["layers"], k_slots, v_slots))
+    xs = (params["layers"], k_slots, v_slots)
+    if lora is not None:
+        xs = xs + (lora_slots,)
+    x, (new_k, new_v) = jax.lax.scan(body, x, xs)
     h = rms_norm(x, params["final_norm"], cfg.norm_eps)
     logits = logits_from_hidden(cfg, params["embed"], h)
     return _slot_major_merge(new_k, new_v, every), logits

@@ -96,6 +96,20 @@ Knobs (defaults = the paper-faithful baseline):
       (the CI chaos-smoke lane drives the gateway under this knob).
   REPRO_FAULT_SEED     int (0)
       seed for the p= probabilistic fault rules (deterministic replay)
+  REPRO_LORA_MAX_ADAPTERS  int (8)
+      device-slot capacity of the serve engine's AdapterStore: at most this
+      many LoRA adapters resident in the device slab at once.  Loading past
+      the cap LRU-evicts an idle (refcount-0, unpinned) adapter to the host
+      swap tier; if every slot is busy the load fails and the request is
+      rejected rather than silently degrading a live tenant.
+  REPRO_LORA_RANK      int (8)
+      rank of synthetically materialized adapters (the gateway's lazy
+      loader and the multilora bench derive adapter weights from the
+      adapter *name*, so any declared tenant is servable without a
+      checkpoint on disk).  Explicitly supplied weights keep their own rank.
+  REPRO_LORA_ALPHA     float (16)
+      LoRA alpha for synthetic adapters; the alpha/rank scale is folded
+      into the B slab at load time so the kernels stay scale-free.
   REPRO_TP_REDUCE_SCATTER  0 | 1
       0 — TP weights are gathered at their use site, so decode stays
           BITWISE identical to single-device (storage scales, traffic
@@ -134,6 +148,9 @@ class PerfConfig:
     serve_max_crashes: int = 3
     fault_spec: str = ""
     fault_seed: int = 0
+    lora_max_adapters: int = 8
+    lora_rank: int = 8
+    lora_alpha: float = 16.0
 
 
 def perf() -> PerfConfig:
@@ -160,6 +177,10 @@ def perf() -> PerfConfig:
         serve_max_crashes=int(os.environ.get("REPRO_SERVE_MAX_CRASHES", "3")),
         fault_spec=os.environ.get("REPRO_FAULT", ""),
         fault_seed=int(os.environ.get("REPRO_FAULT_SEED", "0")),
+        lora_max_adapters=int(
+            os.environ.get("REPRO_LORA_MAX_ADAPTERS", "8")),
+        lora_rank=int(os.environ.get("REPRO_LORA_RANK", "8")),
+        lora_alpha=float(os.environ.get("REPRO_LORA_ALPHA", "16")),
     )
 
 

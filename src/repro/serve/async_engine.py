@@ -137,7 +137,8 @@ class AsyncServeEngine:
     # -- request API (event-loop side) -------------------------------------
     def submit(self, prompt: Sequence[int], max_new: int = 16,
                sampling: SamplingParams = GREEDY,
-               deadline_ms: Optional[float] = None) -> TokenStream:
+               deadline_ms: Optional[float] = None,
+               adapter_id: Optional[str] = None) -> TokenStream:
         """Enqueue a generation; returns its ``TokenStream`` immediately.
         The request enters the engine's admission queue at the stepper's
         next iteration — this call never waits on a decode step.
@@ -148,7 +149,8 @@ class AsyncServeEngine:
         assert self._loop is not None, "submit() before start()"
         rid = next(self._rids)
         req = Request(rid=rid, prompt=list(prompt), max_new=max_new,
-                      sampling=sampling, deadline_ms=deadline_ms)
+                      sampling=sampling, deadline_ms=deadline_ms,
+                      adapter_id=adapter_id)
         stream = TokenStream(rid, req, asyncio.Queue())
         if self._stopping or not self.running:
             # called on the event loop thread: enqueue the terminal directly
@@ -169,10 +171,12 @@ class AsyncServeEngine:
 
     async def generate(self, prompt: Sequence[int], max_new: int = 16,
                        sampling: SamplingParams = GREEDY,
-                       deadline_ms: Optional[float] = None) -> List[int]:
+                       deadline_ms: Optional[float] = None,
+                       adapter_id: Optional[str] = None) -> List[int]:
         """Submit and await the full output (the non-streaming path)."""
         return await self.submit(prompt, max_new, sampling,
-                                 deadline_ms=deadline_ms).drain()
+                                 deadline_ms=deadline_ms,
+                                 adapter_id=adapter_id).drain()
 
     def stats(self) -> Dict[str, object]:
         eng = self.engine

@@ -77,13 +77,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.codegen import paged_pages_per_fetch
+from repro.core.codegen import lora_tiles, paged_pages_per_fetch
 from repro.core.tensor_ir import inp, matmul, unary
 from repro.distributed import param_sharding
 from repro.models import build_model
 from repro.models import attention as attn_lib
 from repro.perf import perf
 from repro.pipeline import CompileOptions, Compiler, default_compiler
+from repro.kernels import lora as lora_kernels
+from repro.serve.adapters import AdapterStore, AdapterStoreFull
 from repro.serve.faults import FaultInjector, InjectedFault, check_kv_invariants
 from repro.serve.kv_store import (DEVICE, HOST, Block, BlockTable, DeviceTier,
                                   HostTier, KVStore)
@@ -120,6 +122,14 @@ class Request:
     prompt: List[int]
     max_new: int = 16
     sampling: SamplingParams = GREEDY
+    # multi-LoRA (PR 9): which tenant adapter decorates this request's
+    # projections; None = base-only (the traced graph stays structurally
+    # adapter-free, so base requests are bitwise identical to a LoRA-less
+    # engine).  The engine acquires a refcounted AdapterStore slot at submit
+    # and releases it exactly once on whichever terminal path runs.
+    adapter_id: Optional[str] = None
+    _adapter_slot: int = -1
+    _adapter_held: bool = False
     out: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
     rejected: bool = False
@@ -389,6 +399,16 @@ class ServeEngine:
         self._decode_tokens = 0
         self._preemptions = 0
         self._re_prefill_avoided = 0
+        # per-tenant delivery tallies (key: adapter_id, "base" for None)
+        self._tenant_tokens: Dict[str, int] = {}
+        self._tenant_finished: Dict[str, int] = {}
+
+        # multi-LoRA adapter store: per-tenant low-rank deltas in a
+        # refcounted two-tier slab (device + host write-through).  Zero
+        # device bytes until the first load, so LoRA-less engines pay
+        # nothing.  In-flight requests hold a ref, so a live tenant can
+        # never be evicted out from under its own decode.
+        self.adapters = AdapterStore(cfg)
 
         # unified pipeline: compile the paged attention shapes once (cached,
         # so a second engine on the same shapes skips the search passes)
@@ -414,15 +434,20 @@ class ServeEngine:
         # publish it at trace time so the traced graph bakes this plan in
         # even if another engine has since planned different shapes
         self.pages_per_fetch = 1
+        self.lora_block_out = 256
         if self.kernel_plan is not None:
             self.pages_per_fetch = paged_pages_per_fetch(
                 self.kernel_plan, block_size, self.max_blocks_per_seq)
+            # the same plan routes the segmented LoRA expand's output tile
+            self.lora_block_out, _ = lora_tiles(
+                self.kernel_plan, cfg.d_model, self.adapters.rank_cap)
 
         # set_serve_mesh is restored after tracing (the finally runs at
         # trace time, right after the model graph is built) so the module
         # state never leaks into unrelated traces in the same process
         def _decode(p, c, b):
             attn_lib.set_paged_plan(self.pages_per_fetch)
+            lora_kernels.set_lora_plan(self.lora_block_out)
             attn_lib.set_serve_mesh(self.mesh)
             param_sharding.set_serve_tp(self.mesh if self.tp else None,
                                         self._tp_reduce_scatter)
@@ -434,6 +459,7 @@ class ServeEngine:
 
         def _prefill(p, c, b, m_used):
             attn_lib.set_paged_plan(self.pages_per_fetch)
+            lora_kernels.set_lora_plan(self.lora_block_out)
             attn_lib.set_serve_mesh(self.mesh)
             param_sharding.set_serve_tp(self.mesh if self.tp else None,
                                         self._tp_reduce_scatter)
@@ -460,6 +486,45 @@ class ServeEngine:
         # when GSPMD preserved it, which the shard_map out_specs guarantee)
         self.store.device.cache = self.store.device._pin(value)
 
+    # -- multi-LoRA adapters -----------------------------------------------
+    def load_adapter(self, name: str, weights=None,
+                     rank: Optional[int] = None,
+                     alpha: Optional[float] = None) -> int:
+        """Make tenant ``name``'s adapter device-resident (synthesizing
+        deterministic factors from the name when ``weights`` is None) and
+        return its slot.  Multi-LoRA is single-device for now: the segmented
+        gather kernels run outside the shard_map the sharded attention paths
+        trace, so a mesh engine refuses adapters rather than silently
+        computing wrong deltas."""
+        if self.mesh is not None:
+            raise NotImplementedError(
+                "multi-LoRA serving is not supported on a sharded serve "
+                "mesh yet — run adapters on a single-device engine")
+        return self.adapters.load(name, weights=weights, rank=rank,
+                                  alpha=alpha)
+
+    def _release_adapter(self, req: Request) -> None:
+        """Drop ``req``'s adapter ref exactly once, whichever terminal path
+        runs first (retire / reject / cancel / expire / quarantine)."""
+        if req._adapter_held:
+            req._adapter_held = False
+            self.adapters.release(req.adapter_id)
+
+    def _tenant_count(self, req: Request, n: int = 1) -> None:
+        t = req.adapter_id or "base"
+        self._tenant_tokens[t] = self._tenant_tokens.get(t, 0) + n
+
+    def _lora_descriptor(self, ids: np.ndarray) -> Optional[dict]:
+        """``batch["lora"]`` for one dispatch (``ids``: adapter slot per
+        row, -1 = base), or None when no row uses an adapter.  The None
+        keeps every LoRA op out of the traced graph — that structural
+        absence is the ``adapter_id=None`` bitwise-identity contract."""
+        if not (ids >= 0).any():
+            return None
+        slabs = self.adapters.slabs()
+        assert slabs is not None, "row holds an adapter slot but no slab"
+        return {"ids": jnp.asarray(ids, jnp.int32), "slabs": slabs}
+
     # -- request lifecycle -----------------------------------------------
     def submit(self, req: Request) -> None:
         """Enqueue ``req`` (FIFO).  Admission control runs inside ``step``:
@@ -485,6 +550,23 @@ class ServeEngine:
             if req.on_finish is not None:
                 req.on_finish(req)
             return
+        if req.adapter_id is not None:
+            if self.mesh is not None:
+                raise NotImplementedError(
+                    "multi-LoRA serving is not supported on a sharded "
+                    "serve mesh yet")
+            if not self.adapters.known(req.adapter_id):
+                self._reject(req, f"unknown adapter {req.adapter_id!r}")
+                return
+            try:
+                if not self.adapters.is_loaded(req.adapter_id):
+                    # evicted to the host tier; slab write brings it back
+                    self.adapters.load(req.adapter_id)
+                req._adapter_slot = self.adapters.acquire(req.adapter_id)
+            except AdapterStoreFull as e:
+                self._reject(req, f"adapter store full: {e}")
+                return
+            req._adapter_held = True
         dl = req.deadline_ms if req.deadline_ms is not None \
             else self.default_deadline_ms
         if dl and dl > 0:
@@ -492,6 +574,7 @@ class ServeEngine:
         self.queue.append(req)
 
     def _reject(self, req: Request, reason: str) -> None:
+        self._release_adapter(req)
         req.rejected = True
         req.done = True
         req.reject_reason = reason
@@ -758,12 +841,16 @@ class ServeEngine:
             # so preemption churn can't inflate the CI-gated tokens/sec
             self._prefill_tokens -= victim.next_prefill
             self._decode_tokens -= max(len(req.out) - 1, 0)
+            self._tenant_count(req, -len(req.out))  # replay re-emits them
             req.out.clear()
         self.queue.insert(0, req)
         self.slots[self.slots.index(victim)] = None
         self._preemptions += 1
 
     def _retire(self, a: _Active, now: Optional[float] = None) -> None:
+        self._release_adapter(a.req)
+        t = a.req.adapter_id or "base"
+        self._tenant_finished[t] = self._tenant_finished.get(t, 0) + 1
         a.req.done = True
         a.req.t_done = time.monotonic() if now is None else now
         a.table.release_to(self.store)
@@ -782,6 +869,7 @@ class ServeEngine:
                 self.store.decref(b)
 
     def _finish_cancel(self, req: Request) -> None:
+        self._release_adapter(req)
         req.cancelled = True
         req.done = True
         req.t_done = time.monotonic()
@@ -837,6 +925,7 @@ class ServeEngine:
         self.slots[self.slots.index(a)] = None
 
     def _finish_expired(self, req: Request) -> None:
+        self._release_adapter(req)
         req.expired = True
         req.done = True
         req.t_done = time.monotonic()
@@ -848,6 +937,7 @@ class ServeEngine:
         """Terminal error state (quarantine outcome).  The on_finish hook is
         guarded: a raising hook is exactly the kind of poison quarantine
         exists to absorb, so it must not re-crash the recovery path."""
+        self._release_adapter(req)
         req.errored = True
         req.error = msg
         req.done = True
@@ -1003,7 +1093,11 @@ class ServeEngine:
         produce the first sampled token's logits."""
         req = a.req
         plen, bs = len(req.prompt), self.block_size
-        n, blocks = self.store.match_prefix(req.prompt)
+        # prefixes are namespaced by tenant: identical prompts under
+        # different adapters have different KV, so a cross-tenant hit would
+        # serve one tenant's activations to another (isolation contract)
+        n, blocks = self.store.match_prefix(req.prompt,
+                                            namespace=req.adapter_id)
         n = min(n, plen - 1)
         if n <= 0:
             return
@@ -1054,6 +1148,10 @@ class ServeEngine:
             "start": jnp.int32(start),
             "prompt_len": jnp.int32(end),
         }
+        lora = self._lora_descriptor(
+            np.asarray([a.req._adapter_slot], np.int32))
+        if lora is not None:
+            batch["lora"] = lora
         # attend only over blocks written so far, not the full table capacity
         m_used = min(blocks_for_tokens(end, self.block_size),
                      self.max_blocks_per_seq)
@@ -1069,10 +1167,12 @@ class ServeEngine:
             # holds its own refs; budget-bounded, LRU-evicted under pressure)
             self.store.register_prefix(
                 req.prompt,
-                a.table.blocks[:blocks_for_tokens(plen, self.block_size)])
+                a.table.blocks[:blocks_for_tokens(plen, self.block_size)],
+                namespace=req.adapter_id)
             row = np.asarray(logits[0, plen - 1 - start])
             first = self._sample(row, req.sampling, 0)
             req.out.append(first)
+            self._tenant_count(req)
             req.t_first = time.monotonic()
             if req.on_token is not None:
                 req.on_token(first, 0)
@@ -1101,6 +1201,7 @@ class ServeEngine:
         tok = np.zeros((self.max_batch, 1), np.int32)
         tables = np.zeros((self.max_batch, m), np.int32)
         lens = np.zeros((self.max_batch,), np.int32)
+        adapter_ids = np.full((self.max_batch,), -1, np.int32)
         rows = []
         for a in live:
             i = self.slots.index(a)
@@ -1108,9 +1209,13 @@ class ServeEngine:
             tok[i, 0] = a.req.out[-1]
             tables[i] = a.table.padded(m)
             lens[i] = a.pos
+            adapter_ids[i] = a.req._adapter_slot
         batch = {"token": jnp.asarray(tok),
                  "block_tables": jnp.asarray(tables),
                  "seq_lens": jnp.asarray(lens)}
+        lora = self._lora_descriptor(adapter_ids)
+        if lora is not None:
+            batch["lora"] = lora
         # the batched dispatch has no single owner: a crash here blames no
         # rid and _on_step_crash falls back to the youngest live request
         if self.faults is not None:
@@ -1125,6 +1230,7 @@ class ServeEngine:
                 req.out.append(nxt)
                 a.pos += 1
                 self._decode_tokens += 1
+                self._tenant_count(req)
                 if req.on_token is not None:
                     req.on_token(nxt, len(req.out) - 1)
                 if len(req.out) >= req.max_new or a.pos >= self.max_len:
@@ -1178,6 +1284,8 @@ class ServeEngine:
         self._decode_tokens = 0
         self._preemptions = 0
         self._re_prefill_avoided = 0
+        self._tenant_tokens = {}
+        self._tenant_finished = {}
         self.store.reset_counters()
         self.finished = []
         self.rejected = []
@@ -1200,6 +1308,8 @@ class ServeEngine:
         ttfts = [r.t_first - r.t_submit for r in fin if r.t_first > 0]
         itl_num = sum(r.t_done - r.t_first for r in fin if len(r.out) > 1)
         itl_den = sum(len(r.out) - 1 for r in fin if len(r.out) > 1)
+        am = self.adapters.metrics()
+        tenants = sorted(set(self._tenant_tokens) | set(self._tenant_finished))
         return ServeMetrics(
             wall_s=wall,
             requests_submitted=self._submitted,
@@ -1236,4 +1346,14 @@ class ServeEngine:
             if self.tp and self.mesh is not None else 1,
             param_bytes_per_device=self.param_bytes_per_device,
             param_bytes_replicated=self.param_bytes_replicated,
+            adapters_loaded=am["adapters_loaded"],
+            adapter_loads=am["adapter_loads"],
+            adapter_evictions=am["adapter_evictions"],
+            adapter_host_reloads=am["adapter_host_reloads"],
+            adapter_device_bytes=am["adapter_device_bytes"],
+            adapter_host_bytes=am["adapter_host_bytes"],
+            per_tenant={
+                t: {"tokens": self._tenant_tokens.get(t, 0),
+                    "requests_finished": self._tenant_finished.get(t, 0)}
+                for t in tenants},
         )

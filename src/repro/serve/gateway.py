@@ -108,10 +108,17 @@ class StopDetector:
 @dataclasses.dataclass
 class GatewayModel:
     """One served model: the async engine plus everything the HTTP layer
-    needs to speak text about it."""
+    needs to speak text about it.
+
+    ``adapters`` declares the LoRA tenants this deployment serves: clients
+    address them as ``model="{model_id}:{adapter}"``, each gets its own
+    ``/v1/models`` card, and the first request for one lazily loads it into
+    the engine's ``AdapterStore`` (bounded by REPRO_LORA_MAX_ADAPTERS;
+    undeclared adapters 404 rather than materializing arbitrary tenants)."""
     model_id: str
     async_engine: AsyncServeEngine
     tokenizer: ByteTokenizer
+    adapters: List[str] = dataclasses.field(default_factory=list)
     created: int = dataclasses.field(default_factory=lambda: int(time.time()))
 
     @property
@@ -121,7 +128,20 @@ class GatewayModel:
     def card(self) -> Dict:
         return {"id": self.model_id, "object": "model",
                 "created": self.created, "owned_by": "repro",
-                "max_model_len": self.engine.max_len}
+                "max_model_len": self.engine.max_len,
+                "adapters": list(self.adapters)}
+
+    def adapter_card(self, name: str) -> Dict:
+        return {"id": f"{self.model_id}:{name}", "object": "model",
+                "created": self.created, "owned_by": "repro",
+                "parent": self.model_id, "adapter": name,
+                "max_model_len": self.engine.max_len,
+                "loaded": self.engine.adapters.is_loaded(name)}
+
+    def serves_adapter(self, name: str) -> bool:
+        """Declared on this deployment, or already in the engine's store
+        (loaded programmatically via ``ServeEngine.load_adapter``)."""
+        return name in self.adapters or self.engine.adapters.known(name)
 
 
 class Router:
@@ -149,6 +169,16 @@ class Router:
         if len(self._models) == 1:
             return next(iter(self._models.values()))
         return None
+
+    def split_adapter(self, model_id: Optional[str]
+                      ) -> Tuple[Optional[str], Optional[str]]:
+        """``"base:adapter"`` -> (base, adapter); plain ids pass through as
+        (id, None).  An empty base (``":tenant"``) keeps the sole-model
+        fallback working for adapter asks too."""
+        if not model_id or ":" not in model_id:
+            return model_id, None
+        base, _, adapter = model_id.partition(":")
+        return base or None, adapter or None
 
     def models(self) -> List[GatewayModel]:
         return list(self._models.values())
@@ -263,6 +293,14 @@ class _Completion:
     echo_text: str = ""       # prompt text, for completions' echo=true
     deadline_ms: Optional[float] = None   # request "timeout" (body field,
     #                                       seconds) -> engine deadline
+    adapter_id: Optional[str] = None      # LoRA tenant ("base:adapter" asks)
+
+    @property
+    def served_id(self) -> str:
+        """The model id responses echo back — adapter asks keep their tag
+        so a client can verify which tenant actually answered."""
+        return self.model.model_id + (f":{self.adapter_id}"
+                                      if self.adapter_id else "")
 
 
 def _parse_prompt(model: GatewayModel, prompt) -> Tuple[List[int], str]:
@@ -287,11 +325,17 @@ def _parse_body(router: Router, body: bytes, chat: bool) -> _Completion:
         raise _BadRequest(f"body is not valid JSON: {e}") from e
     if not isinstance(d, dict):
         raise _BadRequest("body must be a JSON object")
-    model = router.resolve(d.get("model"))
+    base_id, adapter_id = router.split_adapter(d.get("model"))
+    model = router.resolve(base_id)
     if model is None:
         known = ", ".join(m.model_id for m in router.models()) or "none"
         raise _BadRequest(f"model {d.get('model')!r} not found "
                           f"(deployed: {known})", status=404)
+    if adapter_id is not None and not model.serves_adapter(adapter_id):
+        declared = ", ".join(model.adapters) or "none"
+        raise _BadRequest(
+            f"adapter {adapter_id!r} not found on model "
+            f"{model.model_id!r} (declared: {declared})", status=404)
     if int(d.get("n", 1)) != 1:
         raise _BadRequest("n > 1 is not supported")
 
@@ -350,7 +394,8 @@ def _parse_body(router: Router, body: bytes, chat: bool) -> _Completion:
     return _Completion(model=model, prompt_ids=prompt_ids,
                        max_tokens=max_tokens, sampling=sampling,
                        stream=bool(d.get("stream", False)), stops=stops,
-                       echo_text=echo, deadline_ms=deadline_ms)
+                       echo_text=echo, deadline_ms=deadline_ms,
+                       adapter_id=adapter_id)
 
 
 def _usage(prompt_tokens: int, completion_tokens: int) -> Dict:
@@ -485,14 +530,29 @@ class Gateway:
             await _send_json(writer, 200 if healthy else 503,
                              {"status": status, "models": stats}, req_id)
         elif path == "/v1/models" and method == "GET":
-            await _send_json(writer, 200, {
-                "object": "list",
-                "data": [m.card() for m in self.router.models()]}, req_id)
+            cards = []
+            for m in self.router.models():
+                cards.append(m.card())
+                # one card per tenant: declared adapters plus any loaded
+                # programmatically straight into the engine's store
+                names = list(dict.fromkeys(
+                    list(m.adapters) + m.engine.adapters.loaded()))
+                cards.extend(m.adapter_card(n) for n in names)
+            await _send_json(writer, 200,
+                             {"object": "list", "data": cards}, req_id)
         elif path.startswith("/v1/models/") and method == "GET":
-            m = self.router.get(path[len("/v1/models/"):])
+            asked = path[len("/v1/models/"):]
+            base_id, adapter_id = self.router.split_adapter(asked)
+            m = self.router.get(base_id) if base_id else None
             if m is None:
                 raise _BadRequest("model not found", status=404)
-            await _send_json(writer, 200, m.card(), req_id)
+            if adapter_id is not None:
+                if not m.serves_adapter(adapter_id):
+                    raise _BadRequest("adapter not found", status=404)
+                await _send_json(writer, 200, m.adapter_card(adapter_id),
+                                 req_id)
+            else:
+                await _send_json(writer, 200, m.card(), req_id)
         elif path == "/v1/completions" and method == "POST":
             await self._completion(body, writer, req_id, chat=False)
         elif path == "/v1/chat/completions" and method == "POST":
@@ -520,11 +580,25 @@ class Gateway:
             aeng.engine.note_gateway_shed()
             raise _BadRequest(f"overloaded: {reason}", status=429,
                               retry_after=1)
+        if ask.adapter_id is not None \
+                and not aeng.engine.adapters.known(ask.adapter_id):
+            # first ask for a declared tenant: lazy-load its adapter.  Safe
+            # from this (event-loop) thread: the slab write only touches a
+            # slot no in-flight row references (in-flight rows hold refs, and
+            # only refcount-0 slots are evicted/overwritten).
+            from repro.serve.adapters import AdapterStoreFull
+            try:
+                aeng.engine.load_adapter(ask.adapter_id)
+            except AdapterStoreFull as e:
+                raise _BadRequest(f"adapter store full: {e}", status=429,
+                                  retry_after=1) from e
+            except NotImplementedError as e:
+                raise _BadRequest(str(e)) from e
         req_id = ("chatcmpl-" if chat else "cmpl-") + uuid.uuid4().hex[:24]
         created = int(time.time())
         stream = aeng.submit(
             ask.prompt_ids, max_new=ask.max_tokens, sampling=ask.sampling,
-            deadline_ms=ask.deadline_ms)
+            deadline_ms=ask.deadline_ms, adapter_id=ask.adapter_id)
         if ask.stream:
             await self._stream_response(ask, stream, writer, req_id, created,
                                         chat)
@@ -577,14 +651,14 @@ class Gateway:
                       "finish_reason": reason, "token_ids": all_ids}
         obj = {"id": req_id,
                "object": "chat.completion" if chat else "text_completion",
-               "created": created, "model": ask.model.model_id,
+               "created": created, "model": ask.served_id,
                "choices": [choice], "usage": usage}
         await _send_json(writer, 200, obj, req_id)
 
     async def _stream_response(self, ask: _Completion, stream: TokenStream,
                                writer: asyncio.StreamWriter, req_id: str,
                                created: int, chat: bool) -> None:
-        mid = ask.model.model_id
+        mid = ask.served_id
         detector = StopDetector(ask.stops)
         await _sse_open(writer, req_id)
         n_tokens = 0
@@ -619,12 +693,16 @@ class Gateway:
 # ---------------------------------------------------------------------------
 
 def build_model(cfg, params, model_id: Optional[str] = None,
+                adapters: Sequence[str] = (),
                 **engine_kwargs) -> GatewayModel:
     """One ``GatewayModel`` from a config + params: builds the
-    ``ServeEngine`` and wraps it (the stepper starts with the router)."""
+    ``ServeEngine`` and wraps it (the stepper starts with the router).
+    ``adapters`` declares the LoRA tenants clients may address as
+    ``model="{id}:{adapter}"`` — loaded lazily on first use."""
     from repro.serve.engine import ServeEngine
     eng = ServeEngine(cfg, params, **engine_kwargs)
     mid = model_id or cfg.name
     return GatewayModel(model_id=mid,
                         async_engine=AsyncServeEngine(eng, model_id=mid),
-                        tokenizer=ByteTokenizer(cfg.vocab))
+                        tokenizer=ByteTokenizer(cfg.vocab),
+                        adapters=list(adapters))

@@ -187,6 +187,11 @@ class HostTier:
 class _PrefixEntry:
     tokens: Tuple[int, ...]
     blocks: List[Block]
+    # tenant namespace (the request's adapter id): entries only ever match
+    # requests in the same namespace, so tenant A's KV blocks are never
+    # served to tenant B even for bit-identical prompts.  None = the shared
+    # base namespace (pre-multi-LoRA behavior).
+    namespace: Optional[str] = None
 
 
 class KVStore:
@@ -295,12 +300,20 @@ class KVStore:
         return need <= self.host.num_free
 
     # -- prefix registry ---------------------------------------------------
-    def match_prefix(self, tokens: Sequence[int]) -> Tuple[int, List[Block]]:
-        """Longest registered prefix of ``tokens``: (shared token count, the
-        registry's blocks covering it).  Blocks are NOT incref'd — adopt them
-        with ``fork``.  A hit refreshes the entry's LRU position."""
+    def match_prefix(self, tokens: Sequence[int],
+                     namespace: Optional[str] = None
+                     ) -> Tuple[int, List[Block]]:
+        """Longest registered prefix of ``tokens`` within ``namespace``
+        (the request's adapter id; None = base): (shared token count, the
+        registry's blocks covering it).  Entries from other namespaces never
+        match — prefix KV encodes the adapter that wrote it, so a
+        cross-tenant hit would replay tenant A's activations for tenant B.
+        Blocks are NOT incref'd — adopt them with ``fork``.  A hit refreshes
+        the entry's LRU position."""
         best_len, best = 0, None
         for e in self._prefixes:
+            if e.namespace != namespace:
+                continue
             lim = min(len(tokens), len(e.tokens), len(e.blocks) * self.block_size)
             n = 0
             while n < lim and tokens[n] == e.tokens[n]:
@@ -315,21 +328,23 @@ class KVStore:
                                                         self.block_size)]
 
     def register_prefix(self, tokens: Sequence[int],
-                        blocks: Sequence[Block]) -> bool:
-        """Retain a completed prompt's blocks for future sharers.  The
-        registry holds its own references (truncated to the block budget,
-        evicting LRU entries to make room); False if the budget is 0 or the
-        prefix is already covered."""
+                        blocks: Sequence[Block],
+                        namespace: Optional[str] = None) -> bool:
+        """Retain a completed prompt's blocks for future sharers *in the
+        same namespace*.  The registry holds its own references (truncated
+        to the block budget, evicting LRU entries to make room); False if
+        the budget is 0 or the prefix is already covered."""
         if self.prefix_cache_blocks <= 0 or not blocks:
             return False
-        covered, _ = self.match_prefix(tokens)
+        covered, _ = self.match_prefix(tokens, namespace=namespace)
         if covered >= len(tokens):
             return False
         keep = list(blocks[:self.prefix_cache_blocks])
         while (self._registry_blocks() + len(keep) > self.prefix_cache_blocks
                and self._prefixes):
             self._evict_one()
-        entry = _PrefixEntry(tuple(tokens), [self.incref(b) for b in keep])
+        entry = _PrefixEntry(tuple(tokens), [self.incref(b) for b in keep],
+                             namespace=namespace)
         self._prefixes.append(entry)
         return True
 

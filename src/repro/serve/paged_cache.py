@@ -205,6 +205,15 @@ class ServeMetrics:
     #                                      sharded over (1 = replicated)
     param_bytes_per_device: int = 0      # bytes one device stores
     param_bytes_replicated: int = 0      # logical (unsharded) param bytes
+    # multi-LoRA (PR 9): AdapterStore footprint + per-tenant delivery
+    adapters_loaded: int = 0             # device-resident adapters now
+    adapter_loads: int = 0               # load() calls that wrote a slot
+    adapter_evictions: int = 0           # LRU slot evictions (to host tier)
+    adapter_host_reloads: int = 0        # evicted adapters brought back
+    adapter_device_bytes: int = 0        # allocated slab footprint
+    adapter_host_bytes: int = 0          # write-through host copies
+    per_tenant: Dict[str, Dict[str, float]] = dataclasses.field(
+        default_factory=dict)            # adapter_id ("base") -> tallies
 
     def to_dict(self) -> Dict[str, float]:
         return dataclasses.asdict(self)
@@ -226,6 +235,10 @@ class ServeMetrics:
                    + (" [DEGRADED]" if self.degraded else "")
                    if (self.requests_shed or self.requests_expired
                        or self.requests_errored or self.step_crashes) else "")
+                + (f" | {self.adapters_loaded} adapters resident "
+                   f"({self.adapter_device_bytes / 1e6:.2f} MB slab, "
+                   f"{self.adapter_evictions} evictions)"
+                   if self.adapters_loaded or self.adapter_loads else "")
                 + (f" | pool sharded over {self.mesh_devices} devices"
                    if self.mesh_devices > 1 else "")
                 + (f" | TP x{self.tp_devices}: "

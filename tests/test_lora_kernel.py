@@ -1,0 +1,128 @@
+"""Segmented gather-BGMV LoRA kernels vs the dense-gather oracle: ragged
+per-row adapter mixes, ragged ranks (0/8/16 in one slab), GQA-shaped
+projections, bf16 slabs, and expand-tile variation (interpret mode executes
+the kernel bodies on CPU)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.lora import lora_plan_block_out, set_lora_plan
+
+RNG = np.random.default_rng(7)
+
+
+def _arr(shape, dtype=jnp.float32, scale=0.5):
+    return jnp.asarray(RNG.normal(size=shape) * scale).astype(dtype)
+
+
+def _slab_pair(s, d_in, d_out, r, dtype=jnp.float32):
+    return (_arr((s, d_in, r), dtype), _arr((s, r, d_out), dtype))
+
+
+IDX_MIXES = [
+    [0, 1, 2, 0],           # ragged mix, repeats
+    [-1, -1, -1, -1],       # all base rows
+    [2, -1, 0, -1],         # interleaved base / adapter
+    [1],                    # single row
+]
+
+
+@pytest.mark.parametrize("idx", IDX_MIXES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_shrink_expand_parity(idx, dtype):
+    t, d_in, d_out, s, r = len(idx), 64, 48, 3, 16
+    a_slab, b_slab = _slab_pair(s, d_in, d_out, r, dtype)
+    x = _arr((t, d_in), dtype)
+    ids = jnp.asarray(idx, jnp.int32)
+
+    h = ops.lora_shrink(x, a_slab, ids)
+    h_ref = ref.lora_shrink_ref(x, a_slab, ids)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref),
+                               rtol=tol, atol=tol)
+
+    y = ops.lora_expand(h, b_slab, ids)
+    y_ref = ref.lora_expand_ref(h, b_slab, ids, out_dtype=dtype)
+    assert y.dtype == b_slab.dtype
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32),
+                               rtol=tol, atol=tol * r ** 0.5)
+
+
+def test_base_rows_are_exact_zero():
+    """idx < 0 masks to EXACT zero, not merely small — the structural half
+    of the base-identity contract (an all-base batch never attaches the
+    lora branch at all; a mixed batch's base rows get bitwise-zero delta)."""
+    t, d_in, d_out, s, r = 4, 32, 32, 2, 8
+    a_slab, b_slab = _slab_pair(s, d_in, d_out, r)
+    x = _arr((t, d_in))
+    ids = jnp.asarray([-1, 0, -1, 1], jnp.int32)
+    h = np.asarray(ops.lora_shrink(x, a_slab, ids))
+    y = np.asarray(ops.lora_expand(jnp.asarray(h), b_slab, ids))
+    assert (h[0] == 0).all() and (h[2] == 0).all()
+    assert (y[0] == 0).all() and (y[2] == 0).all()
+    assert (h[1] != 0).any() and (y[3] != 0).any()
+
+
+def test_ragged_ranks_share_one_slab():
+    """A rank-8 adapter in a rank-16 slot contributes zero through its
+    padding: computing at r=16 with padded factors equals computing at r=8
+    with the unpadded ones.  A rank-0 slot (all padding) is exactly zero."""
+    t, d_in, d_out, s = 3, 48, 64, 3
+    a8, b8 = _slab_pair(s, d_in, d_out, 8)
+    a16 = jnp.pad(a8, ((0, 0), (0, 0), (0, 8)))
+    b16 = jnp.pad(b8, ((0, 0), (0, 8), (0, 0)))
+    # slot 2 is a rank-0 adapter: zero everything
+    a16 = a16.at[2].set(0.0)
+    b16 = b16.at[2].set(0.0)
+    x = _arr((t, d_in))
+    ids = jnp.asarray([0, 1, 2], jnp.int32)
+
+    y16 = np.asarray(ops.lora_expand(ops.lora_shrink(x, a16, ids), b16, ids))
+    y8 = np.asarray(ops.lora_expand(ops.lora_shrink(x, a8, ids), b8, ids))
+    np.testing.assert_allclose(y16[:2], y8[:2], rtol=1e-5, atol=1e-5)
+    assert (y16[2] == 0).all()      # rank 0 == exact base behavior
+
+
+@pytest.mark.parametrize("d_in,d_out", [(64, 64),   # q/o-shaped
+                                        (64, 16),   # GQA kv-shaped (narrow)
+                                        (16, 64)])  # and its transpose
+def test_gqa_projection_shapes(d_in, d_out):
+    t, s, r = 5, 2, 8
+    a_slab, b_slab = _slab_pair(s, d_in, d_out, r)
+    x = _arr((t, d_in))
+    ids = jnp.asarray([0, -1, 1, 1, 0], jnp.int32)
+    h = ops.lora_shrink(x, a_slab, ids)
+    y = ops.lora_expand(h, b_slab, ids)
+    y_ref = ref.lora_expand_ref(ref.lora_shrink_ref(x, a_slab, ids),
+                                b_slab, ids, out_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("block_out", [16, 33, 256])
+def test_expand_tile_invariance(block_out):
+    """Auto Schedule's block_out choice tiles the output features; every
+    tile size (including one that does not divide d_out — the pad path)
+    must produce the same result."""
+    t, d_in, d_out, s, r = 4, 32, 80, 2, 8
+    a_slab, b_slab = _slab_pair(s, d_in, d_out, r)
+    x = _arr((t, d_in))
+    ids = jnp.asarray([0, 1, -1, 0], jnp.int32)
+    h = ops.lora_shrink(x, a_slab, ids)
+    y = ops.lora_expand(h, b_slab, ids, block_out=block_out)
+    want = ref.lora_expand_ref(h, b_slab, ids, out_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_set_lora_plan_roundtrip():
+    before = lora_plan_block_out()
+    try:
+        set_lora_plan(128)
+        assert lora_plan_block_out() == 128
+        set_lora_plan(0)            # clamped, never a zero-size tile
+        assert lora_plan_block_out() == 1
+    finally:
+        set_lora_plan(before)

@@ -1,0 +1,314 @@
+"""Multi-LoRA multiplexing: N tenants over one shared paged base.
+
+Engine-level contracts — base-identity (adapter_id=None is bitwise the
+pre-LoRA engine, structurally: no lora ops traced), rank-0 token identity,
+adversarial prefix isolation (same prompt, different adapters), terminal
+finishers decref'ing adapter slots — plus the gateway's ``base:adapter``
+routing.  The live-HTTP end-to-end runs under ``-m multilora`` (the
+multilora-smoke CI job); everything else is fast-lane."""
+import asyncio
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config, reduced_config
+from repro.models import build_model
+from repro.serve.engine import Request, ServeEngine
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced_config(get_config("qwen3-0.6b"))
+    fns = build_model(cfg)
+    params = fns.init(jax.random.PRNGKey(0))
+    return cfg, fns, params
+
+
+def _engine(cfg, params, **kw):
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("max_len", 32)
+    kw.setdefault("block_size", 4)
+    kw.setdefault("plan_kernels", False)
+    kw.setdefault("mesh", False)
+    return ServeEngine(cfg, params, **kw)
+
+
+def _run(eng, *reqs):
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_done(max_steps=800)
+    assert all(r.done for r in reqs)
+    return [list(r.out) for r in reqs]
+
+
+PROMPT = [3, 5, 7, 11, 13, 17, 19, 23]
+
+
+# ---------------------------------------------------------------------------
+# identity contracts
+# ---------------------------------------------------------------------------
+
+def test_base_request_bitwise_identical_with_adapters_loaded(setup):
+    """adapter_id=None must be the pre-LoRA engine, bit for bit — even on
+    an engine that has tenants resident (their slab must not perturb base
+    rows)."""
+    cfg, fns, params = setup
+    plain = _engine(cfg, params)
+    [want] = _run(plain, Request(rid=0, prompt=list(PROMPT), max_new=6))
+
+    eng = _engine(cfg, params)
+    eng.load_adapter("tenant-a")
+    eng.adapters.pin("tenant-a")
+    [got] = _run(eng, Request(rid=0, prompt=list(PROMPT), max_new=6))
+    assert got == want
+
+
+def test_all_base_batch_traces_no_lora_ops(setup):
+    """Structural half of the identity contract: a batch without adapter
+    rows never attaches ``batch['lora']``, so the traced decode graph
+    contains no lora ops at all — identity by absence, not by a zero-add."""
+    cfg, fns, params = setup
+    eng = _engine(cfg, params)
+    eng.load_adapter("tenant-a")        # slab exists; base batches ignore it
+    m = eng.max_blocks_per_seq
+    batch = {"token": jnp.zeros((2, 1), jnp.int32),
+             "block_tables": jnp.zeros((2, m), jnp.int32),
+             "seq_lens": jnp.ones((2,), jnp.int32)}
+    base_jaxpr = str(jax.make_jaxpr(fns.decode_paged)(params, eng.cache,
+                                                      batch))
+    assert "lora" not in base_jaxpr
+
+    batch["lora"] = {"ids": jnp.asarray([0, -1], jnp.int32),
+                     "slabs": eng.adapters.slabs()}
+    mixed_jaxpr = str(jax.make_jaxpr(fns.decode_paged)(params, eng.cache,
+                                                       batch))
+    assert "lora" in mixed_jaxpr
+
+    # and the engine only attaches the descriptor when a row holds a slot
+    assert eng._lora_descriptor(np.asarray([-1, -1], np.int32)) is None
+    assert eng._lora_descriptor(np.asarray([-1, 0], np.int32)) is not None
+
+
+def test_rank0_adapter_is_token_identical_to_base(setup):
+    """A rank-0 adapter is all slab padding: its delta is exactly zero, so
+    its stream equals the base stream token for token."""
+    cfg, fns, params = setup
+    eng = _engine(cfg, params)
+    eng.load_adapter("null-tenant", rank=0)
+    base, adapted = _run(
+        eng,
+        Request(rid=0, prompt=list(PROMPT), max_new=6),
+        Request(rid=1, prompt=list(PROMPT), max_new=6,
+                adapter_id="null-tenant"))
+    assert adapted == base
+
+
+def test_real_adapter_diverges_from_base(setup):
+    """The converse guard: a nonzero adapter must actually change tokens,
+    otherwise the identity tests above prove nothing."""
+    cfg, fns, params = setup
+    eng = _engine(cfg, params)
+    eng.load_adapter("tenant-a")
+    base, adapted = _run(
+        eng,
+        Request(rid=0, prompt=list(PROMPT), max_new=8),
+        Request(rid=1, prompt=list(PROMPT), max_new=8,
+                adapter_id="tenant-a"))
+    assert adapted != base
+
+
+# ---------------------------------------------------------------------------
+# prefix isolation
+# ---------------------------------------------------------------------------
+
+def test_same_prompt_different_adapters_never_cross_serve(setup):
+    """The adversarial case: tenant B asks tenant A's exact prompt.  B must
+    re-prefill from scratch (a prefix hit would replay A's activations) and
+    still produce exactly what a fresh single-tenant engine produces."""
+    cfg, fns, params = setup
+    # headroom so admission reservations don't evict the prefix registry
+    eng = _engine(cfg, params, max_batch=1, num_blocks=24,
+                  prefix_cache_blocks=6)
+    eng.load_adapter("tenant-a")
+    eng.load_adapter("tenant-b")
+
+    [out_a] = _run(eng, Request(rid=0, prompt=list(PROMPT), max_new=5,
+                                adapter_id="tenant-a"))
+    eng.reset_metrics()
+    [out_b] = _run(eng, Request(rid=1, prompt=list(PROMPT), max_new=5,
+                                adapter_id="tenant-b"))
+    assert eng.metrics().re_prefill_avoided == 0   # no cross-tenant adoption
+
+    ref = _engine(cfg, params, max_batch=1)
+    ref.load_adapter("tenant-b")
+    [want_b] = _run(ref, Request(rid=0, prompt=list(PROMPT), max_new=5,
+                                 adapter_id="tenant-b"))
+    assert out_b == want_b
+    assert out_b != out_a
+
+    # within-tenant reuse still works: A again adopts A's registered prefix
+    eng.reset_metrics()
+    [out_a2] = _run(eng, Request(rid=2, prompt=list(PROMPT), max_new=5,
+                                 adapter_id="tenant-a"))
+    assert eng.metrics().re_prefill_avoided > 0
+    assert out_a2 == out_a                         # reuse changed no tokens
+
+
+# ---------------------------------------------------------------------------
+# terminal finishers decref
+# ---------------------------------------------------------------------------
+
+def test_cancel_decrefs_without_evicting_pinned_tenants(setup):
+    cfg, fns, params = setup
+    eng = _engine(cfg, params)
+    eng.load_adapter("system")
+    eng.adapters.pin("system")
+    eng.load_adapter("tenant-a")
+    req = Request(rid=0, prompt=list(PROMPT), max_new=20,
+                  adapter_id="tenant-a")
+    eng.submit(req)
+    assert eng.adapters.refcount("tenant-a") == 1
+    for _ in range(3):
+        eng.step()
+    eng.cancel(req.rid)
+    eng.step()
+    assert req.finish_reason == "cancelled"
+    assert eng.adapters.refcount("tenant-a") == 0
+    assert eng.adapters.is_loaded("system")        # pinned neighbour intact
+    eng.check_invariants()
+
+
+def test_expired_request_decrefs_adapter(setup):
+    cfg, fns, params = setup
+    eng = _engine(cfg, params)
+    eng.load_adapter("tenant-a")
+    req = Request(rid=0, prompt=list(PROMPT), max_new=20,
+                  adapter_id="tenant-a", deadline_ms=0.01)
+    eng.submit(req)
+    eng.run_until_done(max_steps=200)
+    assert req.done and req.finish_reason in ("expired", "shed")
+    assert eng.adapters.refcount("tenant-a") == 0
+    eng.check_invariants()
+
+
+def test_unknown_adapter_is_rejected_not_crashed(setup):
+    cfg, fns, params = setup
+    eng = _engine(cfg, params)
+    req = Request(rid=0, prompt=list(PROMPT), max_new=4, adapter_id="nope")
+    eng.submit(req)
+    assert req.rejected and "unknown adapter" in req.reject_reason
+    eng.check_invariants()
+
+
+@pytest.mark.multilora
+@pytest.mark.skipif(len(jax.devices()) < 2, reason="needs >= 2 devices")
+def test_sharded_engine_refuses_adapters(setup):
+    """Multi-LoRA on a sharded serve mesh is explicitly unsupported: both
+    the load path and the submit path must refuse loudly, never silently
+    serve a replicated slab on a partitioned engine."""
+    from repro.launch.mesh import make_serve_mesh
+
+    cfg, fns, params = setup
+    eng = _engine(cfg, params, mesh=make_serve_mesh(2))
+    with pytest.raises(NotImplementedError, match="sharded serve mesh"):
+        eng.load_adapter("tenant-a")
+    with pytest.raises(NotImplementedError, match="sharded serve mesh"):
+        eng.submit(Request(rid=0, prompt=list(PROMPT), max_new=4,
+                           adapter_id="tenant-a"))
+
+
+# ---------------------------------------------------------------------------
+# gateway routing
+# ---------------------------------------------------------------------------
+
+async def _raw(host, port, method, path, payload=None):
+    body = b"" if payload is None else json.dumps(payload).encode()
+    reader, writer = await asyncio.open_connection(host, port)
+    try:
+        head = f"{method} {path} HTTP/1.1\r\nHost: t\r\n"
+        if body:
+            head += ("Content-Type: application/json\r\n"
+                     f"Content-Length: {len(body)}\r\n")
+        writer.write(head.encode() + b"\r\n" + body)
+        await writer.drain()
+        status = int((await reader.readline()).split()[1])
+        while (await reader.readline()) not in (b"\r\n", b"\n", b""):
+            pass
+        return status, await reader.read()
+    finally:
+        writer.close()
+        try:
+            await writer.wait_closed()
+        except (ConnectionError, RuntimeError):
+            pass
+
+
+def _stream_ids(data: bytes):
+    ids, model = [], ""
+    for ln in data.split(b"\n"):
+        ln = ln.strip()
+        if not ln.startswith(b"data: ") or ln == b"data: [DONE]":
+            continue
+        chunk = json.loads(ln[len(b"data: "):])
+        model = chunk.get("model", model)
+        ids += chunk["choices"][0].get("token_ids") or []
+    return ids, model
+
+
+@pytest.mark.multilora
+def test_gateway_routes_adapters_end_to_end(setup):
+    """Live HTTP: ``m:tenant`` resolves per request, ``/v1/models`` lists
+    adapter cards under their parent, unknown adapters 404, and every
+    stream echoes the tenant-qualified model tag."""
+    from repro.serve.async_engine import AsyncServeEngine
+    from repro.serve.gateway import (ByteTokenizer, Gateway, GatewayModel,
+                                     Router)
+
+    cfg, fns, params = setup
+    eng = _engine(cfg, params)
+    model = GatewayModel(model_id="m",
+                         async_engine=AsyncServeEngine(eng, model_id="m"),
+                         tokenizer=ByteTokenizer(cfg.vocab),
+                         adapters=["tenant-a", "tenant-b"])
+
+    async def go():
+        async with Gateway(Router([model]), port=0) as gw:
+            async def ask(mid):
+                return await _raw(gw.host, gw.port, "POST",
+                                  "/v1/completions",
+                                  {"model": mid, "prompt": PROMPT,
+                                   "max_tokens": 5, "stream": True})
+            st_m, models = await _raw(gw.host, gw.port, "GET", "/v1/models")
+            st_a, data_a = await ask("m:tenant-a")
+            st_b, data_b = await ask("m:tenant-b")
+            st_base, data_base = await ask("m")
+            st_sole, data_sole = await ask(":tenant-a")  # sole-model form
+            st_404, _ = await ask("m:nope")
+            return (st_m, models, st_a, data_a, st_b, data_b, st_base,
+                    data_base, st_sole, data_sole, st_404)
+
+    (st_m, models, st_a, data_a, st_b, data_b, st_base, data_base,
+     st_sole, data_sole, st_404) = asyncio.run(go())
+
+    assert st_m == 200
+    cards = {c["id"]: c for c in json.loads(models)["data"]}
+    assert "m" in cards and not cards["m"].get("parent")
+    assert cards["m:tenant-a"]["parent"] == "m"
+    assert cards["m:tenant-a"]["adapter"] == "tenant-a"
+
+    assert st_a == st_b == st_base == st_sole == 200
+    ids_a, tag_a = _stream_ids(data_a)
+    ids_b, tag_b = _stream_ids(data_b)
+    ids_base, tag_base = _stream_ids(data_base)
+    ids_sole, _ = _stream_ids(data_sole)
+    assert (tag_a, tag_b, tag_base) == ("m:tenant-a", "m:tenant-b", "m")
+    assert len({tuple(ids_a), tuple(ids_b), tuple(ids_base)}) == 3
+    assert ids_sole == ids_a            # ":tenant-a" == "m:tenant-a"
+    assert st_404 == 404
+
+    # all refs returned once the streams drained
+    assert eng.adapters.refcount("tenant-a") == 0
+    assert eng.adapters.refcount("tenant-b") == 0

@@ -43,6 +43,36 @@ from tools.gateway_smoke import Deadline
 DEFAULT_FAULT = "alloc:p=0.05,step:exc=2,swap_out:p=0.2"
 
 
+async def _served_model_id(host: str, port: int) -> str:
+    """The gateway's own base-model id from ``/v1/models`` — smoke clients
+    must target what the server advertises, not re-derive the name from
+    config (a multi-LoRA gateway also lists ``base:adapter`` cards, so the
+    base card is the one without a ``parent``)."""
+    import asyncio
+
+    reader, writer = await asyncio.open_connection(host, port)
+    try:
+        writer.write(b"GET /v1/models HTTP/1.1\r\nHost: chaos\r\n\r\n")
+        await writer.drain()
+        status_line = await reader.readline()
+        assert b" 200 " in status_line, f"/v1/models -> {status_line!r}"
+        headers = await reader.readuntil(b"\r\n\r\n")
+        length = 0
+        for h in headers.decode().split("\r\n"):
+            if h.lower().startswith("content-length:"):
+                length = int(h.split(":", 1)[1])
+        models = json.loads(await reader.readexactly(length))
+        bases = [m["id"] for m in models["data"] if not m.get("parent")]
+        assert bases, f"no base model card in {models}"
+        return bases[0]
+    finally:
+        writer.close()
+        try:
+            await writer.wait_closed()
+        except (ConnectionError, RuntimeError):
+            pass
+
+
 async def _sse_collect(host: str, port: int, payload: dict
                        ) -> Tuple[List[int], str]:
     """One streamed /v1/completions; returns (token_ids, finish_reason).
@@ -149,6 +179,8 @@ def run_chaos(fault_spec: str, seed: int, n_requests: int, qps: float,
 
     async def drive():
         async with Gateway(Router([model]), port=0) as gw:
+            served_id = await _served_model_id(gw.host, gw.port)
+
             async def one(i: int):
                 await asyncio.sleep(float(arrivals[i]))
                 r = reqs[i]
@@ -156,7 +188,7 @@ def run_chaos(fault_spec: str, seed: int, n_requests: int, qps: float,
                 try:
                     return await asyncio.wait_for(
                         _sse_collect(gw.host, gw.port, {
-                            "model": cfg.name, "prompt": r.prompt,
+                            "model": served_id, "prompt": r.prompt,
                             "max_tokens": r.max_new, "stream": True,
                             "temperature": sp.temperature, "top_k": sp.top_k,
                             "seed": sp.seed}),

@@ -217,7 +217,12 @@ def main() -> int:
     print(f"health: {health}")
     models = _get_json(host, port, "/v1/models")
     assert models["object"] == "list" and models["data"], models
-    model_id = models["data"][0]["id"]
+    # pick the BASE card, not whatever happens to list first: a multi-LoRA
+    # gateway also lists `base:adapter` cards (marked with a parent), and
+    # the batch oracle below replays the base model only
+    bases = [m["id"] for m in models["data"] if not m.get("parent")]
+    assert bases, f"no base model card in {models}"
+    model_id = bases[0]
     print(f"models: {[m['id'] for m in models['data']]}")
 
     oracle = build_oracle(args.arch, args.max_batch, args.max_len,
