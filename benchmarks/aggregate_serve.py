@@ -27,6 +27,13 @@ heads on the smoke arch, weight gathers), so mixing them into one trailing
 median would let a fast sharded run tighten — or a slow one loosen the
 pressure on — the single-device floor.
 
+``BENCH_serve_ssm.json`` / ``BENCH_serve_hybrid.json`` points from the
+model-family lane (``bench_serve --family ssm|hybrid``) carry a ``family``
+label and render in their own table column, but are **excluded from the
+ratchet** like sharded ones: a Mamba or hybrid smoke arch measures a
+different model entirely — its throughput must never move the transformer
+floor.  Unlabelled history is transformer by construction.
+
 ``BENCH_latency.json`` points from the open-loop gateway lane
 (``bench_serve --open-loop``) mix into the same table: they carry
 ``open_loop: true`` plus p50/p99 TTFT and inter-token latency, rendered in
@@ -93,9 +100,9 @@ def load_points(paths: List[str],
     return points
 
 
-EMPTY_ROW = ("| – | – | – | – | – | – | – | – | – | – | – | no trajectory "
-             "points yet — run benchmarks.bench_serve or download CI "
-             "artifacts |")
+EMPTY_ROW = ("| – | – | – | – | – | – | – | – | – | – | – | – | no "
+             "trajectory points yet — run benchmarks.bench_serve or "
+             "download CI artifacts |")
 
 
 def point_mesh(p: Dict) -> int:
@@ -115,6 +122,13 @@ def point_multilora(p: Dict) -> bool:
     """Whether the point came from the multi-LoRA multiplexing lane
     (``bench_serve --multi-lora`` -> BENCH_multilora.json)."""
     return p.get("bench") == "multilora"
+
+
+def point_family(p: Dict) -> str:
+    """A point's model family (``transformer`` / ``ssm`` / ``hybrid``).
+    Pre-family history has no label and is transformer by construction."""
+    return str(p.get("family")
+               or p.get("workload", {}).get("family") or "transformer")
 
 
 def point_tp(p: Dict) -> int:
@@ -137,10 +151,12 @@ def point_sharded(p: Dict) -> bool:
 def single_device_points(points: List[Dict]) -> List[Dict]:
     """The ratchet series: only closed-loop points comparable to the
     committed single-device baseline floor (no shard_map engine of any
-    width, no open-loop latency runs, no mixed-tenant multi-LoRA runs)."""
+    width, no open-loop latency runs, no mixed-tenant multi-LoRA runs,
+    no ssm/hybrid family lanes — those measure a different model)."""
     return [p for p in points
             if not point_sharded(p) and not point_open_loop(p)
-            and not point_multilora(p)]
+            and not point_multilora(p)
+            and point_family(p) == "transformer"]
 
 
 def _lat_cell(p: Dict, p50_key: str, p99_key: str, mean_key: str) -> str:
@@ -159,10 +175,10 @@ def trend_table(points: List[Dict]) -> str:
     labelled closed vs open loop and single-device vs mesh-sharded.  An
     empty history renders one explanatory row rather than nothing."""
     lines = [
-        "| # | unix_time | mode | mesh | tok/s | ttft p50/p99 ms "
+        "| # | unix_time | mode | family | mesh | tok/s | ttft p50/p99 ms "
         "| itl p50/p99 ms | shed/exp/err | goodput | pool_peak | preempt "
         "| point |",
-        "|---|-----------|------|------|-------|-----------------"
+        "|---|-----------|------|--------|------|-------|-----------------"
         "|----------------|--------------|---------|-----------|---------"
         "|-------|",
     ]
@@ -198,6 +214,7 @@ def trend_table(points: List[Dict]) -> str:
         lines.append(
             f"| {i} | {p.get('unix_time', 0):.0f} "
             f"| {mode} "
+            f"| {point_family(p)} "
             f"| {label} "
             f"| {p.get('tokens_per_sec', 0):.1f} "
             f"| {_lat_cell(p, 'ttft_p50_ms', 'ttft_p99_ms', 'ttft_mean_s')} "
@@ -269,7 +286,14 @@ def cli() -> int:
     singles = single_device_points(points)
     n_open = sum(1 for p in points if point_open_loop(p))
     n_multilora = sum(1 for p in points if point_multilora(p))
-    n_sharded = len(points) - len(singles) - n_open - n_multilora
+    n_family = sum(1 for p in points if point_family(p) != "transformer"
+                   and not point_open_loop(p) and not point_multilora(p)
+                   and not point_sharded(p))
+    n_sharded = len(points) - len(singles) - n_open - n_multilora - n_family
+    if n_family:
+        print(f"\n{n_family} ssm/hybrid family point(s) labelled in the "
+              "table but excluded from the transformer ratchet series "
+              "(a different model's throughput must not move the floor)")
     if n_multilora:
         print(f"\n{n_multilora} multi-LoRA point(s) labelled in the table "
               "but excluded from the single-device ratchet series "

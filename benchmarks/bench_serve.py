@@ -33,6 +33,16 @@ than bitwise and its closeness is asserted by tests/test_param_sharding.py,
 not by this bench.  TP points default to ``BENCH_serve_tp.json`` and are a
 separate trajectory series like ``--mesh`` points.
 
+``--family ssm|hybrid`` serves a stateful model family (``FAMILY_ARCHS``
+smoke archs) through the same paged workload: pure-ssm requests keep their
+recurrent state in the StateSlab tier (zero KV blocks — gated), hybrids
+carry the mixed layout (KV blocks + slab slots).  One preemption-by-swap is
+forced mid-decode and every output is verified token-identical against the
+family's dense prefill+decode oracle.  Family points default to
+``BENCH_serve_<family>.json`` and are a separate trajectory series — the
+transformer ratchet does not apply (prefix sharing is structurally off for
+stateful families, so the reuse gates would be meaningless).
+
 ``--open-loop`` measures **latency under load** instead of closed-loop
 throughput: an in-process OpenAI gateway (``repro.serve.gateway``) is booted
 on an ephemeral port and a Poisson client fires the same workload at it at
@@ -57,6 +67,15 @@ MAX_BATCH = 4
 MAX_LEN = 64
 BLOCK_SIZE = 8
 
+# the --family lane: one representative arch per stateful model family,
+# served through the SAME engine/workload as the transformer lane and
+# verified token-identical against the family's dense (unpaged) oracle
+FAMILY_ARCHS = {
+    "transformer": "qwen3-0.6b",
+    "ssm": "falcon-mamba-7b",        # pure Mamba: StateSlab only, no KV
+    "hybrid": "zamba2-2.7b",         # mixed layout: KV blocks + slab slots
+}
+
 
 def _knob_mesh_devices() -> int:
     """Effective REPRO_SERVE_MESH width (0 = off).  The bench resolves the
@@ -72,7 +91,7 @@ def _knob_mesh_devices() -> int:
     return int(knob)
 
 
-def _smoke_cfg(mesh_devices: int = 0):
+def _smoke_cfg(mesh_devices: int = 0, arch: str = "qwen3-0.6b"):
     """The bench arch.  A sharded run needs kv-heads divisible by the mesh:
     the qwen3 smoke config's GQA kv=2 is widened to the lcm (an explicitly
     different arch — which is why sharded points are a separate series)."""
@@ -80,7 +99,7 @@ def _smoke_cfg(mesh_devices: int = 0):
 
     from repro.configs.base import get_config, reduced_config
 
-    cfg = reduced_config(get_config("qwen3-0.6b"))
+    cfg = reduced_config(get_config(arch))
     if mesh_devices and cfg.n_kv_heads % mesh_devices:
         kv = math.lcm(cfg.n_kv_heads, mesh_devices)
         assert cfg.n_heads % kv == 0, \
@@ -90,7 +109,8 @@ def _smoke_cfg(mesh_devices: int = 0):
 
 
 def _build_engine(mesh_devices: int = 0, params=None, sharded: bool = True,
-                  tp: bool = False, **engine_kwargs):
+                  tp: bool = False, arch: str = "qwen3-0.6b",
+                  **engine_kwargs):
     import jax
 
     from repro.models import build_model
@@ -104,7 +124,7 @@ def _build_engine(mesh_devices: int = 0, params=None, sharded: bool = True,
     if mesh_devices and sharded:
         from repro.launch.mesh import make_serve_mesh
         mesh = make_serve_mesh(mesh_devices)
-    cfg = _smoke_cfg(mesh_devices)
+    cfg = _smoke_cfg(mesh_devices, arch)
     fns = build_model(cfg)
     if params is None:
         params = fns.init(jax.random.PRNGKey(0))
@@ -204,6 +224,168 @@ def run_workload(quick: bool = False, mesh_devices: int = 0,
         desc["token_identical"] = all(
             a.out == b.out for a, b in zip(reqs, ref))
     return m, desc
+
+
+# ---------------------------------------------------------------------------
+# Model-family lane: SSM / hybrid archs through the same paged engine
+# ---------------------------------------------------------------------------
+
+
+def _family_oracle(cfg, fns, params, req, max_len: int) -> List[int]:
+    """The family's dense reference: whole-prompt ``prefill`` + per-token
+    ``decode_step`` on an unpaged cache, sampled with the engine's own
+    stateless sampler — what the paged run must match token-for-token."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.serve.engine import ServeEngine
+
+    cache, logits = fns.prefill(
+        params, {"tokens": jnp.asarray([req.prompt], jnp.int32)})
+    if cfg.family != "ssm":
+        # grow the prompt-sized KV planes to max_len before decoding:
+        # decode_step writes at cur_len, which would clamp against a
+        # prompt-length cache and corrupt the final KV entry.  Pure-ssm
+        # caches are fixed-size recurrent state — nothing to grow.
+        def embed(small, big):
+            if small.shape == big.shape:
+                return small.astype(big.dtype)
+            for ax in range(small.ndim):
+                if small.shape[ax] != big.shape[ax]:
+                    return jax.lax.dynamic_update_slice_in_dim(
+                        big, small.astype(big.dtype), 0, axis=ax)
+            return small
+        cache = jax.tree.map(embed, cache, fns.make_cache(1, max_len))
+    out = [ServeEngine._sample(np.asarray(logits[0]), req.sampling, 0)]
+    cur = len(req.prompt)
+    for _ in range(req.max_new - 1):
+        batch = {"token": jnp.asarray([[out[-1]]], jnp.int32)}
+        if cfg.family != "ssm":
+            batch["cur_len"] = jnp.int32(cur)
+        cache, lg = fns.decode_step(params, cache, batch)
+        out.append(ServeEngine._sample(np.asarray(lg[0]), req.sampling,
+                                       len(out)))
+        cur += 1
+    return out
+
+
+def run_family_workload(family: str, quick: bool = False
+                        ) -> Tuple[object, dict]:
+    """The transformer lane's mixed workload served through a stateful-family
+    arch (``FAMILY_ARCHS``), with one preemption-by-swap forced mid-decode so
+    the measured run provably crosses the slab park/restore path, then every
+    output verified token-identical against the family's dense oracle.
+
+    Single-device by construction: stateful families refuse a mesh (the slab
+    is not sharded), and ``sharded=False`` keeps ambient REPRO_SERVE_MESH
+    from breaking the lane."""
+    arch = FAMILY_ARCHS[family]
+    cfg, eng, params = _build_engine(0, sharded=False, arch=arch)
+    n = WORKLOAD_REQUESTS if quick else 3 * WORKLOAD_REQUESTS
+
+    # warm the prefill/decode jit caches outside the measured window
+    for r in _workload(cfg, 2, seed=99):
+        eng.submit(r)
+    eng.run_until_done()
+    eng.release_prefix_cache()
+    eng.reset_metrics()
+
+    reqs = _workload(cfg, n)
+    for r in reqs:
+        eng.submit(r)
+    # drive the loop by hand: once some request is mid-generation, park the
+    # one with the most tokens out (state slab + any KV blocks to the host
+    # tier) — it must resume and finish without changing a token
+    forced = False
+    while eng.step():
+        if forced or not eng.swap_enabled:
+            continue
+        live = [s for s in eng.slots if s is not None]
+        mid = [s for s in live if len(s.req.out) >= 2]
+        if mid:
+            eng._requeue(max(mid, key=lambda s: len(s.req.out)))
+            forced = True
+    finished = eng.run_until_done()
+    m = eng.metrics()
+
+    from repro.models import build_model
+    fns = build_model(cfg)
+    identical = all(r.out == _family_oracle(cfg, fns, params, r, MAX_LEN)
+                    for r in reqs)
+    desc = {
+        "requests": n,
+        "finished": len(finished),
+        "max_batch": MAX_BATCH,
+        "max_len": MAX_LEN,
+        "block_size": BLOCK_SIZE,
+        "arch": cfg.name,
+        "family": family,
+        "quick": quick,
+        "mesh_devices": m.mesh_devices,
+        "sharded": False,
+        "tp_devices": m.tp_devices,
+        "token_identical": identical,
+        "forced_preemption": forced,
+        "state_slots_peak": (eng.state_store.device.pool.peak_used
+                             if eng.state_store is not None else 0),
+    }
+    return m, desc
+
+
+def check_family(m, desc) -> List[str]:
+    """The SSM/hybrid serving PR's acceptance assertions: the stateful
+    families complete the same workload, match their dense oracle across a
+    forced preemption-by-swap, and prove their memory layout (no KV blocks
+    for pure ssm, below-dense KV for hybrid, slab slots actually used).
+    Prefix-reuse gates do NOT apply: sharing is structurally off for
+    stateful families (recurrent state summarizes the whole prefix)."""
+    errs = []
+    if desc["finished"] != desc["requests"]:
+        errs.append(f"only {desc['finished']}/{desc['requests']} finished")
+    if not desc["token_identical"]:
+        errs.append(f"{desc['family']} paged run NOT token-identical to its "
+                    "dense oracle")
+    if not m.tokens_per_sec > 0:
+        errs.append("tokens_per_sec not positive")
+    if not m.ttft_mean_s > 0:
+        errs.append("ttft not recorded")
+    if desc["forced_preemption"]:
+        if not m.preemptions >= 1:
+            errs.append("forced preemption not recorded")
+        if not (m.swap_out_blocks >= 1 and m.swap_in_blocks >= 1):
+            errs.append("preemption never crossed the swap tier "
+                        f"({m.swap_out_blocks} out/{m.swap_in_blocks} in)")
+    if desc["state_slots_peak"] < 1:
+        errs.append("no state-slab slot was ever allocated for a stateful "
+                    "family")
+    if desc["family"] == "ssm":
+        if m.peak_blocks_used != 0:
+            errs.append(f"pure-ssm run allocated {m.peak_blocks_used} KV "
+                        "blocks (state must live in the slab, not the pool)")
+    elif not m.peak_blocks_used < m.dense_equiv_blocks:
+        errs.append(f"hybrid peak blocks {m.peak_blocks_used} not below "
+                    f"dense footprint {m.dense_equiv_blocks}")
+    return errs
+
+
+def family_main(quick: bool = False):
+    """benchmarks.run entry for the ssm lane: every stateful family in the
+    zoo through the paged engine, one row per family headline."""
+    for family in ("ssm", "hybrid"):
+        m, desc = run_family_workload(family, quick=quick)
+        errs = check_family(m, desc)
+        if errs:
+            raise RuntimeError(f"{family}: " + "; ".join(errs))
+        us_per_tok = 1e6 / max(m.tokens_per_sec, 1e-9)
+        yield (f"serve_{family}_decode", f"{us_per_tok:.1f}",
+               f"{desc['arch']}: {m.tokens_per_sec:.1f} tok/s over "
+               f"{desc['requests']} reqs, dense-oracle "
+               f"{'OK' if desc['token_identical'] else 'MISMATCH'}")
+        yield (f"serve_{family}_state", f"{desc['state_slots_peak']}",
+               f"peak slab slots; KV peak {m.peak_blocks_used}/"
+               f"{m.pool_blocks} blocks, {m.preemptions} preemptions "
+               f"({m.swap_out_blocks} out / {m.swap_in_blocks} in)")
 
 
 # ---------------------------------------------------------------------------
@@ -791,6 +973,14 @@ def cli() -> int:
                          "per-tenant isolation (zero cross-tenant prefix "
                          "hits, oracle-identical streams) and throughput "
                          "vs the shared base.  Writes BENCH_multilora.json")
+    ap.add_argument("--family", default="", choices=["", "ssm", "hybrid"],
+                    help="serve a stateful model family (falcon-mamba-7b / "
+                         "zamba2-2.7b smoke archs) through the same paged "
+                         "workload, verified token-identical to the family's "
+                         "dense oracle across a forced preemption-by-swap; "
+                         "writes BENCH_serve_<family>.json (a separate "
+                         "trajectory series — the transformer ratchet does "
+                         "not apply)")
     ap.add_argument("--requests", type=int, default=0,
                     help="open-loop request count override (0 = workload "
                          "default)")
@@ -805,6 +995,51 @@ def cli() -> int:
     # inside _build_engine, so this is early enough)
     from repro.launch.mesh import ensure_fake_pod
     ensure_fake_pod(mesh_n)
+
+    if args.family:
+        if mesh_n:
+            print("bench_serve: FAIL: --family does not take --mesh/--tp "
+                  "(stateful families are single-device; the slab is not "
+                  "sharded)", file=sys.stderr)
+            return 2
+        out = args.out if args.out != "BENCH_serve.json" \
+            else f"BENCH_serve_{args.family}.json"
+        m, desc = run_family_workload(args.family, quick=args.quick)
+        point = {
+            "bench": "serve",
+            "unix_time": time.time(),
+            "family": args.family,
+            "workload": desc,
+            "mesh_devices": desc["mesh_devices"],
+            "tp_devices": desc["tp_devices"],
+            "tokens_per_sec": m.tokens_per_sec,
+            "ttft_mean_s": m.ttft_mean_s,
+            "itl_mean_s": m.itl_mean_s,
+            "peak_pool_utilization": m.peak_pool_utilization,
+            "peak_blocks_used": m.peak_blocks_used,
+            "dense_equiv_blocks": m.dense_equiv_blocks,
+            "state_slots_peak": desc["state_slots_peak"],
+            "preemptions": m.preemptions,
+            "swap_out_blocks": m.swap_out_blocks,
+            "swap_in_blocks": m.swap_in_blocks,
+            "metrics": m.to_dict(),
+        }
+        with open(out, "w") as f:
+            json.dump(point, f, indent=2)
+        print(m.summary())
+        print(f"{args.family} ({desc['arch']}): dense-oracle token identity "
+              f"{'OK' if desc['token_identical'] else 'MISMATCH'}, slab peak "
+              f"{desc['state_slots_peak']} slots, {m.preemptions} "
+              f"preemptions ({m.swap_out_blocks} out / {m.swap_in_blocks} "
+              f"in)")
+        print(f"{args.family} trajectory point written to {out}")
+        if args.baseline:
+            print("baseline gate skipped: family points are a separate "
+                  "series (transformer ratchet does not apply)")
+        errs = check_family(m, desc)
+        for e in errs:
+            print(f"bench_serve: FAIL: {e}", file=sys.stderr)
+        return 1 if errs else 0
 
     if args.multi_lora:
         if mesh_n:

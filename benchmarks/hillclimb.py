@@ -1,239 +1,237 @@
-"""§Perf hillclimbing driver: hypothesis -> change -> re-lower -> measure.
+"""Compiler-knob hillclimbing: hypothesis -> knob flip -> recompile -> measure.
 
-Three cells (chosen from the §Roofline baseline table):
-  * qwen3-0.6b x train_4k x pod1      — the paper's own model family (most
-    technique-representative); baseline memory-bound w/ 25.8 GB temp > HBM.
-  * llama4-maverick x decode_32k x pod1 — most collective-bound cell (6.3s
-    of expert-weight gathers).
-  * qwen2-vl-72b x train_4k x pod1    — worst roofline fraction among the
-    compute-heavy cells (4.2%), 453 GB/dev temp.
+Each cell is a representative term compiled end-to-end through
+``repro.pipeline.compile()`` (the same driver serving uses for kernel
+planning), and each experiment is one ``CompileOptions`` flip with the
+napkin-math prediction recorded next to the measurement:
 
-Each experiment is one knob flip (see repro/perf.py) with the napkin-math
-prediction recorded next to the measurement.  Results land in
-results/dryrun/<cell>__<tag>.json and are summarized to stdout +
-results/hillclimb.md.
+  * attention — the Fig. 3 softmax-attention chain; extraction-backend and
+    buffer-planner experiments.
+  * mlp_tp16  — the Fig. 6 MLP block on a 4x4 mesh; Auto Distribution
+    experiments (SAT vs branch-and-bound plan search, vectorize ablation).
+  * matmul    — a single square matmul; Auto Schedule MCTS-budget sweep.
 
-    PYTHONPATH=src python -m benchmarks.hillclimb [--only CELL]
+Everything runs in-process (no subprocess, no XLA dry-run): the measured
+quantities are the pipeline's own modeled costs, schedule latencies, buffer
+peaks and per-pass wall times, which is exactly the feedback signal ROADMAP
+item 5 (measured-cost autotuning) needs a working harness for.
+
+Results are cached resumably in results/hillclimb/<cell>__<tag>.json and
+summarized to stdout + results/hillclimb.md.
+
+    PYTHONPATH=src python -m benchmarks.hillclimb [--only CELL] [--quick]
+
+``main(only=None, quick=False)`` is importable; ``quick`` shrinks the terms
+and search budgets to smoke-test size and skips the on-disk cache.
 """
 from __future__ import annotations
 
 import argparse
 import json
-import os
-import subprocess
-import sys
+import time
+import traceback
 from pathlib import Path
 
+from repro.core.tensor_ir import inp, matmul, unary
+from repro.pipeline import CompileOptions, CompileTarget, Compiler
+
 ROOT = Path(__file__).resolve().parents[1]
-RESULTS = ROOT / "results" / "dryrun"
+RESULTS = ROOT / "results" / "hillclimb"
 
-# (cell, tag, env, hypothesis)
+
+def _attention_term(quick):
+    t, d = (256, 64) if quick else (1024, 128)
+    return matmul(unary(matmul(inp("Q", (t, d)), inp("K", (d, t))),
+                        kind="exp"), inp("V", (t, d)))
+
+
+def _mlp_term(quick):
+    t, d, f = (512, 256, 512) if quick else (4096, 1024, 4096)
+    x = inp("x", (t, d))
+    return matmul(unary(matmul(x, inp("w1", (d, f))), kind="exp"),
+                  inp("w2", (f, d)))
+
+
+def _matmul_term(quick):
+    n = 256 if quick else 2048
+    return matmul(inp("A", (n, n)), inp("B", (n, n)))
+
+
+# cell -> (term builder, target builder).  The mesh cell is where Auto
+# Distribution actually searches; single-device cells skip that pass.
+CELLS = {
+    "attention": (_attention_term, lambda quick: CompileTarget()),
+    "mlp_tp16": (_mlp_term,
+                 lambda quick: CompileTarget(
+                     mesh_axes=("data", "model"),
+                     mesh_sizes=(2, 2) if quick else (4, 4))),
+    "matmul": (_matmul_term, lambda quick: CompileTarget()),
+}
+
+# Baseline knobs: greedy extraction (the cheapest backend) so every
+# experiment's delta is against the same floor the serve path defaults to.
+def _baseline_options(quick):
+    return CompileOptions(extraction="greedy",
+                          schedule_iterations=6 if quick else 25,
+                          cache=False)
+
+
+# (cell, tag, options overrides, hypothesis)
 EXPERIMENTS = [
-    # ---- qwen3-0.6b train_4k --------------------------------------------
-    dict(arch="qwen3-0.6b", shape="train_4k", mesh="pod1", tag="iter1_rematN",
-         env={"REPRO_REMAT_POLICY": "nothing"},
-         hypothesis="remat=nothing stops saving per-layer dot outputs "
-                    "(~768 f/token x 28L): HBM traffic and temp memory drop "
-                    "~2x; compute rises ~30% (fwd recompute). Predict "
-                    "mem_s 7.2->~4.5, temp 25.8GB -> <16GB."),
-    dict(arch="qwen3-0.6b", shape="train_4k", mesh="pod1", tag="iter2_dp",
-         env={"REPRO_TRAIN_SHARDING": "dp"},
-         hypothesis="0.6B params fit replicated (1.2GB bf16): pure DP over "
-                    "256 chips needs only a 1.2GB grad all-reduce "
-                    "(2*(255/256)*1.2e9/50e9 = 48ms) vs 2.9s of TP/FSDP "
-                    "traffic. Predict coll_s 2.9 -> ~0.1."),
-    dict(arch="qwen3-0.6b", shape="train_4k", mesh="pod1",
-         tag="iter3_dp_rematN",
-         env={"REPRO_TRAIN_SHARDING": "dp", "REPRO_REMAT_POLICY": "nothing"},
-         hypothesis="combine iter1+iter2: memory AND collective drop "
-                    "together; step time should approach the compute term."),
-    # ---- llama4 decode_32k ----------------------------------------------
-    dict(arch="llama4-maverick-400b-a17b", shape="decode_32k", mesh="pod1",
-         tag="iter1_dispatch",
-         env={"REPRO_MOE_DECODE": "dispatch"},
-         hypothesis="gather decode moves each token's expert weights "
-                    "(128 tok x 250MB); dispatch moves token activations to "
-                    "expert shards instead (128 x 5120 x 2B = 1.3MB/layer "
-                    "all-to-all). Predict coll_s 6.3 -> <2."),
-    # ---- qwen2-vl-72b train_4k ------------------------------------------
-    dict(arch="qwen2-vl-72b", shape="train_4k", mesh="pod1",
-         tag="iter1_rematN",
-         env={"REPRO_REMAT_POLICY": "nothing"},
-         hypothesis="as qwen3/iter1 but at d=8192: saved dots are ~3.7x the "
-                    "residual stream. Predict mem_s 231 -> ~120, temp "
-                    "453GB -> ~90GB (layer boundaries still full-seq)."),
-    dict(arch="qwen2-vl-72b", shape="train_4k", mesh="pod1",
-         tag="iter2_rematN_sp",
-         env={"REPRO_REMAT_POLICY": "nothing", "REPRO_SEQ_PARALLEL": "1"},
-         hypothesis="sequence parallelism shards the saved layer boundaries "
-                    "over the model axis (seq/16): temp ~90GB -> ~6-10GB "
-                    "(fits HBM); collective unchanged or slightly up "
-                    "(reduce-scatter/all-gather pairs replace all-reduce)."),
+    # ---- attention: extraction + buffers --------------------------------
+    dict(cell="attention", tag="iter1_bnb",
+         options=dict(extraction="branch-and-bound"),
+         hypothesis="greedy extraction prices shared subterms per-use; "
+                    "branch-and-bound dedups them exactly. Predict modeled "
+                    "cost <= greedy, extract pass ~10x slower."),
+    dict(cell="attention", tag="iter2_wpmaxsat",
+         options=dict(extraction="wpmaxsat"),
+         hypothesis="WPMaxSAT reaches the same optimum as branch-and-bound "
+                    "(both exact); the interesting delta is extract-pass "
+                    "wall time on this e-graph size."),
+    dict(cell="attention", tag="iter3_optbuf",
+         options=dict(buffer_plan="optimal"),
+         hypothesis="exact interval bin-packing beats greedy first-fit on "
+                    "the arena peak when liveness ranges interleave; "
+                    "modeled compute cost unchanged (same term)."),
+    # ---- mlp_tp16: distribution + vectorize -----------------------------
+    dict(cell="mlp_tp16", tag="iter1_satdist",
+         options=dict(distribution_use_sat=True),
+         hypothesis="the SBP e-graph is much larger than the vectorize "
+                    "one: WPMaxSAT should find the same plan cost as the "
+                    "default branch-and-bound but pay for it in distribute "
+                    "pass time. Refutes/confirms the use_sat=False default."),
+    dict(cell="mlp_tp16", tag="iter2_novec",
+         options=dict(vectorize=False),
+         hypothesis="packed variants carry most of the modeled speedup on "
+                    "the MLP chain; disabling vectorize should collapse "
+                    "modeled_speedup toward 1x with the distribution plan "
+                    "unchanged (it searches the logical term)."),
+    # ---- matmul: schedule budget ----------------------------------------
+    dict(cell="matmul", tag="iter1_mcts4x",
+         options="mcts4x",              # resolved per-quick in run_cell
+         hypothesis="4x the MCTS structure budget: single-op graphs have a "
+                    "tiny structure space, so latency should plateau at the "
+                    "baseline value — measuring the diminishing return that "
+                    "motivates measured-cost autotuning (ROADMAP item 5)."),
 ]
 
 
-ROUND2 = [
-    dict(arch="qwen3-0.6b", shape="train_4k", mesh="pod1",
-         tag="iter4_mask_dp_rematN",
-         env={"REPRO_TRAIN_SHARDING": "dp", "REPRO_REMAT_POLICY": "nothing"},
-         hypothesis="CODE CHANGE (now default): additive (Sq,Skv) f32 causal "
-                    "masks instead of boolean where-selects — the old path "
-                    "materialized (chunks,B,H,q,kv) pred tensors that the "
-                    "loop hoisted into carries. Predict mem_s 4.0 -> ~2."),
-    dict(arch="qwen2-vl-72b", shape="train_4k", mesh="pod1",
-         tag="iter3_mask_rematN_sp",
-         env={"REPRO_REMAT_POLICY": "nothing", "REPRO_SEQ_PARALLEL": "1"},
-         hypothesis="additive masks at d=8192/80L: predict mem_s 57 -> ~35, "
-                    "temp 36GB -> ~25GB; collective unchanged."),
-    dict(arch="qwen2-vl-72b", shape="train_4k", mesh="pod1",
-         tag="iter4_mask_rematN_sp_bf16norm",
-         env={"REPRO_REMAT_POLICY": "nothing", "REPRO_SEQ_PARALLEL": "1",
-              "REPRO_NORM_F32": "0"},
-         hypothesis="bf16 rms_norm stops the CPU-backend f32 convert-fold "
-                    "that upgrades the TP collectives to f32: predict "
-                    "coll_s ~63 -> ~32 (2 B vs 4 B payloads)."),
-    dict(arch="llama4-maverick-400b-a17b", shape="decode_32k", mesh="pod1",
-         tag="iter2_mask_dispatch",
-         env={"REPRO_MOE_DECODE": "dispatch"},
-         hypothesis="additive masks also shrink the decode attention "
-                    "select; predict small mem win on top of dispatch."),
-    dict(arch="llama4-maverick-400b-a17b", shape="train_4k", mesh="pod1",
-         tag="bonus_int8_rematN_sp",
-         env={"REPRO_OPT_STATE": "int8", "REPRO_REMAT_POLICY": "nothing",
-              "REPRO_SEQ_PARALLEL": "1"},
-         hypothesis="BONUS CELL (worst-memory cell in the table): int8 "
-                    "AdamW moments cut optimizer HBM 8B->2.03B/param: args "
-                    "16.24GB -> ~7.5GB (fits HBM); remat+SP cut temp."),
-]
-EXPERIMENTS = EXPERIMENTS + ROUND2
+def _resolve_overrides(overrides, quick):
+    if overrides == "mcts4x":
+        return dict(schedule_iterations=(6 if quick else 25) * 4)
+    return dict(overrides)
 
 
-ROUND3 = [
-    dict(arch="qwen2-vl-72b", shape="train_4k", mesh="pod1",
-         tag="iter5_weightAG",
-         env={"REPRO_REMAT_POLICY": "nothing", "REPRO_SEQ_PARALLEL": "1",
-              "REPRO_WEIGHT_AG": "1"},
-         hypothesis="HLO forensics showed 965GB/step of ACTIVATION "
-                    "all-reduces: GSPMD partial-sums the FSDP-sharded "
-                    "contraction instead of all-gathering the ~110MB/layer "
-                    "weight shards. Constraining weights TP-only at use "
-                    "sites flips it: predict coll 62.9 -> ~20s, step -> "
-                    "~mem term (~45s)."),
-    dict(arch="qwen3-0.6b", shape="train_4k", mesh="pod1",
-         tag="iter5_dp_rematN_chunk4k",
-         env={"REPRO_TRAIN_SHARDING": "dp", "REPRO_REMAT_POLICY": "nothing",
-              "REPRO_ATTN_CHUNK": "4096"},
-         hypothesis="in pure DP the per-device batch is 1 seq: the 4-chunk "
-                    "q-scan only adds loop overhead and mask rebuilds; one "
-                    "full-seq attention block (4096^2 x16H f32 scores = "
-                    "1GB transient) is cheaper. Predict mem 3.5 -> ~3."),
-]
-EXPERIMENTS = EXPERIMENTS + ROUND3
+def run_cell(cell, tag="", overrides=None, quick=False):
+    """Compile one (cell, knob) point in-process; returns a plain dict.
 
-
-ROUND4 = [
-    dict(arch="qwen2-vl-72b", shape="train_4k", mesh="pod1",
-         tag="iter6_sp_mlpseq",
-         env={"REPRO_REMAT_POLICY": "nothing", "REPRO_SEQ_PARALLEL": "1"},
-         hypothesis="iter5 REFUTED the weight-AG theory and exposed the real "
-                    "bug: apply_mlp's own 'ff' constraint FORCED a seq->ff "
-                    "reshard per layer under SP (2GB AG + AR per dot). Fix "
-                    "(now default): the MLP stays sequence-sharded "
-                    "end-to-end. Predict coll 62.9 -> ~25, step -> ~40."),
-    dict(arch="llama4-maverick-400b-a17b", shape="train_4k", mesh="pod1",
-         tag="bonus2_int8_rematN_sp",
-         env={"REPRO_OPT_STATE": "int8", "REPRO_REMAT_POLICY": "nothing",
-              "REPRO_SEQ_PARALLEL": "1"},
-         hypothesis="retry of the bonus cell after fixing the Quantized "
-                    "moment sharding guard: args 16.24GB -> ~7.5GB."),
-]
-EXPERIMENTS = EXPERIMENTS + ROUND4
-
-
-ROUND5 = [
-    dict(arch="qwen2-vl-72b", shape="train_4k", mesh="pod1",
-         tag="iter7_sp_mlpseq_weightAG",
-         env={"REPRO_REMAT_POLICY": "nothing", "REPRO_SEQ_PARALLEL": "1",
-              "REPRO_WEIGHT_AG": "1"},
-         hypothesis="post-iter6 probe: MLP dots fixed (4GB ARs -> 0.9GB "
-                    "AGs), but the qkv/wo ATTENTION dots still partial-sum "
-                    "over the FSDP d (224+165+160GB of f32 ARs). Re-apply "
-                    "the weight TP-only constraint now that the MLP no "
-                    "longer masks it: predict coll 59.3 -> ~35."),
-]
-EXPERIMENTS = EXPERIMENTS + ROUND5
-
-BASELINES = [
-    ("qwen3-0.6b", "train_4k", "pod1"),
-    ("llama4-maverick-400b-a17b", "decode_32k", "pod1"),
-    ("qwen2-vl-72b", "train_4k", "pod1"),
-    # bonus (beyond the required three): the worst-memory cell in the table
-    ("llama4-maverick-400b-a17b", "train_4k", "pod1"),
-]
-
-
-def run_cell(arch, shape, mesh, tag="", env=None, timeout=3000):
-    suffix = f"__{tag}" if tag else ""
-    out = RESULTS / f"{arch}__{shape}__{mesh}{suffix}.json"
-    if out.exists():
+    Non-quick runs are cached resumably under results/hillclimb/ keyed on
+    cell+tag, mirroring the old dry-run layout."""
+    out = RESULTS / f"{cell}__{tag or 'baseline'}.json"
+    if not quick and out.exists():
         return json.load(open(out))
-    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
-           "--shape", shape, "--mesh", mesh]
-    if tag:
-        cmd += ["--tag", tag]
-    e = dict(os.environ)
-    e["PYTHONPATH"] = "src"
-    e.update(env or {})
-    r = subprocess.run(cmd, env=e, cwd=ROOT, capture_output=True, text=True,
-                       timeout=timeout)
-    if r.returncode != 0:
-        out.write_text(json.dumps({"arch": arch, "shape": shape,
-                                   "mesh": mesh, "tag": tag,
-                                   "status": "error",
-                                   "error": (r.stderr or "")[-3000:]}))
-    return json.load(open(out)) if out.exists() else {"status": "missing"}
+
+    term_of, target_of = CELLS[cell]
+    opts = _baseline_options(quick)
+    if overrides:
+        opts = CompileOptions(**{
+            **{f: getattr(opts, f) for f in opts.__dataclass_fields__},
+            **_resolve_overrides(overrides, quick)})
+    result = {"cell": cell, "tag": tag, "quick": quick,
+              "options": {f: getattr(opts, f)
+                          for f in opts.__dataclass_fields__}}
+    try:
+        t0 = time.monotonic()
+        res = Compiler(cache_dir=None).compile(
+            term_of(quick), target=target_of(quick), options=opts)
+        r = res.report
+        result.update(
+            status="ok",
+            total_s=time.monotonic() - t0,
+            baseline_cost_s=r.baseline_cost,
+            modeled_cost_s=r.optimized_cost,
+            modeled_speedup=r.modeled_speedup,
+            pass_ms={k: v * 1e3 for k, v in r.pass_times.items()},
+            buffer_peak=r.buffer.get("peak"),
+            buffer_naive=r.buffer.get("naive"),
+        )
+        if r.schedule:
+            result["schedule_latency_s"] = r.schedule["latency"]
+            result["schedule_baseline_s"] = r.schedule["baseline_latency"]
+            result["vmem_peak"] = r.schedule["vmem_peak"]
+        if r.distribution:
+            result["distribution_cost_s"] = r.distribution["cost"]
+            result["distribution_peak_mb"] = \
+                r.distribution["peak_memory"] / 1e6
+    except Exception:
+        result["status"] = "error"
+        result["error"] = traceback.format_exc()[-4000:]
+    if not quick:
+        RESULTS.mkdir(parents=True, exist_ok=True)
+        out.write_text(json.dumps(result, indent=1))
+    return result
 
 
 def fmt(d):
     if d.get("status") != "ok":
         return f"status={d.get('status')}"
-    r = d["roofline"]
-    return (f"comp {r['compute_s']:7.3f}  mem {r['memory_s']:8.3f}  "
-            f"coll {r['collective_s']:7.3f}  step {r['step_time_s']:8.3f}  "
-            f"temp {d.get('temp_size_in_bytes', 0)/2**30:7.2f}GB  "
-            f"args {d.get('argument_size_in_bytes', 0)/2**30:6.2f}GB")
+    s = (f"cost {d['modeled_cost_s']:.3e}s "
+         f"({d['modeled_speedup']:.2f}x model) ")
+    if d.get("schedule_latency_s") is not None:
+        s += (f"sched {d['schedule_latency_s']:.3e}s "
+              f"vmem {d['vmem_peak'] / 2**20:5.1f}MB ")
+    if d.get("distribution_cost_s") is not None:
+        s += (f"dist {d['distribution_cost_s']:.3e}s "
+              f"peak {d['distribution_peak_mb']:.1f}MB/dev ")
+    s += (f"buf {d['buffer_peak']}/{d['buffer_naive']}B "
+          f"compile {d['total_s'] * 1e3:.0f}ms")
+    return s
 
 
-def main(only=None):
-    lines = []
+def main(only=None, quick=False):
+    """Run every cell's baseline + experiments; returns the result dicts.
+
+    ``only`` substring-filters cells; ``quick`` shrinks terms/budgets and
+    skips the disk cache (smoke-test mode)."""
+    lines, results = [], []
 
     def emit(s):
         print(s, flush=True)
         lines.append(s)
 
-    for arch, shape, mesh in BASELINES:
-        if only and only not in arch:
+    for cell in CELLS:
+        if only and only not in cell:
             continue
-        base = run_cell(arch, shape, mesh)
-        emit(f"\n=== {arch} x {shape} x {mesh} ===")
-        emit(f"  BASELINE (paper-faithful): {fmt(base)}")
+        base = run_cell(cell, quick=quick)
+        results.append(base)
+        emit(f"\n=== {cell} ===")
+        emit(f"  BASELINE (greedy extraction): {fmt(base)}")
         for ex in EXPERIMENTS:
-            if (ex["arch"], ex["shape"], ex["mesh"]) != (arch, shape, mesh):
+            if ex["cell"] != cell:
                 continue
             emit(f"  -- {ex['tag']}")
             emit(f"     hypothesis: {ex['hypothesis']}")
-            res = run_cell(arch, shape, mesh, ex["tag"], ex["env"])
+            res = run_cell(cell, ex["tag"], ex["options"], quick=quick)
+            results.append(res)
             emit(f"     measured:   {fmt(res)}")
             if res.get("status") == "ok" and base.get("status") == "ok":
-                b, n = base["roofline"], res["roofline"]
-                emit(f"     delta:      step {b['step_time_s']:.3f} -> "
-                     f"{n['step_time_s']:.3f} "
-                     f"({b['step_time_s']/max(n['step_time_s'],1e-9):.2f}x)")
-    (ROOT / "results" / "hillclimb.md").write_text("\n".join(lines))
+                b, n = base["modeled_cost_s"], res["modeled_cost_s"]
+                emit(f"     delta:      cost {b:.3e} -> {n:.3e} "
+                     f"({b / max(n, 1e-30):.2f}x), "
+                     f"compile {base['total_s'] * 1e3:.0f} -> "
+                     f"{res['total_s'] * 1e3:.0f}ms")
+    if not quick:
+        (ROOT / "results").mkdir(exist_ok=True)
+        (ROOT / "results" / "hillclimb.md").write_text("\n".join(lines))
+    return results
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--quick", action="store_true")
     args = ap.parse_args()
-    main(args.only)
+    raise SystemExit(
+        1 if any(r.get("status") != "ok"
+                 for r in main(args.only, args.quick)) else 0)

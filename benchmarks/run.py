@@ -11,6 +11,7 @@ from __future__ import annotations
 import argparse
 import sys
 import traceback
+import types
 
 
 def main() -> int:
@@ -24,7 +25,9 @@ def main() -> int:
     from benchmarks import (bench_kernels, bench_latency, bench_multilora,
                             bench_passes, bench_serve, roofline)
     modules = [("passes", bench_passes), ("kernels", bench_kernels),
-               ("serve", bench_serve), ("latency", bench_latency),
+               ("serve", bench_serve),
+               ("serve_ssm", types.SimpleNamespace(main=bench_serve.family_main)),
+               ("latency", bench_latency),
                ("multilora", bench_multilora), ("roofline", roofline)]
     if not args.skip_fig9:
         from benchmarks import bench_single_chip

@@ -18,6 +18,7 @@ from repro.kernels.matmul import matmul_kernel
 from repro.kernels.paged_attention import paged_attention_kernel
 from repro.kernels.rmsnorm import rmsnorm_kernel
 from repro.kernels.ssm_scan import ssm_scan_kernel
+from repro.kernels.ssm_scan import ssm_scan_chunked as _ssm_scan_chunked_kernel
 
 
 def _interpret() -> bool:
@@ -135,4 +136,17 @@ def ssm_scan(a, b, c, h0, block_d: int = 512):
         bd //= 2
     fn = functools.partial(ssm_scan_kernel, block_d=max(1, bd),
                            interpret=_interpret())
+    return jax.vmap(fn)(a, b, c, h0)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block_d"))
+def ssm_scan_chunked(a, b, c, h0, chunk: int, block_d: int = 512):
+    """Batched chunked-prefill scan: same shapes as ``ssm_scan``, computed
+    ``chunk`` timesteps per kernel launch with the state carried across
+    chunk boundaries (the paged engine's prompt-streaming shape)."""
+    bd = min(block_d, a.shape[2])
+    while a.shape[2] % bd:
+        bd //= 2
+    fn = functools.partial(_ssm_scan_chunked_kernel, chunk=chunk,
+                           block_d=max(1, bd), interpret=_interpret())
     return jax.vmap(fn)(a, b, c, h0)

@@ -113,3 +113,16 @@ def ssm_scan_ref(a: jax.Array, b: jax.Array, c: jax.Array, h0: jax.Array):
         return h, jnp.sum(h * ct[None, :], axis=-1)
     h_last, y = jax.lax.scan(step, h0, (a, b, c))
     return y, h_last
+
+
+def ssm_scan_chunked_ref(a: jax.Array, b: jax.Array, c: jax.Array,
+                         h0: jax.Array, chunk: int):
+    """Oracle for ``ops.ssm_scan_chunked``: a python loop of sequential
+    scans over ``chunk``-sized slices, each resuming from the previous
+    slice's final state — the chunked-prefill carry contract spelled out."""
+    t_len = a.shape[0]
+    ys, h = [], h0
+    for s in range(0, t_len, chunk):
+        y, h = ssm_scan_ref(a[s:s + chunk], b[s:s + chunk], c[s:s + chunk], h)
+        ys.append(y)
+    return jnp.concatenate(ys, axis=0), h

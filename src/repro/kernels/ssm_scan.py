@@ -62,3 +62,37 @@ def ssm_scan_kernel(a: jax.Array, b: jax.Array, c: jax.Array, h0: jax.Array,
         interpret=interpret,
     )(a, b, c, h0)
     return y, hl
+
+
+def ssm_scan_chunked(a: jax.Array, b: jax.Array, c: jax.Array, h0: jax.Array,
+                     chunk: int, block_d: int = 512, interpret: bool = False):
+    """Chunked-prefill entry: the full scan as a ``lax.scan`` of fused-kernel
+    chunks with the recurrent state carried across chunk boundaries.
+
+    a,b (T,D,N) f32; c (T,N) f32; h0 (D,N) f32 -> (y (T,D) f32, h_last).
+    This is the serving shape: a prompt arrives in engine-sized chunks and
+    each chunk's kernel launch resumes from the previous chunk's ``h_last``.
+    A ragged tail is padded with the scan identity (a=1, b=0) — exact, not
+    approximate: ``1*h + 0`` is bitwise ``h``, so ``h_last`` and the valid
+    rows of ``y`` match the unchunked kernel.
+    """
+    t_len, d, n = a.shape
+    assert chunk >= 1
+    pad = (-t_len) % chunk
+    if pad:
+        a = jnp.concatenate([a, jnp.ones((pad, d, n), a.dtype)], axis=0)
+        b = jnp.concatenate([b, jnp.zeros((pad, d, n), b.dtype)], axis=0)
+        c = jnp.concatenate([c, jnp.zeros((pad, n), c.dtype)], axis=0)
+    n_chunks = (t_len + pad) // chunk
+
+    def step(h, xs):
+        at, bt, ct = xs
+        y, hl = ssm_scan_kernel(at, bt, ct, h, block_d=block_d,
+                                interpret=interpret)
+        return hl, y
+
+    h_last, ys = jax.lax.scan(
+        step, h0, (a.reshape(n_chunks, chunk, d, n),
+                   b.reshape(n_chunks, chunk, d, n),
+                   c.reshape(n_chunks, chunk, n)))
+    return ys.reshape(-1, d)[:t_len], h_last

@@ -3,6 +3,13 @@
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
         --requests 8 --max-new 16 --block-size 8 --temperature 0.8 --top-k 40
 
+Family-agnostic: any registered arch serves through the same engine —
+attention families (dense/moe) page their KV through the block pool, ssm
+archs (``--arch falcon-mamba-7b``) keep per-request recurrent state in the
+StateSlab tier, and hybrid archs (``--arch zamba2-2.7b``) carry the mixed
+layout (KV blocks for the shared attention, slab slots for the Mamba2
+backbone).
+
 ``--mesh N`` shards the KV block pool over N devices on the kv-heads axis
 (on a chipless host it forces an N-device CPU fake pod first); outputs are
 token-identical to the single-device run.  ``--tp N`` additionally shards

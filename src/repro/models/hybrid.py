@@ -170,3 +170,183 @@ def hybrid_decode_step(cfg: ModelConfig, params, cache: Dict, batch: Dict):
     h = rms_norm(x, params["final_norm"], cfg.norm_eps)
     logits = logits_from_hidden(cfg, params["embed"], h)[:, 0, :]
     return {"ssm": ssm2, "k": k2, "v": v2}, logits
+
+
+# ---------------------------------------------------------------------------
+# Paged serving: mixed layout — KV block pool for the shared-attention call
+# sites, state slab for the Mamba2 backbone
+# ---------------------------------------------------------------------------
+# cache = {"k"/"v": (n_seg, num_blocks, block_size, KV, hd)  — block axis 1,
+#          "ssm": {"h":   (n_seg, per, state_slots, H, P, N) f32,
+#                  "conv": (n_seg, per, state_slots, K-1, di)} — slot axis 2}
+# The two address spaces never mix: the block data plane (paged_block_*)
+# touches only the k/v leaves, the slab data plane (state_slot_*) only the
+# ssm leaves, so KVStore and StateSlab each manage their half of one shared
+# pytree.  Block 0 / slot 0 are the null targets for padded rows.
+
+
+def make_hybrid_paged_cache(cfg: ModelConfig, num_blocks: int,
+                            block_size: int, state_slots: int, dtype):
+    n_seg, per = _n_segments(cfg), cfg.hybrid.attn_every
+    di = cfg.ssm.expand * cfg.d_model
+    heads, hd_ssd = di // cfg.ssm.head_dim, cfg.ssm.head_dim
+    hd = cfg.resolved_head_dim
+    return {
+        "ssm": {
+            "h": jnp.zeros((n_seg, per, state_slots, heads, hd_ssd,
+                            cfg.ssm.d_state), jnp.float32),
+            "conv": jnp.zeros((n_seg, per, state_slots, cfg.ssm.d_conv - 1,
+                               di), dtype),
+        },
+        "k": jnp.zeros((n_seg, num_blocks, block_size, cfg.n_kv_heads, hd),
+                       dtype),
+        "v": jnp.zeros((n_seg, num_blocks, block_size, cfg.n_kv_heads, hd),
+                       dtype),
+    }
+
+
+# Block / slot indices are TRACED scalars (one jit per cache shape — the
+# transformer._paged_copy_jit convention).
+_block_copy_jit = jax.jit(lambda c, src, dst: {
+    **c, "k": c["k"].at[:, dst].set(c["k"][:, src]),
+    "v": c["v"].at[:, dst].set(c["v"][:, src])})
+_block_read_jit = jax.jit(lambda c, idx: {"k": c["k"][:, idx],
+                                          "v": c["v"][:, idx]})
+_block_write_jit = jax.jit(lambda c, idx, data: {
+    **c, "k": c["k"].at[:, idx].set(data["k"].astype(c["k"].dtype)),
+    "v": c["v"].at[:, idx].set(data["v"].astype(c["v"].dtype))})
+_slot_copy_jit = jax.jit(lambda c, src, dst: {
+    **c, "ssm": jax.tree.map(lambda v: v.at[:, :, dst].set(v[:, :, src]),
+                             c["ssm"])})
+_slot_read_jit = jax.jit(lambda c, idx: jax.tree.map(
+    lambda v: v[:, :, idx], c["ssm"]))
+_slot_write_jit = jax.jit(lambda c, idx, data: {
+    **c, "ssm": jax.tree.map(lambda v, d: v.at[:, :, idx].set(
+        d.astype(v.dtype)), c["ssm"], data)})
+
+
+def paged_block_copy(cache: Dict, src, dst) -> Dict:
+    """CoW data plane for the attention half (k/v leaves only)."""
+    return _block_copy_jit(cache, jnp.int32(src), jnp.int32(dst))
+
+
+def paged_block_read(cache: Dict, idx) -> Dict:
+    import numpy as np
+    return {k: np.asarray(v)
+            for k, v in _block_read_jit(cache, jnp.int32(idx)).items()}
+
+
+def paged_block_write(cache: Dict, idx, data: Dict) -> Dict:
+    return _block_write_jit(cache, jnp.int32(idx),
+                            {k: jnp.asarray(v) for k, v in data.items()})
+
+
+def state_slot_copy(cache: Dict, src, dst) -> Dict:
+    """CoW / fork data plane for the scan half (ssm leaves only)."""
+    return _slot_copy_jit(cache, jnp.int32(src), jnp.int32(dst))
+
+
+def state_slot_read(cache: Dict, idx) -> Dict:
+    import numpy as np
+    return {k: np.asarray(v)
+            for k, v in _slot_read_jit(cache, jnp.int32(idx)).items()}
+
+
+def state_slot_write(cache: Dict, idx, data: Dict) -> Dict:
+    return _slot_write_jit(cache, jnp.int32(idx),
+                           {k: jnp.asarray(v) for k, v in data.items()})
+
+
+def hybrid_prefill_chunk(cfg: ModelConfig, params, cache: Dict, batch: Dict,
+                         m_used=None):
+    """One prompt chunk for a single request: scan carry-state threads across
+    chunk boundaries through the state slab while attention KV lands in the
+    block table — the mixed layout in one pass.
+
+    batch: {"tokens" (1,C), "block_table" (1,M), "state_slot" (),
+    "start" (), "prompt_len" ()} — conventions as in
+    ``transformer.lm_prefill_chunk`` plus the slab slot.  At ``start == 0``
+    the slot's recycled state reads as zeros in-graph.
+    """
+    slot = batch["state_slot"].astype(jnp.int32)
+    start = batch["start"].astype(jnp.int32)
+    prompt_len = batch["prompt_len"].astype(jnp.int32)
+    valid_len = prompt_len - start
+    table = batch["block_table"].astype(jnp.int32)
+    c = batch["tokens"].shape[1]
+    chunk_pos = start + jnp.arange(c, dtype=jnp.int32)
+    x = embed_tokens(params["embed"], batch["tokens"])
+    st = jax.tree.map(lambda v: v[:, :, slot][:, :, None], cache["ssm"])
+    st = jax.tree.map(lambda v: jnp.where(start > 0, v, 0), st)
+    shared = params["shared"]
+
+    def body(x, xs):
+        seg_layers, ssm_st, kp, vp = xs
+
+        def mbody(x, ys):
+            lp, s = ys
+            y, s2 = mamba.mamba2_chunk(
+                cfg, lp["mamba"], rms_norm(x, lp["ln"], cfg.norm_eps), s,
+                valid_len)
+            return x + y, s2
+        x, ssm2 = jax.lax.scan(mbody, x, (seg_layers, ssm_st))
+        xn = rms_norm(x, shared["ln1"], cfg.norm_eps)
+        o, kp, vp = attn.attention_prefill_chunk_block(
+            cfg, shared["attn"], xn, kp, vp, table, chunk_pos, prompt_len,
+            m_used=m_used)
+        h = x + o
+        h = h + apply_mlp(cfg, shared["mlp"],
+                          rms_norm(h, shared["ln2"], cfg.norm_eps))
+        return h, (ssm2, kp, vp)
+
+    x, (ssm2, k2, v2) = jax.lax.scan(
+        body, x, (params["layers"], st, cache["k"], cache["v"]))
+    cache = {"k": k2, "v": v2,
+             "ssm": jax.tree.map(
+                 lambda v, s: v.at[:, :, slot].set(s[:, :, 0].astype(v.dtype)),
+                 cache["ssm"], ssm2)}
+    h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return cache, logits_from_hidden(cfg, params["embed"], h)
+
+
+def hybrid_decode_step_paged(cfg: ModelConfig, params, cache: Dict,
+                             batch: Dict):
+    """One decode step over the mixed layout.
+
+    batch: {"token" (B,1), "block_tables" (B,M), "seq_lens" (B,),
+    "state_slots" (B,)}.  Every row sits at its own position (no shared
+    ``cur_len``): attention uses per-row seq_lens against the block pool,
+    the Mamba2 backbone gathers/scatters per-row slab slots.
+    """
+    tables = batch["block_tables"].astype(jnp.int32)
+    seq_lens = batch["seq_lens"].astype(jnp.int32)
+    slots = batch["state_slots"].astype(jnp.int32)
+    x = embed_tokens(params["embed"], batch["token"])
+    st = jax.tree.map(lambda v: v[:, :, slots], cache["ssm"])
+    shared = params["shared"]
+
+    def body(x, xs):
+        seg_layers, ssm_st, kp, vp = xs
+
+        def mbody(x, ys):
+            lp, s = ys
+            y, s2 = mamba.mamba2_decode_step(
+                cfg, lp["mamba"], rms_norm(x, lp["ln"], cfg.norm_eps), s)
+            return x + y, s2
+        x, ssm2 = jax.lax.scan(mbody, x, (seg_layers, ssm_st))
+        xn = rms_norm(x, shared["ln1"], cfg.norm_eps)
+        o, kp, vp = attn.attention_decode_block_paged(
+            cfg, shared["attn"], xn, kp, vp, tables, seq_lens)
+        h = x + o
+        h = h + apply_mlp(cfg, shared["mlp"],
+                          rms_norm(h, shared["ln2"], cfg.norm_eps))
+        return h, (ssm2, kp, vp)
+
+    x, (ssm2, k2, v2) = jax.lax.scan(
+        body, x, (params["layers"], st, cache["k"], cache["v"]))
+    cache = {"k": k2, "v": v2,
+             "ssm": jax.tree.map(lambda v, s: v.at[:, :, slots].set(
+                 s.astype(v.dtype)), cache["ssm"], ssm2)}
+    h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_from_hidden(cfg, params["embed"], h)[:, 0, :]
+    return cache, logits

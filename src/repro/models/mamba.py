@@ -172,6 +172,70 @@ def mamba1_decode_step(cfg: ModelConfig, p, x: jax.Array, state: Dict):
     return out, new_state
 
 
+def _conv_with_carry(xs: jax.Array, carry: jax.Array, w: jax.Array,
+                     b: jax.Array):
+    """Depthwise causal conv of one chunk continuing a longer sequence.
+
+    ``carry`` (B,K-1,C) holds the last K-1 *pre-activation* conv inputs of
+    the previous chunk (zeros on the first chunk — identical to the zero
+    left-pad the from-scratch conv applies).  Returns the chunk's conv
+    outputs and the extended pre-activation sequence (the caller slices its
+    next carry window out of it).
+    """
+    k = w.shape[0]
+    ext = jnp.concatenate([carry, xs], axis=1)        # (B, K-1+C, C)
+    return causal_conv1d(ext, w, b)[:, k - 1:], ext
+
+
+def _next_conv_carry(ext: jax.Array, valid_len, k: int) -> jax.Array:
+    """The carry window after a chunk whose first ``valid_len`` positions are
+    real: extended index ``valid_len + K-2`` is chunk position
+    ``valid_len - 1`` (the last real token), so the K-1 entries ending there
+    start at ``valid_len`` — always in bounds, and degenerating to the old
+    carry when ``valid_len`` is 0."""
+    b, _, c = ext.shape
+    return jax.lax.dynamic_slice(
+        ext, (0, jnp.asarray(valid_len, jnp.int32), 0), (b, k - 1, c))
+
+
+def mamba1_chunk(cfg: ModelConfig, p, x: jax.Array, state: Dict, valid_len):
+    """One prompt chunk continuing from carried state (chunked prefill).
+
+    x (B,C,d); state as in ``mamba1_decode_step``; ``valid_len`` () int32 —
+    chunk positions >= it are padding, masked to identity scan steps
+    (dt -> 0 gives a=exp(0)=1, b=0: exactly the pad convention of
+    ``_chunked_selective_scan``), so ``h_last`` is the state after the last
+    *real* token and padded outputs are garbage the engine discards.
+    Bit-identical to one ``mamba1_forward`` over the concatenated chunks
+    whenever chunk boundaries fall on multiples of ``cfg.ssm.chunk`` (the
+    scan tree then combines the same groups in the same order).
+    """
+    B, C, _ = x.shape
+    di, n, k = _d_inner(cfg), cfg.ssm.d_state, cfg.ssm.d_conv
+    dtr = _dt_rank(cfg)
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    xs, z = jnp.split(xz, 2, axis=-1)
+    conv, ext = _conv_with_carry(xs, state["conv"], p["conv_w"], p["conv_b"])
+    xs = jax.nn.silu(conv.astype(jnp.float32)).astype(x.dtype)
+    proj = jnp.einsum("bsi,ie->bse", xs, p["x_proj"])
+    dt_r, b_ssm, c_ssm = jnp.split(proj, [dtr, dtr + n], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,ri->bsi", dt_r, p["dt_proj"]).astype(jnp.float32)
+        + p["dt_bias"])                                        # (B,C,di) f32
+    pos = jnp.arange(C, dtype=jnp.int32)
+    dt = jnp.where((pos < valid_len)[None, :, None], dt, 0.0)
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt[..., None] * A[None, None])
+    b = (dt[..., None] * b_ssm.astype(jnp.float32)[:, :, None, :]
+         * xs.astype(jnp.float32)[..., None])
+    y, h_last = _chunked_selective_scan(a, b, c_ssm.astype(jnp.float32),
+                                        state["h"], cfg.ssm.chunk)
+    y = (y + p["D"][None, None] * xs.astype(jnp.float32)).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"])
+    return out, {"h": h_last, "conv": _next_conv_carry(ext, valid_len, k)}
+
+
 # ===========================================================================
 # Mamba2 (SSD)
 # ===========================================================================
@@ -320,3 +384,37 @@ def mamba2_decode_step(cfg: ModelConfig, p, x: jax.Array, state: Dict):
                  p["norm"], cfg.norm_eps)
     out = jnp.einsum("bi,id->bd", y, p["out_proj"])[:, None, :]
     return out, {"h": h, "conv": window[:, 1:, :]}
+
+
+def mamba2_chunk(cfg: ModelConfig, p, x: jax.Array, state: Dict, valid_len):
+    """One prompt chunk continuing from carried state (chunked prefill).
+
+    x (B,C,d); state as in ``mamba2_decode_step``; ``valid_len`` () int32 —
+    padded tail positions are masked via dt -> 0 (SSD's own pad convention:
+    decay exp(0)=1 and zero dt-weighted input leave the state untouched), so
+    ``h_last`` is the state after the last real token.  The conv carry is
+    the last K-1 *pre-activation* inputs (``zx[..., di:]`` — note mamba2
+    splits z first), mirroring ``mamba2_forward``'s ``_tail_window``.
+    """
+    B, C, _ = x.shape
+    di, n, k = _d_inner(cfg), cfg.ssm.d_state, cfg.ssm.d_conv
+    H, P = _ssd_heads(cfg), cfg.ssm.head_dim
+    zx = jnp.einsum("bsd,de->bse", x, p["in_proj_zx"])
+    bcdt = jnp.einsum("bsd,de->bse", x, p["in_proj_bcdt"])
+    z, xs = jnp.split(zx, 2, axis=-1)
+    b_ssm, c_ssm, dt = jnp.split(bcdt, [n, 2 * n], axis=-1)
+    conv, ext = _conv_with_carry(xs, state["conv"], p["conv_w"], p["conv_b"])
+    xs = jax.nn.silu(conv.astype(jnp.float32)).astype(x.dtype)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])    # (B,C,H)
+    pos = jnp.arange(C, dtype=jnp.int32)
+    dt = jnp.where((pos < valid_len)[None, :, None], dt, 0.0)
+    A = -jnp.exp(p["A_log"])
+    xh = xs.reshape(B, C, H, P)
+    y, h_last = ssd_forward(xh, dt, A, b_ssm, c_ssm, cfg.ssm.chunk,
+                            state["h"])
+    y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, C, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                 p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"])
+    return out, {"h": h_last, "conv": _next_conv_carry(ext, valid_len, k)}

@@ -23,9 +23,10 @@ class ModelFns:
     decode_step: Callable    # (params, cache, batch) -> (cache, logits)
     make_cache: Callable     # (batch_size, max_len) -> cache pytree
     input_specs: Callable    # (shape_spec) -> dict of ShapeDtypeStruct
-    # Paged-KV serving interface (block-table-aware); None for families that
-    # don't have a paged path yet (ssm/hybrid caches are O(1) per request).
-    make_paged_cache: Optional[Callable] = None  # (num_blocks, block_size) -> cache
+    # Paged serving interface (block-table-aware).  Families with recurrent
+    # state (ssm/hybrid) take a ``state_slots`` kwarg on make_paged_cache and
+    # read "state_slot(s)" from the batch; attention families ignore both.
+    make_paged_cache: Optional[Callable] = None  # (num_blocks, block_size[, state_slots=]) -> cache
     decode_paged: Optional[Callable] = None      # (params, cache, batch) -> (cache, logits)
     prefill_chunk: Optional[Callable] = None     # (params, cache, batch, m_used=) -> (cache, logits)
     # Tiered-KVStore data plane (repro.serve.kv_store): per-block device copy
@@ -36,6 +37,12 @@ class ModelFns:
     paged_block_copy: Optional[Callable] = None   # (cache, src, dst) -> cache
     paged_block_read: Optional[Callable] = None   # (cache, idx) -> host pytree
     paged_block_write: Optional[Callable] = None  # (cache, idx, data) -> cache
+    # Recurrent-state slab data plane (repro.serve.kv_store.StateSlab): same
+    # three operations at *slot* granularity over the same cache pytree.
+    # Presence of state_slot_copy is how the engine detects a stateful family.
+    state_slot_copy: Optional[Callable] = None    # (cache, src, dst) -> cache
+    state_slot_read: Optional[Callable] = None    # (cache, idx) -> host pytree
+    state_slot_write: Optional[Callable] = None   # (cache, idx, data) -> cache
 
 
 def _sds(shape, dtype):
@@ -102,6 +109,20 @@ def build_model(cfg: ModelConfig) -> ModelFns:
             decode_step=lambda p, c, b: ssm_lm.ssm_lm_decode_step(cfg, p, c, b),
             make_cache=lambda bs, ml: ssm_lm.make_ssm_cache(cfg, bs, dtype),
             input_specs=input_specs,
+            # attention-free: the "paged" cache is all slab, no KV pages —
+            # the block data plane is a no-op (the engine never grows a table)
+            make_paged_cache=lambda nb, bsz, state_slots=1:
+                ssm_lm.make_ssm_paged_cache(cfg, state_slots, dtype),
+            decode_paged=lambda p, c, b: ssm_lm.ssm_lm_decode_step_paged(
+                cfg, p, c, b),
+            prefill_chunk=lambda p, c, b, m_used=None:
+                ssm_lm.ssm_lm_prefill_chunk(cfg, p, c, b),
+            paged_block_copy=lambda c, src, dst: c,
+            paged_block_read=lambda c, idx: {},
+            paged_block_write=lambda c, idx, data: c,
+            state_slot_copy=ssm_lm.state_slot_copy,
+            state_slot_read=ssm_lm.state_slot_read,
+            state_slot_write=ssm_lm.state_slot_write,
         )
 
     if fam == "hybrid":
@@ -122,6 +143,21 @@ def build_model(cfg: ModelConfig) -> ModelFns:
             decode_step=lambda p, c, b: hybrid.hybrid_decode_step(cfg, p, c, b),
             make_cache=lambda bs, ml: hybrid.make_hybrid_cache(cfg, bs, ml, dtype),
             input_specs=input_specs,
+            # mixed layout: KV pages for the shared-attention call sites,
+            # state slab for the Mamba2 backbone — one shared cache pytree
+            make_paged_cache=lambda nb, bsz, state_slots=1:
+                hybrid.make_hybrid_paged_cache(cfg, nb, bsz, state_slots,
+                                               dtype),
+            decode_paged=lambda p, c, b: hybrid.hybrid_decode_step_paged(
+                cfg, p, c, b),
+            prefill_chunk=lambda p, c, b, m_used=None:
+                hybrid.hybrid_prefill_chunk(cfg, p, c, b, m_used=m_used),
+            paged_block_copy=hybrid.paged_block_copy,
+            paged_block_read=hybrid.paged_block_read,
+            paged_block_write=hybrid.paged_block_write,
+            state_slot_copy=hybrid.state_slot_copy,
+            state_slot_read=hybrid.state_slot_read,
+            state_slot_write=hybrid.state_slot_write,
         )
 
     if fam == "audio":

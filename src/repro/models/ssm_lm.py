@@ -81,3 +81,101 @@ def ssm_lm_decode_step(cfg: ModelConfig, params, cache: Dict, batch: Dict):
     h = rms_norm(x, params["final_norm"], cfg.norm_eps)
     logits = logits_from_hidden(cfg, params["embed"], h)[:, 0, :]
     return new_states, logits
+
+
+# ---------------------------------------------------------------------------
+# Paged serving: state-slab cache (slot axis instead of batch axis)
+# ---------------------------------------------------------------------------
+# The paged "cache" for an attention-free LM is the same pytree as the dense
+# one with the batch axis widened to ``state_slots``: slot s holds request
+# s's O(1) recurrent state.  Slot 0 is the null slot (padded decode rows).
+# There are no KV pages at all — the engine's block pool stays empty.
+
+
+def make_ssm_paged_cache(cfg: ModelConfig, state_slots: int, dtype):
+    return make_ssm_cache(cfg, state_slots, dtype)
+
+
+# Slot indices are TRACED scalars (one jit per cache shape, shared across all
+# slots and engines — the same convention as transformer._paged_copy_jit).
+_slot_copy_jit = jax.jit(lambda c, src, dst: jax.tree.map(
+    lambda v: v.at[:, dst].set(v[:, src]), c))
+_slot_read_jit = jax.jit(lambda c, idx: jax.tree.map(lambda v: v[:, idx], c))
+_slot_write_jit = jax.jit(lambda c, idx, data: jax.tree.map(
+    lambda v, d: v.at[:, idx].set(d.astype(v.dtype)), c, data))
+
+
+def state_slot_copy(cache: Dict, src, dst) -> Dict:
+    """Device-side copy of one request's recurrent state (all layers): the
+    CoW / fork data plane for ``repro.serve.kv_store.StateSlab``."""
+    return _slot_copy_jit(cache, jnp.int32(src), jnp.int32(dst))
+
+
+def state_slot_read(cache: Dict, idx) -> Dict:
+    """Slot ``idx`` -> host numpy (the device->host half of a state swap)."""
+    import numpy as np
+    return {k: np.asarray(v)
+            for k, v in _slot_read_jit(cache, jnp.int32(idx)).items()}
+
+
+def state_slot_write(cache: Dict, idx, data: Dict) -> Dict:
+    """Host numpy state -> slot ``idx`` (the swap_in half)."""
+    return _slot_write_jit(cache, jnp.int32(idx),
+                           {k: jnp.asarray(v) for k, v in data.items()})
+
+
+def ssm_lm_prefill_chunk(cfg: ModelConfig, params, cache: Dict, batch: Dict):
+    """Process one prompt chunk for a single request into its state slot.
+
+    batch: {"tokens" (1,C) int32 (null-padded past the prompt),
+    "state_slot" () int32, "start" () int32, "prompt_len" () int32 — the
+    chunk's write limit, as in ``transformer.lm_prefill_chunk``}.  At
+    ``start == 0`` the slot's (recycled, unzeroed) state is replaced by
+    zeros in-graph, so slots never need a zeroing pass on alloc.  Returns
+    (cache, logits (1,C,V)).
+    """
+    slot = batch["state_slot"].astype(jnp.int32)
+    start = batch["start"].astype(jnp.int32)
+    valid_len = batch["prompt_len"].astype(jnp.int32) - start
+    x = embed_tokens(params["embed"], batch["tokens"])
+    st = jax.tree.map(lambda v: v[:, slot][:, None], cache)   # (L,1,...)
+    st = jax.tree.map(lambda v: jnp.where(start > 0, v, 0), st)
+
+    def body(x, xs):
+        lp, s = xs
+        y, s2 = mamba.mamba1_chunk(cfg, lp["mamba"],
+                                   rms_norm(x, lp["ln"], cfg.norm_eps), s,
+                                   valid_len)
+        return x + y, s2
+    x, new_st = jax.lax.scan(body, x, (params["layers"], st))
+    cache = jax.tree.map(
+        lambda v, s: v.at[:, slot].set(s[:, 0].astype(v.dtype)), cache, new_st)
+    h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return cache, logits_from_hidden(cfg, params["embed"], h)
+
+
+def ssm_lm_decode_step_paged(cfg: ModelConfig, params, cache: Dict,
+                             batch: Dict):
+    """One decode step over the state slab.
+
+    batch: {"token" (B,1) int32, "state_slots" (B,) int32}.  Rows gather
+    their slot's state, step the recurrence, and scatter back; padded rows
+    use slot 0 (collisions there are harmless — the null slot is never an
+    allocated request's state).
+    """
+    slots = batch["state_slots"].astype(jnp.int32)
+    x = embed_tokens(params["embed"], batch["token"])
+    st = jax.tree.map(lambda v: v[:, slots], cache)           # (L,B,...)
+
+    def body(x, xs):
+        lp, s = xs
+        y, s2 = mamba.mamba1_decode_step(cfg, lp["mamba"],
+                                         rms_norm(x, lp["ln"], cfg.norm_eps),
+                                         s)
+        return x + y, s2
+    x, new_st = jax.lax.scan(body, x, (params["layers"], st))
+    cache = jax.tree.map(
+        lambda v, s: v.at[:, slots].set(s.astype(v.dtype)), cache, new_st)
+    h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_from_hidden(cfg, params["embed"], h)[:, 0, :]
+    return cache, logits

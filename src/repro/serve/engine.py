@@ -88,7 +88,7 @@ from repro.kernels import lora as lora_kernels
 from repro.serve.adapters import AdapterStore, AdapterStoreFull
 from repro.serve.faults import FaultInjector, InjectedFault, check_kv_invariants
 from repro.serve.kv_store import (DEVICE, HOST, Block, BlockTable, DeviceTier,
-                                  HostTier, KVStore)
+                                  HostTier, KVStore, SlabDeviceView, StateSlab)
 from repro.serve.paged_cache import (BlockPool, PoolExhausted, ServeMetrics,
                                      blocks_for_tokens, dense_equiv_blocks,
                                      worst_case_blocks)
@@ -187,6 +187,9 @@ class _Active:
     admit_seq: int              # admission order (preemption picks the max)
     next_prefill: int = 0       # prompt tokens already prefilled
     pos: int = 0                # KV entries written (valid only post-prefill)
+    # stateful families (ssm/hybrid): the request's recurrent-state slab
+    # slot, a refcounted handle in the engine's StateSlab (None otherwise)
+    state: Optional[Block] = None
 
     @property
     def prefill_done(self) -> bool:
@@ -202,6 +205,9 @@ class _Parked:
     blocks: List[Block]
     next_prefill: int
     pos: int
+    # stateful families: the recurrent state, swapped whole to the slab's
+    # host tier (state is never shared, so it always moves on park)
+    state: Optional[Block] = None
 
 
 # ---------------------------------------------------------------------------
@@ -268,7 +274,7 @@ class ServeEngine:
         # raw token ids with 2-D positions, which would silently degrade
         # M-RoPE + vision-embeds frontends; wiring the embeds interface
         # through chunked prefill is a roadmap item.
-        assert cfg.family in ("dense", "moe"), \
+        assert cfg.family in ("dense", "moe", "ssm", "hybrid"), \
             "paged engine targets token-frontend decoder-LM families"
         assert admission in ("conservative", "optimistic")
         self.cfg = cfg
@@ -290,6 +296,19 @@ class ServeEngine:
             f"family {cfg.family!r} has no paged decode path"
         assert self.fns.paged_block_copy is not None, \
             f"family {cfg.family!r} has no paged block data plane"
+        # stateful families (ssm, hybrid) carry O(1) recurrent state per
+        # request in a StateSlab tier beside the block pool; attention-free
+        # families never touch the block table at all
+        self.has_attention = cfg.family in ("dense", "moe", "hybrid")
+        self.has_state = self.fns.state_slot_copy is not None
+        if self.has_state:
+            # scan-chunk alignment: engine chunk boundaries must land on
+            # multiples of the SSD chunk so the associative-scan tree inside
+            # an engine chunk matches the dense oracle's bitwise (the masked
+            # tail is exact: dt=0 gives a=exp(0)=1, b=0, the scan identity)
+            g = cfg.ssm.chunk
+            self.prefill_chunk_tokens = max(
+                g * ((self.prefill_chunk_tokens + g - 1) // g), g)
 
         # tiered KV store: device slab + host swap tier + prefix registry
         self.swap_enabled = perf().kv_swap and (host_blocks is None
@@ -298,6 +317,11 @@ class ServeEngine:
             if self.swap_enabled else 0
         prefix_budget = prefix_cache_blocks if prefix_cache_blocks \
             is not None else self.pool.usable_blocks // 4
+        if self.has_state:
+            # adopted KV blocks cannot reproduce a request's scan state, so
+            # prefix sharing is structurally off for stateful families:
+            # budget 0 makes match_prefix miss and register_prefix a no-op
+            prefix_budget = 0
 
         # multi-device serving: shard the block slab over the mesh's "model"
         # axis on the kv-heads dim, replicate params, and leave every piece
@@ -309,12 +333,22 @@ class ServeEngine:
             self.mesh = None
         else:
             self.mesh = mesh if mesh is not None else _mesh_from_knob()
+        if self.mesh is not None and self.has_state:
+            raise NotImplementedError(
+                "sharded serving of ssm/hybrid families is not supported "
+                "yet — the state slab has no mesh partition rules; run "
+                "stateful families on a single-device engine")
         self.tp = bool(tp) if tp is not None else perf().serve_tp
         if self.mesh is None:
             self.tp = False
         self.tp_rules = None
         self.tp_report = None
-        cache0 = self.fns.make_paged_cache(num_blocks, block_size)
+        # slot 0 of the state slab is the null slot (padded decode rows)
+        self.state_slots = max_batch + 1 if self.has_state else 0
+        cache0 = (self.fns.make_paged_cache(num_blocks, block_size,
+                                            state_slots=self.state_slots)
+                  if self.has_state
+                  else self.fns.make_paged_cache(num_blocks, block_size))
         shardings = None
         if self.mesh is not None:
             n_tp = int(self.mesh.shape.get("model", 1))
@@ -358,6 +392,23 @@ class ServeEngine:
         self.store = KVStore(device, HostTier(n_host),
                              prefix_cache_blocks=prefix_budget)
 
+        # state slab: per-request O(1) recurrent state as the degenerate
+        # one-block case of the block pool — same refcounted handles, same
+        # host swap tier, same ledger invariants.  The slab view shares the
+        # DeviceTier (one cache pytree holds KV pages and state slots; the
+        # slot data plane touches only the state leaves).
+        self.state_store: Optional[StateSlab] = None
+        if self.has_state:
+            state_pool = BlockPool(self.state_slots, 1)
+            slab_view = SlabDeviceView(device, state_pool,
+                                       self.fns.state_slot_copy,
+                                       self.fns.state_slot_read,
+                                       self.fns.state_slot_write)
+            # parked states can outnumber the live slots; host-full simply
+            # downgrades the park to the legacy drop (perf, not correctness)
+            n_state_host = 4 * max_batch if self.swap_enabled else 0
+            self.state_store = StateSlab(slab_view, HostTier(n_state_host))
+
         # fault tolerance: chaos injector (opt-in), bounded queue, default
         # deadline, crash quarantine bookkeeping
         if fault_injector is False:
@@ -367,6 +418,9 @@ class ServeEngine:
                 else FaultInjector.from_env()
         self.pool.fault_injector = self.faults
         self.store.fault_injector = self.faults
+        if self.state_store is not None:
+            self.state_store.fault_injector = self.faults
+            self.state_store.device.pool.fault_injector = self.faults
         self.max_queue = perf().serve_max_queue if max_queue is None \
             else max_queue
         self.default_deadline_ms = perf().serve_deadline_ms
@@ -415,7 +469,7 @@ class ServeEngine:
         self.compile_reports: Dict[str, object] = {}
         self.compile_report = None
         self.kernel_plan = None
-        if plan_kernels:
+        if plan_kernels and self.has_attention:
             compiler = compiler or default_compiler()
             hd = cfg.resolved_head_dim
             span = self.max_blocks_per_seq * block_size
@@ -593,6 +647,11 @@ class ServeEngine:
         A restored request already holds its written blocks; it reserves the
         remaining growth plus one slot per host block to swap back in.
         """
+        if not self.has_attention:
+            # attention-free: the footprint is one fixed-size state slot,
+            # bounded by construction (slots == max_batch) — no KV blocks
+            # to reserve, admission is gated by batch slots alone
+            return 0
         plen, bs = len(req.prompt), self.block_size
         worst = worst_case_blocks(plen, req.max_new, bs)
         if parked is not None:
@@ -632,7 +691,7 @@ class ServeEngine:
                 self._reject(req, f"prompt+max_new {len(req.prompt) + req.max_new}"
                                   f" exceeds max_len {self.max_len}")
                 continue
-            if worst > self.pool.usable_blocks:
+            if self.has_attention and worst > self.pool.usable_blocks:
                 self.queue.pop(0)
                 self._reject(req, f"worst-case footprint {worst} blocks exceeds "
                                   f"pool capacity {self.pool.usable_blocks}")
@@ -669,6 +728,22 @@ class ServeEngine:
                     a.table.release_to(self.store)
                     self.pool.release(a.reserved_left)
                     a.reserved_left = 0
+                    if a.state is not None:
+                        self.state_store.decref(a.state)
+                        a.state = None
+                    raise
+            elif self.state_store is not None:
+                # fresh stateful request: claim its slab slot now.  Exhaustion
+                # is impossible by construction (slots == max_batch, and a
+                # free batch slot implies a free slab slot) — a raise here is
+                # an injected slab_alloc fault, and quarantine finds the
+                # request still at queue[0] holding nothing
+                try:
+                    with self._blame(req.rid):
+                        a.state = self.state_store.alloc()
+                except BaseException:
+                    self.pool.release(a.reserved_left)
+                    a.reserved_left = 0
                     raise
             self.slots[slot] = a
             self._admit_seq += 1
@@ -686,6 +761,17 @@ class ServeEngine:
         partial allocation before propagating — so a quarantine can release
         ``a.table`` plus the *remaining* parked blocks without double-frees.
         """
+        if parked.state is not None:
+            # the recurrent state comes back first: one slab slot, swapped in
+            # whole.  A failure undoes its own allocation; quarantine then
+            # drops ``parked`` (including the still-parked state block).
+            dst = self.state_store.alloc()
+            try:
+                a.state = self.state_store.swap_in(parked.state, dst)
+            except BaseException:
+                self.state_store.decref(dst)
+                raise
+            parked.state = None
         while parked.blocks:
             b = parked.blocks[0]
             if b.tier == DEVICE:
@@ -768,6 +854,8 @@ class ServeEngine:
         """Grow ``a``'s table to hold ``n_tokens`` positions; False if the
         pool ran dry and preemption evicted ``a`` itself (optimistic mode —
         conservative reservations make this infallible)."""
+        if not self.has_attention:
+            return True  # attention-free: no KV table to grow
         while a.table.capacity < n_tokens:
             blk = self._alloc_device(a)
             if blk is None:
@@ -780,6 +868,8 @@ class ServeEngine:
         [start, end) — copy-on-write: sharers (prefix registry, forked
         siblings) keep the original, ``a`` gets a device-side copy.  False if
         allocating a copy preempted ``a`` itself."""
+        if not self.has_attention:
+            return True
         bs = self.block_size
         for i in range(start // bs, min((end - 1) // bs + 1,
                                         len(a.table.blocks))):
@@ -804,39 +894,71 @@ class ServeEngine:
         self.pool.release(victim.reserved_left)
         victim.reserved_left = 0
         req = victim.req
-        # only park victims that actually hold KV: parking an empty table
-        # would re-admit with a zero reservation (no backpressure) and
-        # ping-pong straight back into preemption under pool pressure
+        # attention families only park victims that actually hold KV: parking
+        # an empty table would re-admit with a zero reservation (no
+        # backpressure) and ping-pong straight back into preemption under
+        # pool pressure.  Stateful families park whenever their slab state
+        # can move — the state block IS the resumable footprint, even with an
+        # empty (or absent) KV table.
         parked: Optional[List[Block]] = None
-        if self.swap_enabled and victim.table.blocks \
-                and self.store.can_swap_out(victim.table.blocks):
-            parked = []
-            try:
-                for b in victim.table.blocks:
-                    parked.append(self.store.swap_out(b))
-            except Exception as e:  # noqa: BLE001 — downgrade, don't crash
-                # swap failed mid-park: degrade to the legacy drop.  Faults
-                # fire at swap_out entry, so the failing block is still a
-                # live device ref; release everything parked so far plus the
-                # untouched remainder and let the request restart from its
-                # prompt — token-identical by stateless-sampling replay.
-                self._swap_failures += 1
-                print(f"serve-engine: swap_out failed parking request "
-                      f"{req.rid} ({type(e).__name__}: {e}); dropping its KV "
-                      "(legacy restart)", file=sys.stderr)
-                for b in parked:
-                    self.store.decref(b)
-                for b in victim.table.blocks[len(parked):]:
-                    self.store.decref(b)
-                victim.table.blocks = []
-                parked = None
+        state_parked: Optional[Block] = None
+        holds = bool(victim.table.blocks) or (
+            self.state_store is not None and victim.state is not None)
+        can = self.swap_enabled and holds \
+            and self.store.can_swap_out(victim.table.blocks)
+        if can and self.state_store is not None:
+            can = victim.state is not None \
+                and self.state_store.can_swap_out([victim.state])
+        if can:
+            park_ok = True
+            if self.state_store is not None:
+                try:
+                    state_parked = self.state_store.swap_out(victim.state)
+                    victim.state = None
+                except Exception as e:  # noqa: BLE001 — downgrade
+                    self._swap_failures += 1
+                    print(f"serve-engine: state swap_out failed parking "
+                          f"request {req.rid} ({type(e).__name__}: {e}); "
+                          "dropping its state (legacy restart)",
+                          file=sys.stderr)
+                    park_ok = False
+            if park_ok:
+                parked = []
+                try:
+                    for b in victim.table.blocks:
+                        parked.append(self.store.swap_out(b))
+                except Exception as e:  # noqa: BLE001 — downgrade, don't crash
+                    # swap failed mid-park: degrade to the legacy drop.  Faults
+                    # fire at swap_out entry, so the failing block is still a
+                    # live device ref; release everything parked so far plus
+                    # the untouched remainder and let the request restart from
+                    # its prompt — token-identical by stateless-sampling
+                    # replay.
+                    self._swap_failures += 1
+                    print(f"serve-engine: swap_out failed parking request "
+                          f"{req.rid} ({type(e).__name__}: {e}); dropping its "
+                          "KV (legacy restart)", file=sys.stderr)
+                    for b in parked:
+                        self.store.decref(b)
+                    for b in victim.table.blocks[len(parked):]:
+                        self.store.decref(b)
+                    victim.table.blocks = []
+                    parked = None
+                    if state_parked is not None:
+                        # already on the slab's host tier; the restart
+                        # re-creates state from scratch, so just drop it
+                        self.state_store.decref(state_parked)
+                        state_parked = None
         if parked is not None:
             victim.table.blocks = []
             self._parked[req.rid] = _Parked(
                 blocks=parked, next_prefill=victim.next_prefill,
-                pos=victim.pos)
+                pos=victim.pos, state=state_parked)
         else:
             victim.table.release_to(self.store)
+            if victim.state is not None:
+                self.state_store.decref(victim.state)
+                victim.state = None
             # counters report *delivered* work: back out the discarded tokens
             # so preemption churn can't inflate the CI-gated tokens/sec
             self._prefill_tokens -= victim.next_prefill
@@ -856,6 +978,9 @@ class ServeEngine:
         a.table.release_to(self.store)
         self.pool.release(a.reserved_left)
         a.reserved_left = 0
+        if a.state is not None:
+            self.state_store.decref(a.state)
+            a.state = None
         self.finished.append(a.req)
         self.slots[self.slots.index(a)] = None
         if a.req.on_finish is not None:
@@ -867,6 +992,8 @@ class ServeEngine:
         if parked is not None:
             for b in parked.blocks:
                 self.store.decref(b)
+            if parked.state is not None:
+                self.state_store.decref(parked.state)
 
     def _finish_cancel(self, req: Request) -> None:
         self._release_adapter(req)
@@ -922,6 +1049,9 @@ class ServeEngine:
         a.table.release_to(self.store)
         self.pool.release(a.reserved_left)
         a.reserved_left = 0
+        if a.state is not None:
+            self.state_store.decref(a.state)
+            a.state = None
         self.slots[self.slots.index(a)] = None
 
     def _finish_expired(self, req: Request) -> None:
@@ -991,6 +1121,8 @@ class ServeEngine:
         if parked is not None:       # parked without a queue entry: cleanup
             for b in parked.blocks:
                 self.store.decref(b)
+            if parked.state is not None:
+                self.state_store.decref(parked.state)
             return True
         return False
 
@@ -1148,13 +1280,18 @@ class ServeEngine:
             "start": jnp.int32(start),
             "prompt_len": jnp.int32(end),
         }
+        if a.state is not None:
+            # traced slot index: one jit per cache shape, not per slot
+            batch["state_slot"] = jnp.int32(a.state.idx)
         lora = self._lora_descriptor(
             np.asarray([a.req._adapter_slot], np.int32))
         if lora is not None:
             batch["lora"] = lora
         # attend only over blocks written so far, not the full table capacity
+        # (attention-free prefill ignores the span — pin the static arg to 0
+        # so distinct chunk counts don't retrace the jit)
         m_used = min(blocks_for_tokens(end, self.block_size),
-                     self.max_blocks_per_seq)
+                     self.max_blocks_per_seq) if self.has_attention else 0
         if self.faults is not None:
             self.faults.check("step")
         self.cache, logits = self._prefill_fn(self.params, self.cache, batch,
@@ -1201,6 +1338,7 @@ class ServeEngine:
         tok = np.zeros((self.max_batch, 1), np.int32)
         tables = np.zeros((self.max_batch, m), np.int32)
         lens = np.zeros((self.max_batch,), np.int32)
+        state_slots = np.zeros((self.max_batch,), np.int32)  # 0 = null slot
         adapter_ids = np.full((self.max_batch,), -1, np.int32)
         rows = []
         for a in live:
@@ -1209,10 +1347,14 @@ class ServeEngine:
             tok[i, 0] = a.req.out[-1]
             tables[i] = a.table.padded(m)
             lens[i] = a.pos
+            if a.state is not None:
+                state_slots[i] = a.state.idx
             adapter_ids[i] = a.req._adapter_slot
         batch = {"token": jnp.asarray(tok),
                  "block_tables": jnp.asarray(tables),
                  "seq_lens": jnp.asarray(lens)}
+        if self.has_state:
+            batch["state_slots"] = jnp.asarray(state_slots)
         lora = self._lora_descriptor(adapter_ids)
         if lora is not None:
             batch["lora"] = lora
@@ -1287,6 +1429,8 @@ class ServeEngine:
         self._tenant_tokens = {}
         self._tenant_finished = {}
         self.store.reset_counters()
+        if self.state_store is not None:
+            self.state_store.reset_counters()
         self.finished = []
         self.rejected = []
         self.cancelled = []
@@ -1331,8 +1475,12 @@ class ServeEngine:
             preemptions=self._preemptions,
             shared_blocks=self.store.shared_blocks,
             cow_copies=self.store.cow_copies,
-            swap_out_blocks=self.store.swapped_out,
-            swap_in_blocks=self.store.swapped_in,
+            # the state slab is the degenerate one-block pool: its swaps are
+            # the same tier movement, folded into the same counters
+            swap_out_blocks=self.store.swapped_out
+            + (self.state_store.swapped_out if self.state_store else 0),
+            swap_in_blocks=self.store.swapped_in
+            + (self.state_store.swapped_in if self.state_store else 0),
             re_prefill_avoided=self._re_prefill_avoided,
             requests_expired=len(self.expired),
             requests_shed=len(self.shed) + self._gateway_shed,

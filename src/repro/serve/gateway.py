@@ -126,8 +126,11 @@ class GatewayModel:
         return self.async_engine.engine
 
     def card(self) -> Dict:
+        # family-agnostic: clients see which serving substrate backs the
+        # model (dense/moe attention KV, ssm state slab, hybrid mixed layout)
         return {"id": self.model_id, "object": "model",
                 "created": self.created, "owned_by": "repro",
+                "family": self.engine.cfg.family,
                 "max_model_len": self.engine.max_len,
                 "adapters": list(self.adapters)}
 

@@ -205,6 +205,11 @@ class KVStore:
     live holder's back.
     """
 
+    # chaos sites (repro.serve.faults): class attributes so derived stores
+    # (the recurrent-state slab) fault under their own REPRO_FAULT sites
+    SITE_SWAP_OUT = "swap_out"
+    SITE_SWAP_IN = "swap_in"
+
     def __init__(self, device: DeviceTier, host: Optional[HostTier] = None,
                  prefix_cache_blocks: int = 0):
         self.device = device
@@ -275,7 +280,7 @@ class KVStore:
         if block.shared:
             return block
         if self.fault_injector is not None:
-            self.fault_injector.check("swap_out")
+            self.fault_injector.check(self.SITE_SWAP_OUT)
         hidx = self.host.alloc()
         self.host.write(hidx, self.device.read(block.idx))
         self.decref(block)
@@ -289,7 +294,7 @@ class KVStore:
             return block                      # was never swapped (shared)
         assert dst.tier == DEVICE
         if self.fault_injector is not None:
-            self.fault_injector.check("swap_in")
+            self.fault_injector.check(self.SITE_SWAP_IN)
         self.device.write(dst.idx, self.host.read(block.idx))
         self.decref(block)
         self.swapped_in += 1
@@ -421,3 +426,75 @@ class BlockTable:
         for b in self.blocks:
             store.decref(b)
         self.blocks = []
+
+
+class SlabDeviceView:
+    """Device tier over the recurrent-state *slots* of a shared cache pytree.
+
+    SSM/hybrid requests carry O(1) state (conv window + scan state) instead
+    of — or, for hybrids, in addition to — per-token KV.  The state lives in
+    the same functional cache pytree the block tiers thread through the
+    jitted model fns (one holder: the base ``DeviceTier``); this view indexes
+    its *slot* axis instead of the block axis.  Slot 0 is the null slot
+    (mirrors ``NULL_BLOCK``): padded decode rows scatter there, it is never
+    allocated.  Data-plane callbacks come from the model family
+    (``ModelFns.state_slot_*``) so the view never assumes a leaf layout —
+    for hybrids they touch only the ``ssm`` leaves, the block callbacks only
+    the ``k``/``v`` leaves, of one shared pytree.
+    """
+
+    name = DEVICE
+
+    def __init__(self, base: DeviceTier, pool: BlockPool,
+                 copy_slot: Callable, read_slot: Callable,
+                 write_slot: Callable):
+        self.base = base
+        self.pool = pool
+        self._copy = copy_slot
+        self._read = read_slot
+        self._write = write_slot
+
+    @property
+    def cache(self):
+        return self.base.cache
+
+    @property
+    def block_size(self) -> int:
+        return 1                      # one slot holds one request's state
+
+    def alloc(self, reserved: bool = False) -> int:
+        return self.pool.alloc(reserved=reserved)
+
+    def free(self, idx: int) -> None:
+        self.pool.free([idx])
+
+    def copy(self, src: int, dst: int) -> None:
+        self.base.cache = self.base._pin(self._copy(self.base.cache, src, dst))
+
+    def read(self, idx: int):
+        return self._read(self.base.cache, idx)
+
+    def write(self, idx: int, data) -> None:
+        self.base.cache = self.base._pin(self._write(self.base.cache, idx,
+                                                     data))
+
+
+class StateSlab(KVStore):
+    """Recurrent-state tier: the degenerate one-block case of the block pool.
+
+    A request's scan state is fixed-size, so its "table" is a single
+    refcounted ``Block`` whose ``idx`` is a slot in the state slab.  All the
+    KVStore machinery carries over unchanged — refcounting, ``fork`` +
+    ``cow_into`` (state CoW), ``swap_out``/``swap_in`` to a host tier (parked
+    state survives preemption exactly like parked KV) — only the chaos sites
+    are renamed so ``REPRO_FAULT`` can target slab traffic independently of
+    block traffic.  The prefix registry is inherited but unused (a state
+    snapshot encodes the *whole* prefix, not a block-aligned piece of it).
+    """
+
+    SITE_SWAP_OUT = "slab_swap_out"
+    SITE_SWAP_IN = "slab_swap_in"
+
+    def __init__(self, device: SlabDeviceView, host: Optional[HostTier] = None):
+        super().__init__(device, host, prefix_cache_blocks=0)
+        device.pool.fault_site = "slab_alloc"

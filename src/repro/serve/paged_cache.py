@@ -76,8 +76,11 @@ class BlockPool:
         self.peak_used = 0
         # optional chaos hook (repro.serve.faults.FaultInjector): checked at
         # alloc entry, BEFORE any ledger mutation, so an injected allocator
-        # failure can never corrupt the free list it is testing
+        # failure can never corrupt the free list it is testing.  The site
+        # name is an attribute so derived pools (the state slab's slot pool)
+        # fault under their own REPRO_FAULT site.
         self.fault_injector = None
+        self.fault_site = "alloc"
 
     # -- introspection ----------------------------------------------------
     @property
@@ -127,7 +130,7 @@ class BlockPool:
         existing reservation (the caller must have reserved it); otherwise the
         block must be available over and above all reservations."""
         if self.fault_injector is not None:
-            self.fault_injector.check("alloc")
+            self.fault_injector.check(self.fault_site)
         if reserved:
             if self._reserved < 1:
                 raise ValueError("alloc(reserved=True) without a reservation")

@@ -1,0 +1,50 @@
+"""Smoke: the hillclimb harness drives ``repro.pipeline.compile`` in-process
+and yields well-formed measurements for every cell + experiment — so ROADMAP
+item 5 (measured-cost autotuning) starts from a harness that actually runs."""
+from benchmarks import hillclimb
+
+
+def test_quick_sweep_yields_wellformed_cells():
+    results = hillclimb.main(quick=True)
+    assert len(results) == len(hillclimb.CELLS) + len(hillclimb.EXPERIMENTS)
+    for r in results:
+        assert r["status"] == "ok", r.get("error")
+        assert r["modeled_cost_s"] > 0
+        assert r["modeled_speedup"] >= 1.0 - 1e-9
+        assert set(r["pass_ms"]) >= {"rewrite", "extract", "buffer",
+                                     "codegen"}
+        assert r["buffer_peak"] <= r["buffer_naive"]
+        assert fmtd(r)
+
+
+def fmtd(r):
+    line = hillclimb.fmt(r)
+    assert "cost" in line and "compile" in line
+    return line
+
+
+def test_mesh_cell_actually_distributes():
+    r = hillclimb.run_cell("mlp_tp16", quick=True)
+    assert r["status"] == "ok"
+    assert r.get("distribution_cost_s", 0) > 0
+    assert "distribute" in r["pass_ms"]
+
+
+def test_exact_extraction_never_worse_than_greedy():
+    base = hillclimb.run_cell("attention", quick=True)
+    exact = hillclimb.run_cell("attention", "t", dict(
+        extraction="branch-and-bound"), quick=True)
+    assert exact["modeled_cost_s"] <= base["modeled_cost_s"] + 1e-12
+
+
+def test_quick_mode_leaves_no_cache_files(tmp_path, monkeypatch):
+    monkeypatch.setattr(hillclimb, "RESULTS", tmp_path / "hillclimb")
+    hillclimb.run_cell("matmul", quick=True)
+    assert not (tmp_path / "hillclimb").exists()
+
+
+def test_error_cells_are_reported_not_raised(monkeypatch):
+    monkeypatch.setitem(hillclimb.CELLS, "boom",
+                        (lambda quick: None, lambda quick: None))
+    r = hillclimb.run_cell("boom", quick=True)
+    assert r["status"] == "error" and "Traceback" in r["error"]

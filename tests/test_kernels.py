@@ -123,6 +123,31 @@ def test_ssm_scan_sweep(t, d, n):
                                rtol=1e-4, atol=1e-4)
 
 
+@pytest.mark.parametrize("t,chunk", [(32, 8), (24, 8), (19, 8), (16, 16), (7, 8)])
+def test_ssm_scan_chunked_matches_oracle(t, chunk):
+    """The chunked-prefill entry (state carried across kernel launches,
+    identity-padded ragged tail) matches its sequential oracle AND the
+    unchunked kernel bitwise on the carried state."""
+    b, d, n = 2, 16, 4
+    a = jnp.asarray(RNG.uniform(0.6, 0.99, size=(b, t, d, n)), jnp.float32)
+    bb = _arr((b, t, d, n), jnp.float32, 0.1)
+    c = _arr((b, t, n), jnp.float32)
+    h0 = _arr((b, d, n), jnp.float32, 0.1)
+    y, hl = ops.ssm_scan_chunked(a, bb, c, h0, chunk=chunk, block_d=16)
+    y_ref, hl_ref = jax.vmap(
+        lambda aa, bbb, cc, hh: ref.ssm_scan_chunked_ref(aa, bbb, cc, hh, chunk)
+    )(a, bb, c, h0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(hl), np.asarray(hl_ref),
+                               rtol=1e-4, atol=1e-4)
+    # identity pads are exact: chunked h_last == unchunked h_last bitwise
+    y_full, h_full = ops.ssm_scan(a, bb, c, h0, block_d=16)
+    assert np.array_equal(np.asarray(hl), np.asarray(h_full))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_full),
+                               rtol=1e-5, atol=1e-5)
+
+
 def test_ssm_scan_carries_state():
     """Chunked invocation with carried h == one long scan."""
     b, t, d, n = 1, 32, 16, 4
